@@ -1,0 +1,17 @@
+//! Bench: the appendix experiment suite — Figure 4 (path length),
+//! Figure 5 (tolerance), Figure 6 (Gap-Safe augmentation), Figure 8
+//! (safe rules), Figure 9 (γ), Figure 10 (ablation), Figure 11
+//! (Poisson), Figures 12–14 (runtime breakdown).
+
+use hessian_screening::experiments::{self, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig {
+        reps: 2,
+        ..Default::default()
+    };
+    for exp in ["fig4", "fig5", "fig6", "fig8", "fig9", "fig10", "fig11", "fig12"] {
+        eprintln!("=== {exp} ===");
+        experiments::run_experiment(exp, &cfg).expect(exp);
+    }
+}

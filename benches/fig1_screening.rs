@@ -1,0 +1,14 @@
+//! Bench: Figure 1 / Figure 7 / Table 3 — screening effectiveness.
+//! `cargo bench --bench fig1_screening` (quick preset; pass --full via
+//! `hx exp fig1 --full` for paper-scale).
+
+use hessian_screening::experiments::{self, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig {
+        reps: 2,
+        ..Default::default()
+    };
+    experiments::run_experiment("fig1", &cfg).expect("fig1");
+    experiments::run_experiment("tab3", &cfg).expect("tab3");
+}

@@ -1,0 +1,13 @@
+//! Bench: Figure 3 — full-path timing on the simulated scenarios
+//! (the paper's headline benchmark), plus Figure 2 warm starts.
+
+use hessian_screening::experiments::{self, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig {
+        reps: 3,
+        ..Default::default()
+    };
+    experiments::run_experiment("fig3", &cfg).expect("fig3");
+    experiments::run_experiment("fig2", &cfg).expect("fig2");
+}

@@ -1,0 +1,110 @@
+//! Bench: micro-kernels on the L3 hot path — dot, axpy, the full
+//! correlation sweep (native and through the PJRT artifact when
+//! available), a coordinate-descent epoch, and the Algorithm-1 sweep
+//! update. This is the §Perf instrumentation (EXPERIMENTS.md).
+
+use hessian_screening::data::{DesignMatrix, SyntheticSpec};
+use hessian_screening::hessian::HessianTracker;
+use hessian_screening::linalg::{blas, Design};
+use hessian_screening::metrics::Summary;
+use hessian_screening::rng::Xoshiro256pp;
+use hessian_screening::runtime::RuntimeEngine;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, reps: usize, mut f: F) -> Summary {
+    // warmup
+    f();
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let s = Summary::of(&times);
+    println!(
+        "{name:<42} {:>12.3} µs  ± {:>8.3}",
+        s.mean * 1e6,
+        s.ci_half * 1e6
+    );
+    s
+}
+
+fn main() {
+    let n = 200;
+    let p = 20_000;
+    let data = SyntheticSpec::new(n, p, 20).rho(0.4).seed(1).generate();
+    let dense = match &data.design {
+        DesignMatrix::Dense(m) => m.clone(),
+        _ => unreachable!(),
+    };
+    let y = data.response.clone();
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let mut v = vec![0.0; n];
+    rng.fill_gaussian(&mut v);
+
+    println!("micro-kernels (n={n}, p={p})");
+    let col = dense.col(17).to_vec();
+    let mut acc = 0.0;
+    bench("blas::dot (n=200)", 2_000, || {
+        acc += blas::dot(&col, std::hint::black_box(&v));
+    });
+    let mut out = vec![0.0; n];
+    bench("blas::axpy (n=200)", 2_000, || {
+        blas::axpy(1.0001, &col, &mut out);
+        std::hint::black_box(&out);
+    });
+
+    let mut c = vec![0.0; p];
+    let sweep = bench("native full sweep X^T r (200x20000)", 50, || {
+        for j in 0..p {
+            c[j] = dense.col_dot(j, &v);
+        }
+        std::hint::black_box(&c);
+    });
+    // FLOP accounting: 2·n·p flops per sweep.
+    let gflops = 2.0 * n as f64 * p as f64 / sweep.mean / 1e9;
+    println!("  -> native sweep throughput: {gflops:.2} GFLOP/s");
+
+    if let Ok(engine) = RuntimeEngine::load_default() {
+        let reg = engine.register_design(dense.data(), n, p).unwrap();
+        bench("PJRT xt_r artifact (200x20000)", 20, || {
+            let _ = engine.correlation(&reg, &v).unwrap();
+        });
+    } else {
+        println!("(PJRT artifacts not built; run `make artifacts`)");
+    }
+
+    // CD epoch over a 100-predictor working set.
+    let working: Vec<usize> = (0..100).collect();
+    let mut beta = vec![0.0; p];
+    let mut resid = y.clone();
+    let norms: Vec<f64> = working.iter().map(|&j| dense.col_sq_norm(j)).collect();
+    bench("CD epoch (|W|=100, n=200)", 500, || {
+        for (k, &j) in working.iter().enumerate() {
+            let g = dense.col_dot(j, &resid);
+            let u = g + norms[k] * beta[j];
+            let new = blas::soft_threshold(u, 50.0) / norms[k];
+            if new != beta[j] {
+                dense.col_axpy(j, beta[j] - new, &mut resid);
+                beta[j] = new;
+            }
+        }
+        std::hint::black_box(&resid);
+    });
+
+    // Algorithm-1 sweep update: enter 10 predictors into a 90-strong set.
+    let base: Vec<usize> = (0..90).collect();
+    let next: Vec<usize> = (0..100).collect();
+    bench("Alg-1 sweep update (+10 into 90)", 50, || {
+        let mut t = HessianTracker::new(n as f64 * 1e-4);
+        t.rebuild(&dense, &base, None);
+        t.update(&dense, &next, None);
+    });
+    let mut tr = HessianTracker::new(n as f64 * 1e-4);
+    tr.rebuild(&dense, &base, None);
+    bench("Alg-1 rebuild from scratch (|A|=100)", 50, || {
+        let mut t = HessianTracker::new(n as f64 * 1e-4);
+        t.rebuild(&dense, &next, None);
+    });
+    std::hint::black_box(acc);
+}

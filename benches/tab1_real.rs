@@ -1,0 +1,13 @@
+//! Bench: Table 1 / Table 4 — full-path time on the twelve real-data
+//! analogues (quick preset shrinks the giant text corpora; see
+//! DESIGN.md §3 for the substitution policy).
+
+use hessian_screening::experiments::{self, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig {
+        reps: 2,
+        ..Default::default()
+    };
+    experiments::run_experiment("tab1", &cfg).expect("tab1");
+}

@@ -1,0 +1,135 @@
+"""AOT compiler: lower the Layer-2 graphs to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+text via ``HloModuleProto::from_text_file`` → PJRT compile → execute.
+
+HLO **text** — not ``lowered.compile().serialize()`` and not the raw
+StableHLO — is the interchange format: jax ≥ 0.5 emits HloModuleProtos
+with 64-bit instruction ids that the image's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are written as ``artifacts/<op>_<shape>.hlo.txt`` plus a
+``manifest.tsv`` (op, shape key, dtype, file) that the rust registry
+parses. Shapes are fixed at compile time (XLA is shape-specialized);
+the registry falls back to the native rust path for other shapes.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shapes the benchmark suite and examples hit on their hot paths.
+# (n, p) pairs for the correlation/KKT sweeps:
+SWEEP_SHAPES = [
+    (200, 2_000),
+    (200, 20_000),
+    (400, 40_000),
+]
+# (e, d, n) triples for the Hessian augmentation panels:
+PANEL_SHAPES = [
+    (64, 16, 200),
+    (128, 32, 400),
+]
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side can uniformly unwrap with to_tuple*)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts(out_dir: str) -> list:
+    """Lower every (op, shape) pair; returns manifest rows."""
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+
+    def emit(name: str, key: str, lowered):
+        fname = f"{name}_{key}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        rows.append((name, key, "f32", fname))
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    for n, p in SWEEP_SHAPES:
+        key = f"{n}x{p}"
+        # CPU-backend tile targets: collapse the Pallas grid (tp = p,
+        # tn = n) so interpret-mode lowering emits one fused gemv — a
+        # 280x win over the TPU VMEM tiles on the CPU PJRT plugin
+        # (EXPERIMENTS.md §Perf L1). On a real TPU target these would be
+        # the (256, 256) VMEM tiles documented in the kernel.
+        tiles = dict(tp=p, tn=n)
+        emit(
+            "xt_r",
+            key,
+            jax.jit(lambda a, b: model.correlation(a, b, **tiles)).lower(
+                spec((p, n)), spec((n, 1))
+            ),
+        )
+        emit(
+            "lasso_kkt",
+            key,
+            jax.jit(lambda a, b, c, d: model.lasso_kkt(a, b, c, d, **tiles)).lower(
+                spec((p, n)), spec((n, 1)), spec((n, 1)), spec(())
+            ),
+        )
+        emit(
+            "logistic_kkt",
+            key,
+            jax.jit(lambda a, b, c, d: model.logistic_kkt(a, b, c, d, **tiles)).lower(
+                spec((p, n)), spec((n, 1)), spec((n, 1)), spec(())
+            ),
+        )
+    for e, d, n in PANEL_SHAPES:
+        key = f"{e}x{d}x{n}"
+        emit(
+            "gram_block",
+            key,
+            jax.jit(model.hessian_panel).lower(
+                spec((e, n)), spec((n, 1)), spec((d, n))
+            ),
+        )
+
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        for r in rows:
+            f.write("\t".join(r) + "\n")
+    print(f"  wrote manifest.tsv ({len(rows)} artifacts)")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--out", default=None, help="compat: also copy the first sweep module here"
+    )
+    args = ap.parse_args()
+    rows = build_artifacts(args.out_dir)
+    if args.out:
+        src = os.path.join(args.out_dir, rows[0][3])
+        with open(src) as f, open(args.out, "w") as g:
+            g.write(f.read())
+    print(f"AOT done: {len(rows)} artifacts in {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

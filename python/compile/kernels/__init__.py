@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the Hessian-screening stack.
+
+* ``xt_r`` — the correlation sweep c = Xᵀr (screening/KKT hot spot);
+* ``gram_block`` — weighted Gram panels for the Algorithm-1 sweep
+  updates;
+* ``ref`` — pure-jnp oracles the kernels are tested against.
+"""
+
+from .gram_block import gram_block
+from .xt_r import xt_r
+
+__all__ = ["gram_block", "xt_r"]

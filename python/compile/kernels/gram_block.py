@@ -1,0 +1,75 @@
+"""Layer-1 Pallas kernel: weighted Gram panel G = X_Eᵀ D(w) X_D.
+
+This is the augmentation-step workload of the paper's Algorithm 1: when
+predictors D enter the active set, the sweep update needs the panels
+X_EᵀX_D and X_DᵀX_D (weighted by D(w) for GLM losses) — the O(n·|D|·|E|)
+term that §3.3.1 identifies as the dominant cost of maintaining the
+Hessian. The kernel streams the sample dimension in TN-wide slices and
+accumulates the (e, d) panel in VMEM; e and d are the active-set block
+sizes (tens to a few hundred), so the output block always fits.
+
+VMEM per grid step: TN·(e + d + 1)·4 bytes + e·d·4 for the accumulator —
+with e = d = 128, TN = 512 that is ~585 KiB.
+
+Lowered with ``interpret=True`` (see xt_r.py for why).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(xe_ref, w_ref, xd_ref, o_ref):
+    i_n = pl.program_id(0)
+
+    @pl.when(i_n == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (e, TN) @ (TN, d) with the weight slice fused into the right panel.
+    wslice = w_ref[...]  # (TN, 1)
+    o_ref[...] += jnp.dot(
+        xe_ref[...], wslice * xd_ref[...].T, preferred_element_type=o_ref.dtype
+    )
+
+
+def _pick_tile(dim: int, target: int) -> int:
+    t = min(dim, target)
+    while dim % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("tn",))
+def gram_block(
+    xe_t: jnp.ndarray, w: jnp.ndarray, xd_t: jnp.ndarray, tn: int = 512
+) -> jnp.ndarray:
+    """G = X_Eᵀ D(w) X_D.
+
+    ``xe_t``: (e, n); ``w``: (n, 1); ``xd_t``: (d, n). Returns (e, d).
+    """
+    e, n = xe_t.shape
+    d, n2 = xd_t.shape
+    assert n == n2, f"sample dims differ: {n} vs {n2}"
+    assert w.shape == (n, 1), f"w must be (n,1), got {w.shape}"
+    tn = _pick_tile(n, tn)
+    grid = (n // tn,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((e, tn), lambda i_n: (0, i_n)),
+            pl.BlockSpec((tn, 1), lambda i_n: (i_n, 0)),
+            pl.BlockSpec((d, tn), lambda i_n: (0, i_n)),
+        ],
+        out_specs=pl.BlockSpec((e, d), lambda i_n: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, d), xe_t.dtype),
+        interpret=True,
+    )(xe_t, w, xd_t)
+
+
+def vmem_bytes(e: int, d: int, tn: int, dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM working-set estimate (module docstring)."""
+    return dtype_bytes * (tn * (e + d + 1) + e * d)

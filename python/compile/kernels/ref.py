@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer 1 correctness).
+
+Every kernel in this package has an entry here; pytest (and the
+hypothesis sweeps in ``python/tests``) assert ``assert_allclose``
+between the Pallas output and these references for a grid of shapes
+and dtypes. These functions are also what the kernels *mean*: the
+kernels are pure performance artifacts.
+"""
+
+import jax.numpy as jnp
+
+
+def xt_r_ref(xt: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """Correlation sweep c = Xᵀr.
+
+    ``xt`` is X *transposed*, shape (p, n) — the rust coordinator stores
+    X column-major (n, p), whose raw buffer is exactly a row-major
+    (p, n) array, so the transposed convention makes the FFI zero-copy.
+    ``r`` has shape (n, 1); the result has shape (p, 1).
+    """
+    return xt @ r
+
+
+def gram_block_ref(xe_t: jnp.ndarray, w: jnp.ndarray, xd_t: jnp.ndarray) -> jnp.ndarray:
+    """Weighted Gram panel G = X_Eᵀ D(w) X_D — the augmentation-step
+    workload of the paper's Algorithm 1.
+
+    ``xe_t``: (e, n); ``w``: (n, 1) Hessian weights; ``xd_t``: (d, n).
+    Result: (e, d).
+    """
+    return xe_t @ (w * xd_t.T)
+
+
+def lasso_kkt_ref(xt: jnp.ndarray, y: jnp.ndarray, eta: jnp.ndarray, lam):
+    """Fused KKT sweep for the Gaussian lasso: residual, correlation and
+    the per-predictor violation mask in one graph (the paper's §3.3.4
+    "KKT checks" — the per-step O(np) hot spot).
+
+    Returns (c, resid, viol) with shapes (p,1), (n,1), (p,1).
+    """
+    resid = y - eta
+    c = xt @ resid
+    viol = (jnp.abs(c) > lam).astype(xt.dtype)
+    return c, resid, viol

@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: the correlation sweep c = Xᵀr.
+
+This is the hot spot of every screening method in the paper: the KKT
+checks, the strong rule, Gap-Safe screening and the Hessian rule's
+restricted inner products are all dominated by Xᵀ·(residual) over the
+candidate set (§3.3.4: the per-step O(np) cost). The kernel computes it
+as a tiled matvec over the *transposed* design (p, n) — the layout that
+matches the rust coordinator's column-major storage byte-for-byte.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks panels of
+`TP` predictors (rows of Xᵀ); within a panel, a second grid axis walks
+`TN`-wide slices of the sample dimension, accumulating partial products
+in the output block, which Pallas keeps resident in VMEM across the
+inner axis. Per grid step the VMEM working set is
+
+    TP·TN·4  (X panel)  +  TN·4 (r slice)  +  TP·4 (accumulator)
+
+— 256 KiB for the default TP=256, TN=256 in f32, far under the ~16 MiB
+VMEM budget, leaving room for double-buffering the HBM→VMEM streams.
+The panel product is a (TP, TN) × (TN, 1) dot, which the MXU executes
+natively with f32 accumulation.
+
+The kernel is lowered with ``interpret=True`` everywhere in this repo:
+the CPU PJRT plugin cannot execute Mosaic custom-calls, so interpret
+mode is both the correctness path and what the AOT artifacts embed
+(pallas interpret lowers to plain HLO). Structure, not interpreted
+wall-clock, is the optimization target — see EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xt_r_kernel(xt_ref, r_ref, o_ref):
+    """One grid step: o[ip] (+)= XT[ip, in] @ r[in]."""
+    i_n = pl.program_id(1)
+
+    @pl.when(i_n == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (TP, TN) @ (TN, 1) -> (TP, 1); f32 accumulate on the MXU.
+    o_ref[...] += jnp.dot(
+        xt_ref[...], r_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pick_tile(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (grids must tile
+    evenly; callers pad when they want power-of-two tiles)."""
+    t = min(dim, target)
+    while dim % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("tp", "tn"))
+def xt_r(xt: jnp.ndarray, r: jnp.ndarray, tp: int = 256, tn: int = 256) -> jnp.ndarray:
+    """c = Xᵀ r via the Pallas kernel.
+
+    ``xt``: (p, n) transposed design; ``r``: (n, 1). Returns (p, 1).
+    ``tp``/``tn`` are tile-size *targets*; actual tiles are the largest
+    divisors of p and n not exceeding them.
+    """
+    p, n = xt.shape
+    assert r.shape == (n, 1), f"r must be (n,1), got {r.shape}"
+    tp = _pick_tile(p, tp)
+    tn = _pick_tile(n, tn)
+    grid = (p // tp, n // tn)
+    return pl.pallas_call(
+        _xt_r_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tp, tn), lambda ip, i_n: (ip, i_n)),
+            pl.BlockSpec((tn, 1), lambda ip, i_n: (i_n, 0)),
+        ],
+        out_specs=pl.BlockSpec((tp, 1), lambda ip, i_n: (ip, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, 1), xt.dtype),
+        interpret=True,
+    )(xt, r)
+
+
+def vmem_bytes(tp: int, tn: int, dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM working set estimate (see module docstring);
+    used by the L1 perf notes in EXPERIMENTS.md."""
+    return dtype_bytes * (tp * tn + tn + tp)

@@ -1,0 +1,73 @@
+"""Layer 2: the JAX compute graphs AOT-compiled for the rust runtime.
+
+The paper's contribution is a *pathwise coordination* algorithm; its
+numeric hot spots (per §3.3.1/§3.3.4) are the correlation/KKT sweep and
+the Hessian Gram panels. These are expressed here as jitted JAX
+functions that call the Layer-1 Pallas kernels, so that a single
+``jax.jit(...).lower()`` produces one fused HLO module per operation.
+``aot.py`` lowers each at the fixed shapes the benchmark suite uses;
+the rust runtime (rust/src/runtime/) loads the HLO text via PJRT and
+calls it from the solve path. Python never runs at solve time.
+
+Shape conventions (zero-copy with the rust side): the design matrix
+appears as Xᵀ of shape (p, n) because rust stores X column-major
+(n, p) and the raw buffer of a column-major (n, p) matrix *is* a
+row-major (p, n) array. Vectors are (·, 1) columns.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import gram_block, xt_r
+
+
+def correlation(xt: jnp.ndarray, r: jnp.ndarray, tp: int = 256, tn: int = 256) -> tuple:
+    """c = Xᵀr — the screening/KKT sweep (Layer-1 kernel).
+
+    ``tp``/``tn`` are the Pallas tile targets. Defaults are the TPU VMEM
+    tiles documented in the kernel; the AOT path overrides them per
+    backend (CPU interpret mode wants a collapsed grid — see
+    EXPERIMENTS.md §Perf L1).
+    """
+    return (xt_r(xt, r, tp=tp, tn=tn),)
+
+
+def lasso_kkt(
+    xt: jnp.ndarray,
+    y: jnp.ndarray,
+    eta: jnp.ndarray,
+    lam: jnp.ndarray,
+    tp: int = 256,
+    tn: int = 256,
+) -> tuple:
+    """Fused Gaussian-lasso KKT sweep: residual → correlation →
+    violation mask in one module, so XLA fuses the elementwise work
+    into the matvec stream (§3.3.4's "KKT checks" at marginal cost).
+
+    ``y``/``eta``: (n, 1); ``lam``: scalar (0-d). Returns
+    (c (p,1), resid (n,1), viol (p,1)).
+    """
+    resid = y - eta
+    c = xt_r(xt, resid, tp=tp, tn=tn)
+    viol = (jnp.abs(c) > lam).astype(xt.dtype)
+    return c, resid, viol
+
+
+def hessian_panel(xe_t: jnp.ndarray, w: jnp.ndarray, xd_t: jnp.ndarray) -> tuple:
+    """G = X_Eᵀ D(w) X_D — the Algorithm-1 augmentation panel."""
+    return (gram_block(xe_t, w, xd_t),)
+
+
+def logistic_kkt(
+    xt: jnp.ndarray,
+    y: jnp.ndarray,
+    eta: jnp.ndarray,
+    lam: jnp.ndarray,
+    tp: int = 256,
+    tn: int = 256,
+) -> tuple:
+    """Fused logistic KKT sweep: μ(η) → residual → correlation → mask."""
+    mu = 1.0 / (1.0 + jnp.exp(-eta))
+    resid = y - mu
+    c = xt_r(xt, resid, tp=tp, tn=tn)
+    viol = (jnp.abs(c) > lam).astype(xt.dtype)
+    return c, resid, viol

@@ -1,0 +1,187 @@
+"""Layer-1 correctness: Pallas kernels vs. the pure-jnp oracles.
+
+This is the core correctness signal for the compiled hot path: the rust
+runtime executes exactly what these kernels lower to, so kernel == ref
+(to float tolerance) across shapes and dtypes is what licenses the AOT
+substitution. Hypothesis drives the shape/dtype sweep.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram_block, xt_r
+from compile.kernels.ref import gram_block_ref, lasso_kkt_ref, xt_r_ref
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------- xt_r
+
+
+@pytest.mark.parametrize(
+    "p,n,tp,tn",
+    [
+        (8, 8, 256, 256),
+        (64, 32, 16, 16),
+        (100, 40, 256, 256),  # non-power-of-two dims
+        (256, 128, 32, 64),
+        (17, 13, 4, 4),  # awkward primes → tile fallback
+        (1, 5, 256, 256),  # degenerate single predictor
+    ],
+)
+def test_xt_r_matches_ref_shapes(p, n, tp, tn):
+    rng = np.random.default_rng(p * 1000 + n)
+    xt = rand(rng, p, n)
+    r = rand(rng, n, 1)
+    got = xt_r(xt, r, tp=tp, tn=tn)
+    want = xt_r_ref(xt, r)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(min_value=1, max_value=96),
+    n=st.integers(min_value=1, max_value=96),
+    tp=st.sampled_from([4, 16, 256]),
+    tn=st.sampled_from([4, 16, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_xt_r_hypothesis_sweep(p, n, tp, tn, seed):
+    rng = np.random.default_rng(seed)
+    xt = rand(rng, p, n)
+    r = rand(rng, n, 1)
+    got = xt_r(xt, r, tp=tp, tn=tn)
+    want = xt_r_ref(xt, r)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_xt_r_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    xt = rand(rng, 32, 24, dtype=dtype)
+    r = rand(rng, 24, 1, dtype=dtype)
+    got = xt_r(xt, r)
+    assert got.dtype == xt.dtype
+    np.testing.assert_allclose(got, xt_r_ref(xt, r), rtol=1e-5)
+
+
+def test_xt_r_zero_residual_gives_zero():
+    rng = np.random.default_rng(3)
+    xt = rand(rng, 16, 8)
+    r = jnp.zeros((8, 1), dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(xt_r(xt, r)), np.zeros((16, 1)))
+
+
+def test_xt_r_accumulation_across_n_tiles():
+    # Force many n-tiles so the @pl.when(i==0) init + accumulate path is
+    # exercised; values chosen so partial sums cancel.
+    p, n = 4, 64
+    xt = jnp.ones((p, n), dtype=jnp.float32)
+    r = jnp.asarray(
+        np.concatenate([np.ones(32), -np.ones(32)])[:, None], dtype=jnp.float32
+    )
+    got = xt_r(xt, r, tp=4, tn=8)
+    np.testing.assert_allclose(got, np.zeros((p, 1)), atol=1e-6)
+
+
+# ---------------------------------------------------------- gram_block
+
+
+@pytest.mark.parametrize(
+    "e,d,n,tn",
+    [
+        (4, 4, 16, 512),
+        (8, 3, 100, 16),  # uneven n vs tile target
+        (1, 1, 7, 4),
+        (32, 16, 256, 64),
+    ],
+)
+def test_gram_block_matches_ref(e, d, n, tn):
+    rng = np.random.default_rng(e * 100 + d * 10 + n)
+    xe = rand(rng, e, n)
+    xd = rand(rng, d, n)
+    w = jnp.asarray(rng.uniform(0.05, 1.0, (n, 1)), dtype=np.float32)
+    got = gram_block(xe, w, xd, tn=tn)
+    want = gram_block_ref(xe, w, xd)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    e=st.integers(min_value=1, max_value=24),
+    d=st.integers(min_value=1, max_value=24),
+    n=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gram_block_hypothesis_sweep(e, d, n, seed):
+    rng = np.random.default_rng(seed)
+    xe = rand(rng, e, n)
+    xd = rand(rng, d, n)
+    w = jnp.asarray(rng.uniform(0.0, 1.0, (n, 1)), dtype=np.float32)
+    got = gram_block(xe, w, xd, tn=16)
+    want = gram_block_ref(xe, w, xd)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_gram_block_unit_weights_is_plain_gram():
+    rng = np.random.default_rng(11)
+    xe = rand(rng, 6, 40)
+    w = jnp.ones((40, 1), dtype=jnp.float32)
+    got = gram_block(xe, w, xe)
+    np.testing.assert_allclose(got, xe @ xe.T, rtol=1e-5, atol=1e-5)
+    # symmetry of the self-panel
+    np.testing.assert_allclose(got, got.T, rtol=1e-5, atol=1e-6)
+
+
+def test_gram_block_upper_bound_weights():
+    # Logistic upper bound w = 1/4 (§3.3.3): panel = Gram/4.
+    rng = np.random.default_rng(13)
+    xe = rand(rng, 5, 32)
+    xd = rand(rng, 4, 32)
+    w = jnp.full((32, 1), 0.25, dtype=jnp.float32)
+    got = gram_block(xe, w, xd)
+    np.testing.assert_allclose(got, (xe @ xd.T) / 4.0, rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------------- fused
+
+
+def test_lasso_kkt_ref_consistency():
+    # The fused L2 graph must agree with its pieces.
+    from compile import model
+
+    rng = np.random.default_rng(5)
+    xt = rand(rng, 20, 12)
+    y = rand(rng, 12, 1)
+    eta = rand(rng, 12, 1)
+    lam = jnp.float32(0.5)
+    c, resid, viol = model.lasso_kkt(xt, y, eta, lam)
+    c2, r2, v2 = lasso_kkt_ref(xt, y, eta, lam)
+    np.testing.assert_allclose(c, c2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(resid, r2, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(viol), np.asarray(v2))
+
+
+def test_logistic_kkt_residual_in_range():
+    from compile import model
+
+    rng = np.random.default_rng(6)
+    xt = rand(rng, 10, 30)
+    y = jnp.asarray(rng.integers(0, 2, (30, 1)), dtype=np.float32)
+    eta = rand(rng, 30, 1)
+    _, resid, _ = model.logistic_kkt(xt, y, eta, jnp.float32(0.1))
+    assert np.all(np.abs(np.asarray(resid)) <= 1.0)
+
+
+def test_vmem_estimates_under_budget():
+    # The DESIGN.md §Perf claim: default tiles fit comfortably in VMEM.
+    from compile.kernels.gram_block import vmem_bytes as gram_vmem
+    from compile.kernels.xt_r import vmem_bytes as xtr_vmem
+
+    assert xtr_vmem(256, 256) < 4 * 2**20
+    assert gram_vmem(128, 128, 512) < 4 * 2**20

@@ -1,0 +1,100 @@
+"""Layer-2 graph tests: the fused model functions and their
+shape/layout contracts with the rust runtime."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def test_correlation_layout_contract():
+    # The rust side passes col-major (n,p) X as row-major (p,n) XT:
+    # verify the two views give identical correlations.
+    rng = np.random.default_rng(0)
+    n, p = 9, 14
+    x = rng.standard_normal((n, p)).astype(np.float32)
+    # raw col-major buffer of X, reinterpreted as row-major (p, n)
+    xt_from_fortran = x.ravel(order="F").reshape(p, n)
+    r = rng.standard_normal((n, 1)).astype(np.float32)
+    (c,) = model.correlation(jnp.asarray(x.T), jnp.asarray(r))
+    (c2,) = model.correlation(jnp.asarray(xt_from_fortran), jnp.asarray(r))
+    np.testing.assert_allclose(c, x.T @ r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c, c2, rtol=1e-6)
+
+
+def test_lasso_kkt_violation_mask_thresholding():
+    rng = np.random.default_rng(1)
+    xt = rand(rng, 8, 6)
+    y = rand(rng, 6, 1)
+    eta = jnp.zeros((6, 1), dtype=jnp.float32)
+    c, resid, viol = model.lasso_kkt(xt, y, eta, jnp.float32(0.0))
+    # λ = 0: every non-zero correlation is a violation.
+    np.testing.assert_array_equal(
+        np.asarray(viol) > 0, np.abs(np.asarray(c)) > 0
+    )
+    # huge λ: no violations.
+    _, _, none = model.lasso_kkt(xt, y, eta, jnp.float32(1e9))
+    assert np.asarray(none).sum() == 0
+    np.testing.assert_allclose(resid, y, rtol=1e-6)
+
+
+def test_logistic_kkt_null_model_correlation():
+    # At η = 0, resid = y − 1/2 — the paper's logistic λ_max sweep.
+    rng = np.random.default_rng(2)
+    xt = rand(rng, 10, 20)
+    y = jnp.asarray(rng.integers(0, 2, (20, 1)), dtype=jnp.float32)
+    eta = jnp.zeros((20, 1), dtype=jnp.float32)
+    c, resid, _ = model.logistic_kkt(xt, y, eta, jnp.float32(0.1))
+    np.testing.assert_allclose(resid, np.asarray(y) - 0.5, rtol=1e-6)
+    np.testing.assert_allclose(c, xt @ (y - 0.5), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    e=st.integers(min_value=1, max_value=12),
+    d=st.integers(min_value=1, max_value=12),
+    n=st.integers(min_value=1, max_value=48),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hessian_panel_matches_einsum(e, d, n, seed):
+    rng = np.random.default_rng(seed)
+    xe = rand(rng, e, n)
+    xd = rand(rng, d, n)
+    w = jnp.asarray(rng.uniform(0.0, 0.25, (n, 1)), dtype=jnp.float32)
+    (g,) = model.hessian_panel(xe, w, xd)
+    want = np.einsum("en,n,dn->ed", xe, np.asarray(w)[:, 0], xd)
+    np.testing.assert_allclose(g, want, rtol=2e-4, atol=2e-5)
+
+
+def test_kkt_graph_is_single_fusion_candidate():
+    # The lowered module should contain exactly one dot op — the
+    # elementwise residual/mask work must fuse around it (the L2 §Perf
+    # claim in EXPERIMENTS.md).
+    lowered = jax.jit(model.lasso_kkt).lower(
+        jax.ShapeDtypeStruct((32, 16), jnp.float32),
+        jax.ShapeDtypeStruct((16, 1), jnp.float32),
+        jax.ShapeDtypeStruct((16, 1), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    hlo = lowered.compiler_ir("hlo").as_hlo_text()
+    assert hlo.count("dot(") == 1, hlo
+
+
+@pytest.mark.parametrize("tp,tn", [(16, 16), (32, 8), (10**6, 10**6)])
+def test_tile_targets_do_not_change_results(tp, tn):
+    rng = np.random.default_rng(3)
+    xt = rand(rng, 40, 24)
+    y = rand(rng, 24, 1)
+    eta = rand(rng, 24, 1)
+    lam = jnp.float32(0.2)
+    base = model.lasso_kkt(xt, y, eta, lam)
+    tiled = model.lasso_kkt(xt, y, eta, lam, tp=tp, tn=tn)
+    for a, b in zip(base, tiled):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)

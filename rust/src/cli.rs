@@ -1,0 +1,137 @@
+//! CLI argument parsing substrate (no `clap` offline): positional
+//! arguments, `--key value` options and `--flag` switches, with typed
+//! accessors and friendly error messages.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (program name excluded).
+    /// `--key value` forms an option unless the token after `--key` is
+    /// itself `--something`, in which case `--key` is a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let toks: Vec<String> = args.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("--{key}: expected a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("--{key}: expected an integer, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("exp fig3 --reps 5 --out results --verbose");
+        assert_eq!(a.pos(0), Some("exp"));
+        assert_eq!(a.pos(1), Some("fig3"));
+        assert_eq!(a.get("reps"), Some("5"));
+        assert_eq!(a.get("out"), Some("results"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--eps=1e-6 --method=hessian");
+        assert_eq!(a.get_f64("eps").unwrap(), Some(1e-6));
+        assert_eq!(a.get("method"), Some("hessian"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("--dry-run --n 100");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get_usize("n").unwrap(), Some(100));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("--n abc");
+        assert!(a.get_usize("n").is_err());
+        assert!(a.get_f64("n").is_err());
+        assert_eq!(a.get_usize("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("--methods hessian,working,celer,");
+        assert_eq!(
+            a.get_list("methods").unwrap(),
+            vec!["hessian", "working", "celer"]
+        );
+    }
+}

@@ -1,0 +1,163 @@
+//! Experiment coordinator: a work-stealing thread pool that runs the
+//! benchmark grid (dataset × method × repetition cells) in parallel and
+//! collects results in deterministic (submission) order.
+//!
+//! The offline image has no tokio/rayon, so this is built directly on
+//! `std::thread::scope` + an atomic work counter: each worker claims the
+//! next job index, runs it, and writes its slot — no locks on the hot
+//! path, no ordering nondeterminism in the output. Timing-sensitive
+//! benchmark cells set `threads = 1` (the harness runs repetition loops
+//! sequentially inside a cell and parallelizes *across* cells only when
+//! the cell declares itself parallel-safe).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Thread-pool experiment runner.
+#[derive(Clone, Copy, Debug)]
+pub struct Coordinator {
+    pub threads: usize,
+}
+
+impl Coordinator {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+        }
+    }
+
+    /// One worker per available core, capped (leaving headroom for the
+    /// leader thread and OS noise during timing runs).
+    pub fn auto() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(1);
+        Self::new(n.saturating_sub(1).clamp(1, 16))
+    }
+
+    /// Run `f` over `jobs`, returning results in job order. Panics in a
+    /// job are propagated to the caller after all workers stop.
+    pub fn run<J, R, F>(&self, jobs: Vec<J>, f: F) -> Vec<R>
+    where
+        J: Send + Sync,
+        R: Send,
+        F: Fn(usize, &J) -> R + Sync,
+    {
+        let njobs = jobs.len();
+        if njobs == 0 {
+            return Vec::new();
+        }
+        let threads = self.threads.min(njobs);
+        if threads == 1 {
+            return jobs.iter().enumerate().map(|(i, j)| f(i, j)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<R>>> = (0..njobs).map(|_| Mutex::new(None)).collect();
+        let jobs_ref = &jobs;
+        let f_ref = &f;
+        let slots_ref = &slots;
+        let next_ref = &next;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for _ in 0..threads {
+                handles.push(scope.spawn(move || loop {
+                    let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                    if i >= njobs {
+                        break;
+                    }
+                    let r = f_ref(i, &jobs_ref[i]);
+                    *slots_ref[i].lock().unwrap() = Some(r);
+                }));
+            }
+            for h in handles {
+                h.join().expect("coordinator worker panicked");
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("job not run"))
+            .collect()
+    }
+
+    /// Run with a progress line on stderr (used by the `hx exp` CLI for
+    /// long experiment grids).
+    pub fn run_with_progress<J, R, F>(&self, label: &str, jobs: Vec<J>, f: F) -> Vec<R>
+    where
+        J: Send + Sync,
+        R: Send,
+        F: Fn(usize, &J) -> R + Sync,
+    {
+        let total = jobs.len();
+        let done = AtomicUsize::new(0);
+        let done_ref = &done;
+        let out = self.run(jobs, |i, j| {
+            let r = f(i, j);
+            let d = done_ref.fetch_add(1, Ordering::Relaxed) + 1;
+            eprint!("\r  [{label}] {d}/{total} cells");
+            r
+        });
+        eprintln!();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_job_order() {
+        let c = Coordinator::new(4);
+        let jobs: Vec<usize> = (0..100).collect();
+        let out = c.run(jobs, |_, &j| j * 2);
+        assert_eq!(out, (0..100).map(|j| j * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_sequential() {
+        let c = Coordinator::new(1);
+        let order = Mutex::new(Vec::new());
+        let out = c.run(vec![1, 2, 3], |i, &j| {
+            order.lock().unwrap().push(i);
+            j
+        });
+        assert_eq!(out, vec![1, 2, 3]);
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let c = Coordinator::auto();
+        let out: Vec<i32> = c.run(Vec::<i32>::new(), |_, &j| j);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn all_jobs_run_exactly_once() {
+        let c = Coordinator::new(8);
+        let counter = AtomicUsize::new(0);
+        let out = c.run((0..257).collect::<Vec<_>>(), |_, &j| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            j
+        });
+        assert_eq!(out.len(), 257);
+        assert_eq!(counter.load(Ordering::Relaxed), 257);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn job_panics_propagate() {
+        let c = Coordinator::new(2);
+        let _ = c.run(vec![0, 1, 2, 3], |_, &j| {
+            if j == 2 {
+                panic!("boom");
+            }
+            j
+        });
+    }
+
+    #[test]
+    fn auto_has_at_least_one_thread() {
+        assert!(Coordinator::auto().threads >= 1);
+    }
+}

@@ -1,0 +1,335 @@
+//! K-fold cross-validation for λ selection.
+//!
+//! The paper's opening motivation (§1): "the optimal λ is typically
+//! unknown and must be estimated through model tuning, such as
+//! cross-validation. This involves repeated refitting of the model to
+//! new batches of data, which is computationally demanding" — which is
+//! exactly why path-fitting speed (and hence screening) matters. This
+//! module is that workload: k folds, each fitting a full path on a
+//! *shared* λ grid (computed from the full data, glmnet-style), scored
+//! on the held-out fold, aggregated into a CV curve with the usual
+//! minimum-CV and one-standard-error selections. Folds run in parallel
+//! on the [`crate::coordinator::Coordinator`].
+
+use crate::coordinator::Coordinator;
+use crate::data::DesignMatrix;
+use crate::linalg::{CscMatrix, DenseMatrix, Design};
+use crate::loss::Loss;
+use crate::metrics::Summary;
+use crate::path::{lambda_grid, PathFitter, PathSettings};
+use crate::rng::Xoshiro256pp;
+use crate::screening::ScreeningKind;
+
+/// Cross-validation configuration.
+#[derive(Clone, Debug)]
+pub struct CvSettings {
+    pub n_folds: usize,
+    pub seed: u64,
+    pub path: PathSettings,
+    /// Parallelize across folds.
+    pub threads: usize,
+}
+
+impl Default for CvSettings {
+    fn default() -> Self {
+        Self {
+            n_folds: 10,
+            seed: 0,
+            path: PathSettings::default(),
+            threads: Coordinator::auto().threads,
+        }
+    }
+}
+
+/// Result of a cross-validated path.
+#[derive(Clone, Debug)]
+pub struct CvFit {
+    pub lambdas: Vec<f64>,
+    /// Mean held-out deviance per λ (the CV curve).
+    pub cv_mean: Vec<f64>,
+    /// Standard error of the fold deviances per λ.
+    pub cv_se: Vec<f64>,
+    /// Index of the CV-minimizing λ.
+    pub idx_min: usize,
+    /// Largest λ within one SE of the minimum (the "1-SE rule").
+    pub idx_1se: usize,
+    /// Final path refit on the full data.
+    pub full_fit: crate::path::PathFit,
+}
+
+impl CvFit {
+    pub fn lambda_min(&self) -> f64 {
+        self.lambdas[self.idx_min]
+    }
+
+    pub fn lambda_1se(&self) -> f64 {
+        self.lambdas[self.idx_1se]
+    }
+
+    /// Coefficients at the CV-selected λ (sparse pairs).
+    pub fn selected_coefs(&self, one_se: bool) -> &[(usize, f64)] {
+        let idx = if one_se { self.idx_1se } else { self.idx_min };
+        &self.full_fit.betas[idx.min(self.full_fit.betas.len() - 1)]
+    }
+}
+
+/// Assign each observation to a fold (balanced, shuffled).
+pub fn fold_assignments(n: usize, k: usize, seed: u64) -> Vec<usize> {
+    assert!(k >= 2, "need at least 2 folds");
+    assert!(n >= k, "more folds than observations");
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    rng.shuffle(&mut idx);
+    let mut fold = vec![0usize; n];
+    for (pos, &i) in idx.iter().enumerate() {
+        fold[i] = pos % k;
+    }
+    fold
+}
+
+/// Extract the rows of a design (dense or sparse) where `keep[i]`.
+fn subset_rows(design: &DesignMatrix, keep: &[bool]) -> DesignMatrix {
+    let n_new = keep.iter().filter(|&&k| k).count();
+    let mut row_map = vec![usize::MAX; design.nrows()];
+    let mut r = 0;
+    for i in 0..design.nrows() {
+        if keep[i] {
+            row_map[i] = r;
+            r += 1;
+        }
+    }
+    match design {
+        DesignMatrix::Dense(m) => {
+            let mut out = DenseMatrix::zeros(n_new, m.ncols());
+            for j in 0..m.ncols() {
+                let col = m.col(j);
+                let ocol = out.col_mut(j);
+                for i in 0..col.len() {
+                    if keep[i] {
+                        ocol[row_map[i]] = col[i];
+                    }
+                }
+            }
+            DesignMatrix::Dense(out)
+        }
+        DesignMatrix::Sparse(m) => {
+            let mut triplets = Vec::new();
+            for j in 0..m.ncols() {
+                let (ri, vals) = m.col(j);
+                for (&i, &v) in ri.iter().zip(vals) {
+                    if keep[i as usize] {
+                        triplets.push((row_map[i as usize], j, v));
+                    }
+                }
+            }
+            DesignMatrix::Sparse(CscMatrix::from_triplets(n_new, m.ncols(), &triplets))
+        }
+    }
+}
+
+/// Held-out deviance of a sparse coefficient vector.
+fn holdout_deviance(
+    design: &DesignMatrix,
+    y: &[f64],
+    holdout: &[usize],
+    beta: &[(usize, f64)],
+    loss: Loss,
+) -> f64 {
+    // η for the held-out rows only.
+    let n = design.nrows();
+    let mut eta_full = vec![0.0; n];
+    for &(j, b) in beta {
+        design.col_axpy(j, b, &mut eta_full);
+    }
+    let yh: Vec<f64> = holdout.iter().map(|&i| y[i]).collect();
+    let eh: Vec<f64> = holdout.iter().map(|&i| eta_full[i]).collect();
+    loss.deviance(&yh, &eh) / holdout.len().max(1) as f64
+}
+
+/// Run k-fold cross-validation. The λ grid is fixed from the *full*
+/// data so fold curves are comparable (glmnet's convention).
+pub fn cross_validate(
+    design: &DesignMatrix,
+    y: &[f64],
+    loss: Loss,
+    kind: ScreeningKind,
+    settings: &CvSettings,
+) -> CvFit {
+    let n = design.nrows();
+    let p = design.ncols();
+
+    // Shared λ grid from the full data.
+    let mut resid = vec![0.0; n];
+    let eta0 = vec![0.0; n];
+    loss.pseudo_residual_into(y, &eta0, &mut resid);
+    let lambda_max = (0..p)
+        .map(|j| design.col_dot(j, &resid).abs())
+        .fold(0.0f64, f64::max);
+    let ratio = settings
+        .path
+        .lambda_min_ratio
+        .unwrap_or_else(|| crate::path::default_lambda_min_ratio(n, p));
+    let lambdas = lambda_grid(lambda_max, ratio, settings.path.path_length);
+
+    let folds = fold_assignments(n, settings.n_folds, settings.seed);
+    let jobs: Vec<usize> = (0..settings.n_folds).collect();
+    let coord = Coordinator::new(settings.threads);
+    let fold_devs: Vec<Vec<f64>> = coord.run(jobs, |_, &f| {
+        let keep: Vec<bool> = folds.iter().map(|&g| g != f).collect();
+        let train_x = subset_rows(design, &keep);
+        let train_y: Vec<f64> = (0..n).filter(|&i| keep[i]).map(|i| y[i]).collect();
+        let holdout: Vec<usize> = (0..n).filter(|&i| !keep[i]).collect();
+        let mut ps = settings.path.clone();
+        ps.lambda_path = Some(lambdas.clone());
+        // no early stopping inside folds: curves must align on the grid
+        ps.dev_ratio_max = 1.0;
+        ps.dev_change_min = 0.0;
+        let fit = PathFitter::new(loss, kind)
+            .with_settings(ps)
+            .fit(&train_x, &train_y);
+        (0..lambdas.len())
+            .map(|k| {
+                let beta = fit
+                    .betas
+                    .get(k)
+                    .map(|b| b.as_slice())
+                    .unwrap_or(fit.betas.last().unwrap().as_slice());
+                holdout_deviance(design, y, &holdout, beta, loss)
+            })
+            .collect()
+    });
+
+    let m = lambdas.len();
+    let mut cv_mean = Vec::with_capacity(m);
+    let mut cv_se = Vec::with_capacity(m);
+    for k in 0..m {
+        let vals: Vec<f64> = fold_devs.iter().map(|f| f[k]).collect();
+        let s = Summary::of(&vals);
+        cv_mean.push(s.mean);
+        cv_se.push(s.sd / (vals.len() as f64).sqrt());
+    }
+    let idx_min = (0..m)
+        .min_by(|&a, &b| cv_mean[a].partial_cmp(&cv_mean[b]).unwrap())
+        .unwrap_or(0);
+    // 1-SE rule: the largest λ (smallest index) whose CV mean is within
+    // one SE of the minimum.
+    let threshold = cv_mean[idx_min] + cv_se[idx_min];
+    let idx_1se = (0..=idx_min)
+        .find(|&k| cv_mean[k] <= threshold)
+        .unwrap_or(idx_min);
+
+    let mut ps = settings.path.clone();
+    ps.lambda_path = Some(lambdas.clone());
+    ps.dev_ratio_max = 1.0;
+    ps.dev_change_min = 0.0;
+    let full_fit = PathFitter::new(loss, kind).with_settings(ps).fit(design, y);
+
+    CvFit {
+        lambdas,
+        cv_mean,
+        cv_se,
+        idx_min,
+        idx_1se,
+        full_fit,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+
+    #[test]
+    fn fold_assignments_balanced_and_deterministic() {
+        let f = fold_assignments(103, 5, 7);
+        assert_eq!(f.len(), 103);
+        let mut counts = [0usize; 5];
+        for &g in &f {
+            counts[g] += 1;
+        }
+        for &c in &counts {
+            assert!((20..=21).contains(&c), "unbalanced: {counts:?}");
+        }
+        assert_eq!(f, fold_assignments(103, 5, 7));
+        assert_ne!(f, fold_assignments(103, 5, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2 folds")]
+    fn rejects_single_fold() {
+        let _ = fold_assignments(10, 1, 0);
+    }
+
+    #[test]
+    fn subset_rows_dense_and_sparse_agree() {
+        let data = SyntheticSpec::new(20, 6, 2).density(0.4).seed(1).generate();
+        let sparse = data.design.clone();
+        let dense = match &sparse {
+            DesignMatrix::Sparse(m) => DesignMatrix::Dense(m.to_dense()),
+            _ => unreachable!(),
+        };
+        let keep: Vec<bool> = (0..20).map(|i| i % 3 != 0).collect();
+        let sd = subset_rows(&dense, &keep);
+        let ss = subset_rows(&sparse, &keep);
+        assert_eq!(sd.nrows(), ss.nrows());
+        let v: Vec<f64> = (0..sd.nrows()).map(|i| i as f64).collect();
+        for j in 0..6 {
+            assert!((sd.col_dot(j, &v) - ss.col_dot(j, &v)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cv_selects_reasonable_lambda_gaussian() {
+        let data = SyntheticSpec::new(150, 40, 4).rho(0.2).snr(5.0).seed(3).generate();
+        let mut settings = CvSettings::default();
+        settings.n_folds = 5;
+        settings.path.path_length = 40;
+        settings.threads = 2;
+        let cv = cross_validate(
+            &data.design,
+            &data.response,
+            Loss::Gaussian,
+            ScreeningKind::Hessian,
+            &settings,
+        );
+        assert_eq!(cv.cv_mean.len(), cv.lambdas.len());
+        // The CV minimum is in the interior (not the null model, not the
+        // end of the path) for a well-posed high-SNR problem.
+        assert!(cv.idx_min > 0, "CV chose the null model");
+        // 1-SE λ is at least as large as the min-CV λ.
+        assert!(cv.lambda_1se() >= cv.lambda_min());
+        // Selected model contains true signals.
+        let coefs = cv.selected_coefs(false);
+        assert!(!coefs.is_empty());
+        let truth = data.beta_true.as_ref().unwrap();
+        let hits = coefs
+            .iter()
+            .filter(|&&(j, _)| truth[j] != 0.0)
+            .count();
+        assert!(hits >= 3, "only {hits}/4 signals recovered");
+    }
+
+    #[test]
+    fn cv_logistic_runs() {
+        let data = SyntheticSpec::new(120, 20, 3)
+            .loss(Loss::Logistic)
+            .snr(3.0)
+            .signal_scale(1.5)
+            .seed(4)
+            .generate();
+        let mut settings = CvSettings::default();
+        settings.n_folds = 4;
+        settings.path.path_length = 25;
+        settings.threads = 2;
+        let cv = cross_validate(
+            &data.design,
+            &data.response,
+            Loss::Logistic,
+            ScreeningKind::Working,
+            &settings,
+        );
+        // CV curve finite and the minimum beats the null model's score.
+        assert!(cv.cv_mean.iter().all(|v| v.is_finite()));
+        assert!(cv.cv_mean[cv.idx_min] < cv.cv_mean[0]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Data substrate: design-matrix container, standardization, synthetic
+//! generators (paper §4.1) and simulated analogues of the paper's real
+//! data sets (paper §4.2 / Appendix E; see DESIGN.md §3 for the
+//! substitution rationale).
+
+mod datasets;
+mod standardize;
+mod synthetic;
+
+pub use datasets::{dataset_by_name, dataset_catalog, DatasetSpec};
+pub use standardize::{standardize, Standardization};
+pub use synthetic::{CorrelationStructure, SyntheticSpec};
+
+use crate::linalg::{CscMatrix, DenseMatrix, Design};
+
+/// A design matrix that is either dense or sparse CSC. Implements
+/// [`Design`] by enum dispatch so the solver code is storage-agnostic
+/// without virtual calls in the inner loops.
+#[derive(Clone, Debug)]
+pub enum DesignMatrix {
+    Dense(DenseMatrix),
+    Sparse(CscMatrix),
+}
+
+impl DesignMatrix {
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, DesignMatrix::Sparse(_))
+    }
+}
+
+impl Design for DesignMatrix {
+    #[inline]
+    fn nrows(&self) -> usize {
+        match self {
+            DesignMatrix::Dense(m) => m.nrows(),
+            DesignMatrix::Sparse(m) => m.nrows(),
+        }
+    }
+
+    #[inline]
+    fn ncols(&self) -> usize {
+        match self {
+            DesignMatrix::Dense(m) => m.ncols(),
+            DesignMatrix::Sparse(m) => m.ncols(),
+        }
+    }
+
+    #[inline]
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        match self {
+            DesignMatrix::Dense(m) => m.col_dot(j, v),
+            DesignMatrix::Sparse(m) => m.col_dot(j, v),
+        }
+    }
+
+    #[inline]
+    fn col_axpy(&self, j: usize, alpha: f64, v: &mut [f64]) {
+        match self {
+            DesignMatrix::Dense(m) => m.col_axpy(j, alpha, v),
+            DesignMatrix::Sparse(m) => m.col_axpy(j, alpha, v),
+        }
+    }
+
+    #[inline]
+    fn col_sq_norm(&self, j: usize) -> f64 {
+        match self {
+            DesignMatrix::Dense(m) => m.col_sq_norm(j),
+            DesignMatrix::Sparse(m) => m.col_sq_norm(j),
+        }
+    }
+
+    fn gram(&self, i: usize, j: usize) -> f64 {
+        match self {
+            DesignMatrix::Dense(m) => m.gram(i, j),
+            DesignMatrix::Sparse(m) => m.gram(i, j),
+        }
+    }
+
+    fn gram_weighted(&self, i: usize, j: usize, w: Option<&[f64]>) -> f64 {
+        match self {
+            DesignMatrix::Dense(m) => m.gram_weighted(i, j, w),
+            DesignMatrix::Sparse(m) => m.gram_weighted(i, j, w),
+        }
+    }
+
+    fn density(&self) -> f64 {
+        match self {
+            DesignMatrix::Dense(m) => m.density(),
+            DesignMatrix::Sparse(m) => m.density(),
+        }
+    }
+}
+
+/// A ready-to-fit problem: standardized design + response (+ ground
+/// truth when synthetic).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub design: DesignMatrix,
+    pub response: Vec<f64>,
+    /// True coefficients when the data is simulated (for oracle checks).
+    pub beta_true: Option<Vec<f64>>,
+    pub loss: crate::loss::Loss,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.design.nrows()
+    }
+
+    pub fn p(&self) -> usize {
+        self.design.ncols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::CscMatrix;
+
+    #[test]
+    fn enum_dispatch_matches_inner() {
+        let sp = CscMatrix::from_triplets(3, 2, &[(0, 0, 1.0), (2, 1, 2.0)]);
+        let d = sp.to_dense();
+        let de = DesignMatrix::Dense(d.clone());
+        let se = DesignMatrix::Sparse(sp);
+        let v = vec![1.0, 2.0, 3.0];
+        for j in 0..2 {
+            assert_eq!(de.col_dot(j, &v), se.col_dot(j, &v));
+            assert_eq!(de.col_sq_norm(j), se.col_sq_norm(j));
+        }
+        assert_eq!(de.nrows(), 3);
+        assert!(se.is_sparse());
+        assert!(!de.is_sparse());
+        assert!((se.density() - 2.0 / 6.0).abs() < 1e-15);
+        assert_eq!(de.density(), 1.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Standardization (paper §4, first paragraph).
+//!
+//! * Dense designs: each predictor is centered with its mean and scaled
+//!   by the *uncorrected* sample standard deviation (divide by n).
+//! * Sparse designs: scaled only — centering would destroy sparsity.
+//!   This is the standard sparse-GLM compromise (glmnet does the same
+//!   with `standardize = TRUE` on sparse input).
+//! * The response is centered (with the mean) for the Gaussian loss
+//!   only, matching the paper exactly.
+//!
+//! Constant (zero-variance) columns are left unscaled (their scale is
+//! reported as 1) and can never enter the model because their
+//! correlation is 0 after centering.
+
+use super::DesignMatrix;
+use crate::linalg::Design;
+use crate::loss::Loss;
+
+/// Record of the applied transformation, so predictions can be mapped
+/// back to the original scale.
+#[derive(Clone, Debug)]
+pub struct Standardization {
+    pub col_means: Vec<f64>,
+    pub col_scales: Vec<f64>,
+    pub y_mean: f64,
+}
+
+impl Standardization {
+    /// Map coefficients for standardized X back to the original scale.
+    pub fn unstandardize_coefs(&self, beta: &[f64]) -> (Vec<f64>, f64) {
+        let mut raw = vec![0.0; beta.len()];
+        let mut intercept = self.y_mean;
+        for j in 0..beta.len() {
+            raw[j] = beta[j] / self.col_scales[j];
+            intercept -= raw[j] * self.col_means[j];
+        }
+        (raw, intercept)
+    }
+}
+
+/// Standardize a design + response in place; returns the transformation.
+pub fn standardize(x: &mut DesignMatrix, y: &mut [f64], loss: Loss) -> Standardization {
+    let n = match x {
+        DesignMatrix::Dense(m) => m.nrows(),
+        DesignMatrix::Sparse(m) => m.nrows(),
+    };
+    let nf = n as f64;
+    let (means, scales) = match x {
+        DesignMatrix::Dense(m) => {
+            let p = m.ncols();
+            let mut means = vec![0.0; p];
+            let mut scales = vec![1.0; p];
+            for j in 0..p {
+                let col = m.col_mut(j);
+                let mean = col.iter().sum::<f64>() / nf;
+                let mut ss = 0.0;
+                for v in col.iter_mut() {
+                    *v -= mean;
+                    ss += *v * *v;
+                }
+                let sd = (ss / nf).sqrt();
+                let scale = if sd > 0.0 { sd } else { 1.0 };
+                if scale != 1.0 {
+                    for v in col.iter_mut() {
+                        *v /= scale;
+                    }
+                }
+                means[j] = mean;
+                scales[j] = scale;
+            }
+            (means, scales)
+        }
+        DesignMatrix::Sparse(m) => {
+            let p = m.ncols();
+            let mut means = vec![0.0; p]; // not centered
+            let mut scales = vec![1.0; p];
+            for j in 0..p {
+                let mean = m.col_mean(j);
+                // Uncorrected sd around the (uncentered!) mean:
+                // Var = E[x²] − mean², where E over all n rows.
+                let (_, vals) = m.col(j);
+                let sumsq: f64 = vals.iter().map(|v| v * v).sum();
+                let var = (sumsq / nf - mean * mean).max(0.0);
+                let sd = var.sqrt();
+                let scale = if sd > 0.0 { sd } else { 1.0 };
+                if scale != 1.0 {
+                    m.scale_col(j, 1.0 / scale);
+                }
+                means[j] = 0.0;
+                scales[j] = scale;
+            }
+            (means, scales)
+        }
+    };
+    let y_mean = if matches!(loss, Loss::Gaussian) {
+        let mu = y.iter().sum::<f64>() / nf;
+        for v in y.iter_mut() {
+            *v -= mu;
+        }
+        mu
+    } else {
+        0.0
+    };
+    Standardization {
+        col_means: means,
+        col_scales: scales,
+        y_mean,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{CscMatrix, DenseMatrix, Design};
+
+    #[test]
+    fn dense_columns_zero_mean_unit_sd() {
+        let m = DenseMatrix::from_rows(&[
+            vec![1.0, 10.0],
+            vec![2.0, 20.0],
+            vec![3.0, 60.0],
+        ]);
+        let mut x = DesignMatrix::Dense(m);
+        let mut y = vec![1.0, 2.0, 6.0];
+        let st = standardize(&mut x, &mut y, Loss::Gaussian);
+        if let DesignMatrix::Dense(m) = &x {
+            for j in 0..2 {
+                let col = m.col(j);
+                let mean: f64 = col.iter().sum::<f64>() / 3.0;
+                let ss: f64 = col.iter().map(|v| v * v).sum::<f64>() / 3.0;
+                assert!(mean.abs() < 1e-12, "mean {mean}");
+                assert!((ss - 1.0).abs() < 1e-12, "var {ss}");
+            }
+        }
+        // y centered for Gaussian.
+        assert!((y.iter().sum::<f64>()).abs() < 1e-12);
+        assert!((st.y_mean - 3.0).abs() < 1e-12);
+        assert!((st.col_means[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logistic_response_not_centered() {
+        let m = DenseMatrix::from_rows(&[vec![1.0], vec![2.0], vec![3.0]]);
+        let mut x = DesignMatrix::Dense(m);
+        let mut y = vec![0.0, 1.0, 1.0];
+        let st = standardize(&mut x, &mut y, Loss::Logistic);
+        assert_eq!(y, vec![0.0, 1.0, 1.0]);
+        assert_eq!(st.y_mean, 0.0);
+    }
+
+    #[test]
+    fn constant_column_survives() {
+        let m = DenseMatrix::from_rows(&[vec![5.0], vec![5.0], vec![5.0]]);
+        let mut x = DesignMatrix::Dense(m);
+        let mut y = vec![0.0; 3];
+        let st = standardize(&mut x, &mut y, Loss::Gaussian);
+        assert_eq!(st.col_scales[0], 1.0);
+        if let DesignMatrix::Dense(m) = &x {
+            assert_eq!(m.col(0), &[0.0, 0.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn sparse_scaled_not_centered() {
+        let sp = CscMatrix::from_triplets(4, 1, &[(0, 0, 2.0), (2, 0, 4.0)]);
+        let mut x = DesignMatrix::Sparse(sp);
+        let mut y = vec![1.0; 4];
+        standardize(&mut x, &mut y, Loss::Logistic);
+        if let DesignMatrix::Sparse(m) = &x {
+            // mean of [2,0,4,0] = 1.5, E[x²] = 5, var = 2.75
+            let sd = 2.75f64.sqrt();
+            let (_, vals) = m.col(0);
+            assert!((vals[0] - 2.0 / sd).abs() < 1e-12);
+            assert!((vals[1] - 4.0 / sd).abs() < 1e-12);
+            assert_eq!(m.nnz(), 2, "sparsity preserved");
+        }
+    }
+
+    #[test]
+    fn unstandardize_roundtrip() {
+        // yhat = Xs·βs + 0 must equal Xraw·βraw + intercept.
+        let rows = vec![vec![1.0, -1.0], vec![2.0, 0.5], vec![4.0, 3.0], vec![0.0, 1.5]];
+        let m = DenseMatrix::from_rows(&rows);
+        let mut x = DesignMatrix::Dense(m.clone());
+        let mut y = vec![1.0, 2.0, 3.0, 4.0];
+        let st = standardize(&mut x, &mut y, Loss::Gaussian);
+        let beta_s = vec![0.7, -1.2];
+        let (beta_raw, b0) = st.unstandardize_coefs(&beta_s);
+        for i in 0..4 {
+            let mut pred_s = 0.0;
+            for j in 0..2 {
+                pred_s += match &x {
+                    DesignMatrix::Dense(ms) => ms.at(i, j) * beta_s[j],
+                    _ => unreachable!(),
+                };
+            }
+            // prediction on the original y scale
+            let pred_s = pred_s + st.y_mean;
+            let mut pred_raw = b0;
+            for j in 0..2 {
+                pred_raw += rows[i][j] * beta_raw[j];
+            }
+            assert!((pred_s - pred_raw).abs() < 1e-10, "row {i}");
+        }
+        let _ = x.density();
+    }
+}

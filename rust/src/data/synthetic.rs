@@ -1,0 +1,375 @@
+//! Synthetic problem generator — paper §4.1.
+//!
+//! Rows of X are drawn i.i.d. from N(0, Σ); the response is
+//! N(Xβ, σ²I) with σ² = βᵀΣβ / SNR (Gaussian), Bernoulli(σ(xᵀβ))
+//! (logistic), or Poisson(exp(xᵀβ)) (App. F.9). `s` coefficients equally
+//! spaced throughout β are set to 1 and the rest to 0, exactly as in the
+//! paper.
+
+use super::{standardize, Dataset, DesignMatrix};
+use crate::linalg::{CscMatrix, DenseMatrix};
+use crate::loss::Loss;
+use crate::rng::{GaussianSource, Xoshiro256pp};
+
+/// Correlation structure of the simulated design.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CorrelationStructure {
+    /// Σ = ρ11ᵀ + (1−ρ)I — the paper's §4.1 setup.
+    Equicorrelated,
+    /// corr(xᵢ, xⱼ) = ρ^|i−j|.
+    Ar1,
+    /// ρ within contiguous blocks of the given size, 0 across.
+    Block(usize),
+}
+
+/// Builder for synthetic problems.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub n: usize,
+    pub p: usize,
+    pub s: usize,
+    pub rho: f64,
+    pub snr: f64,
+    pub loss: Loss,
+    pub structure: CorrelationStructure,
+    pub seed: u64,
+    /// If Some(d), generate a sparse design with approximate density d
+    /// (entries present i.i.d. with prob. d; values N(0,1); correlation
+    /// structure is ignored for sparse designs).
+    pub density: Option<f64>,
+    /// Scale applied to the Poisson/logistic linear predictor to keep
+    /// the response in a realistic range (β entries are ±1 as in the
+    /// paper; for Poisson exp(η) explodes without damping).
+    pub signal_scale: f64,
+    pub standardize: bool,
+}
+
+impl SyntheticSpec {
+    pub fn new(n: usize, p: usize, s: usize) -> Self {
+        Self {
+            n,
+            p,
+            s,
+            rho: 0.0,
+            snr: 1.0,
+            loss: Loss::Gaussian,
+            structure: CorrelationStructure::Equicorrelated,
+            seed: 0,
+            density: None,
+            signal_scale: 1.0,
+            standardize: true,
+        }
+    }
+
+    pub fn rho(mut self, rho: f64) -> Self {
+        self.rho = rho;
+        self
+    }
+
+    pub fn snr(mut self, snr: f64) -> Self {
+        self.snr = snr;
+        self
+    }
+
+    pub fn loss(mut self, loss: Loss) -> Self {
+        self.loss = loss;
+        self
+    }
+
+    pub fn structure(mut self, s: CorrelationStructure) -> Self {
+        self.structure = s;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn density(mut self, d: f64) -> Self {
+        self.density = Some(d);
+        self
+    }
+
+    pub fn signal_scale(mut self, s: f64) -> Self {
+        self.signal_scale = s;
+        self
+    }
+
+    pub fn standardize(mut self, yes: bool) -> Self {
+        self.standardize = yes;
+        self
+    }
+
+    /// True coefficient vector: `s` ones equally spaced through β.
+    pub fn beta_true(&self) -> Vec<f64> {
+        let mut beta = vec![0.0; self.p];
+        if self.s == 0 {
+            return beta;
+        }
+        let step = (self.p as f64 / self.s as f64).max(1.0);
+        for k in 0..self.s {
+            let j = ((k as f64 + 0.5) * step).floor() as usize;
+            beta[j.min(self.p - 1)] = self.signal_scale;
+        }
+        beta
+    }
+
+    /// βᵀΣβ for the noise calibration σ² = βᵀΣβ/SNR.
+    fn signal_variance(&self, beta: &[f64]) -> f64 {
+        match self.structure {
+            CorrelationStructure::Equicorrelated => {
+                let sum: f64 = beta.iter().sum();
+                let sq: f64 = beta.iter().map(|b| b * b).sum();
+                self.rho * sum * sum + (1.0 - self.rho) * sq
+            }
+            CorrelationStructure::Ar1 => {
+                let nz: Vec<(usize, f64)> = beta
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, b)| **b != 0.0)
+                    .map(|(j, &b)| (j, b))
+                    .collect();
+                let mut s = 0.0;
+                for &(i, bi) in &nz {
+                    for &(j, bj) in &nz {
+                        s += bi * bj * self.rho.powi((i as i32 - j as i32).abs());
+                    }
+                }
+                s
+            }
+            CorrelationStructure::Block(sz) => {
+                let mut s = 0.0;
+                let nz: Vec<(usize, f64)> = beta
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, b)| **b != 0.0)
+                    .map(|(j, &b)| (j, b))
+                    .collect();
+                for &(i, bi) in &nz {
+                    for &(j, bj) in &nz {
+                        let c = if i == j {
+                            1.0
+                        } else if i / sz == j / sz {
+                            self.rho
+                        } else {
+                            0.0
+                        };
+                        s += bi * bj * c;
+                    }
+                }
+                s
+            }
+        }
+    }
+
+    /// Generate the dataset (deterministic in `seed`).
+    pub fn generate(&self) -> Dataset {
+        let mut rng = Xoshiro256pp::seed_from_u64(self.seed);
+        let beta = self.beta_true();
+        let mut eta = vec![0.0; self.n];
+
+        let mut design = if let Some(d) = self.density {
+            // Sparse design: Bernoulli(d) mask, N(0,1) values.
+            let mut triplets = Vec::new();
+            for j in 0..self.p {
+                for i in 0..self.n {
+                    if rng.next_f64() < d {
+                        triplets.push((i, j, rng.next_gaussian()));
+                    }
+                }
+            }
+            let m = CscMatrix::from_triplets(self.n, self.p, &triplets);
+            for i in 0..self.n {
+                eta[i] = 0.0;
+            }
+            for (j, &b) in beta.iter().enumerate() {
+                if b != 0.0 {
+                    use crate::linalg::Design;
+                    m.col_axpy(j, b, &mut eta);
+                }
+            }
+            DesignMatrix::Sparse(m)
+        } else {
+            let mut m = DenseMatrix::zeros(self.n, self.p);
+            let mut row = vec![0.0; self.p];
+            for i in 0..self.n {
+                {
+                    let mut src = GaussianSource::new(&mut rng);
+                    match self.structure {
+                        CorrelationStructure::Equicorrelated => {
+                            src.fill_equicorrelated_row(&mut row, self.rho)
+                        }
+                        CorrelationStructure::Ar1 => src.fill_ar1_row(&mut row, self.rho),
+                        CorrelationStructure::Block(sz) => {
+                            src.fill_block_row(&mut row, self.rho, sz)
+                        }
+                    }
+                }
+                let mut e = 0.0;
+                for j in 0..self.p {
+                    *m.at_mut(i, j) = row[j];
+                    e += row[j] * beta[j];
+                }
+                eta[i] = e;
+            }
+            DesignMatrix::Dense(m)
+        };
+
+        let mut y = vec![0.0; self.n];
+        match self.loss {
+            Loss::Gaussian => {
+                let sigma2 = self.signal_variance(&beta) / self.snr;
+                let sigma = sigma2.max(0.0).sqrt();
+                for i in 0..self.n {
+                    y[i] = eta[i] + sigma * rng.next_gaussian();
+                }
+            }
+            Loss::Logistic => {
+                for i in 0..self.n {
+                    let pr = crate::loss::sigmoid(eta[i]);
+                    y[i] = if rng.next_bernoulli(pr) { 1.0 } else { 0.0 };
+                }
+            }
+            Loss::Poisson => {
+                for i in 0..self.n {
+                    y[i] = rng.next_poisson(eta[i].min(20.0).exp()) as f64;
+                }
+            }
+        }
+
+        if self.standardize {
+            standardize(&mut design, &mut y, self.loss);
+        }
+
+        Dataset {
+            name: format!(
+                "synthetic(n={},p={},s={},rho={},{:?})",
+                self.n, self.p, self.s, self.rho, self.loss
+            ),
+            design,
+            response: y,
+            beta_true: Some(beta),
+            loss: self.loss,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Design;
+
+    #[test]
+    fn beta_true_spacing() {
+        let spec = SyntheticSpec::new(10, 100, 5);
+        let b = spec.beta_true();
+        let nz: Vec<usize> = (0..100).filter(|&j| b[j] != 0.0).collect();
+        assert_eq!(nz.len(), 5);
+        // equally spaced: gaps all equal
+        let gaps: Vec<usize> = nz.windows(2).map(|w| w[1] - w[0]).collect();
+        assert!(gaps.iter().all(|&g| g == gaps[0]));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = SyntheticSpec::new(20, 10, 3).seed(7).generate();
+        let b = SyntheticSpec::new(20, 10, 3).seed(7).generate();
+        let c = SyntheticSpec::new(20, 10, 3).seed(8).generate();
+        assert_eq!(a.response, b.response);
+        assert_ne!(a.response, c.response);
+    }
+
+    #[test]
+    fn standardized_dense_design() {
+        let d = SyntheticSpec::new(50, 8, 2).rho(0.5).seed(1).generate();
+        if let DesignMatrix::Dense(m) = &d.design {
+            for j in 0..8 {
+                let col = m.col(j);
+                let mean: f64 = col.iter().sum::<f64>() / 50.0;
+                let ss: f64 = col.iter().map(|v| v * v).sum::<f64>() / 50.0;
+                assert!(mean.abs() < 1e-10);
+                assert!((ss - 1.0).abs() < 1e-8);
+            }
+        } else {
+            panic!("expected dense");
+        }
+        // y centered for Gaussian
+        assert!(d.response.iter().sum::<f64>().abs() < 1e-8);
+    }
+
+    #[test]
+    fn logistic_response_binary() {
+        let d = SyntheticSpec::new(100, 5, 2)
+            .loss(Loss::Logistic)
+            .seed(3)
+            .generate();
+        assert!(d.response.iter().all(|&v| v == 0.0 || v == 1.0));
+        let ones = d.response.iter().sum::<f64>();
+        assert!(ones > 10.0 && ones < 90.0, "balanced-ish: {ones}");
+    }
+
+    #[test]
+    fn poisson_response_counts() {
+        let d = SyntheticSpec::new(100, 5, 2)
+            .loss(Loss::Poisson)
+            .signal_scale(0.5)
+            .seed(3)
+            .generate();
+        assert!(d
+            .response
+            .iter()
+            .all(|&v| v >= 0.0 && v.fract() == 0.0));
+    }
+
+    #[test]
+    fn sparse_design_density() {
+        let d = SyntheticSpec::new(100, 50, 5).density(0.05).seed(5).generate();
+        assert!(d.design.is_sparse());
+        let dens = d.design.density();
+        assert!((dens - 0.05).abs() < 0.02, "density {dens}");
+    }
+
+    #[test]
+    fn snr_controls_noise() {
+        // higher SNR => higher correlation between y and eta-direction
+        let lo = SyntheticSpec::new(400, 10, 2).snr(0.1).seed(9).standardize(false).generate();
+        let hi = SyntheticSpec::new(400, 10, 2).snr(100.0).seed(9).standardize(false).generate();
+        let b = SyntheticSpec::new(400, 10, 2).beta_true();
+        let corr = |d: &Dataset| {
+            let mut eta = vec![0.0; 400];
+            if let DesignMatrix::Dense(m) = &d.design {
+                for j in 0..10 {
+                    m.col_axpy(j, b[j], &mut eta);
+                }
+            }
+            let my = d.response.iter().sum::<f64>() / 400.0;
+            let me = eta.iter().sum::<f64>() / 400.0;
+            let mut num = 0.0;
+            let mut dy = 0.0;
+            let mut de = 0.0;
+            for i in 0..400 {
+                num += (d.response[i] - my) * (eta[i] - me);
+                dy += (d.response[i] - my).powi(2);
+                de += (eta[i] - me).powi(2);
+            }
+            num / (dy * de).sqrt()
+        };
+        assert!(corr(&hi) > 0.99);
+        assert!(corr(&lo) < corr(&hi));
+    }
+
+    #[test]
+    fn signal_variance_formulas() {
+        let mut spec = SyntheticSpec::new(10, 6, 2).rho(0.5);
+        let beta = vec![1.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        // equicorrelated: rho*sum^2 + (1-rho)*sq = 0.5*4 + 0.5*2 = 3
+        assert!((spec.signal_variance(&beta) - 3.0).abs() < 1e-12);
+        spec.structure = CorrelationStructure::Ar1;
+        // ar1: 2 + 2*rho^3 = 2 + 0.25
+        assert!((spec.signal_variance(&beta) - 2.25).abs() < 1e-12);
+        spec.structure = CorrelationStructure::Block(3);
+        // blocks {0,1,2},{3,4,5}: cross-block corr 0 => 2
+        assert!((spec.signal_variance(&beta) - 2.0).abs() < 1e-12);
+    }
+}

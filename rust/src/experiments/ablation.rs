@@ -1,0 +1,120 @@
+//! Appendix F.8 (Figure 10): incremental feature ablation. Features are
+//! added cumulatively in the paper's order:
+//!
+//!   vanilla → + Hessian screening → + Hessian warm starts
+//!           → + sweep updates (Alg. 1) → + Gap-Safe augmentation
+//!
+//! "Vanilla" uses no screening (full working set) and standard warm
+//! starts, exactly as the paper describes.
+
+use super::*;
+use crate::metrics::{sig_figs, Summary, Table};
+use crate::path::PathSettings;
+
+pub fn variants() -> Vec<(&'static str, ScreeningKind, PathSettings)> {
+    let base = paper_settings;
+    let mut v = Vec::new();
+    {
+        let mut s = base();
+        s.use_gap_safe_aug = false;
+        s.hessian_warm_starts = false;
+        s.hessian_screening = false;
+        s.hessian_sweep_updates = false;
+        v.push(("vanilla", ScreeningKind::None, s));
+    }
+    {
+        let mut s = base();
+        s.use_gap_safe_aug = false;
+        s.hessian_warm_starts = false;
+        s.hessian_sweep_updates = false;
+        v.push(("+ screening", ScreeningKind::Hessian, s));
+    }
+    {
+        let mut s = base();
+        s.use_gap_safe_aug = false;
+        s.hessian_sweep_updates = false;
+        v.push(("+ warm starts", ScreeningKind::Hessian, s));
+    }
+    {
+        let mut s = base();
+        s.use_gap_safe_aug = false;
+        v.push(("+ sweep updates", ScreeningKind::Hessian, s));
+    }
+    v.push(("+ gap safe", ScreeningKind::Hessian, base()));
+    v
+}
+
+pub fn run(cfg: &ExpConfig) -> Result<(), String> {
+    let (n, p, s) = cfg.appendix_dim();
+    struct Cell {
+        variant: usize,
+        rho: f64,
+        rep: u64,
+    }
+    let vs = variants();
+    let mut cells = Vec::new();
+    for variant in 0..vs.len() {
+        for &rho in &[0.4, 0.8] {
+            for rep in 0..cfg.reps as u64 {
+                cells.push(Cell { variant, rho, rep });
+            }
+        }
+    }
+    let vs_ref = &vs;
+    let results = cfg.coordinator().run_with_progress("fig10", cells, |_, c| {
+        let data = simulate(n, p, s, c.rho, 2.0, Loss::Gaussian, cfg.cell_seed(6_000, c.rep));
+        let (name, kind, settings) = &vs_ref[c.variant];
+        let (_, secs) = fit_timed(&data, *kind, settings);
+        (*name, c.rho, secs)
+    });
+
+    let mut table = Table::new(&["Variant", "rho", "Time (s)", "CI lo", "CI hi"]);
+    for (name, _, _) in &vs {
+        for &rho in &[0.4, 0.8] {
+            let times: Vec<f64> = results
+                .iter()
+                .filter(|(v, r, _)| v == name && *r == rho)
+                .map(|(_, _, t)| *t)
+                .collect();
+            let sm = Summary::of(&times);
+            table.row(vec![
+                name.to_string(),
+                format!("{rho}"),
+                format!("{}", sig_figs(sm.mean, 3)),
+                format!("{}", sig_figs(sm.lo(), 3)),
+                format!("{}", sig_figs(sm.hi(), 3)),
+            ]);
+        }
+    }
+    println!("\nFigure 10 — incremental feature ablation");
+    println!("{}", table.render());
+    write_csv(cfg, "fig10_ablation", &table);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_are_cumulative() {
+        let vs = variants();
+        assert_eq!(vs.len(), 5);
+        assert_eq!(vs[0].1, ScreeningKind::None);
+        assert!(!vs[0].2.hessian_warm_starts);
+        assert!(vs[2].2.hessian_warm_starts);
+        assert!(!vs[2].2.hessian_sweep_updates);
+        assert!(vs[3].2.hessian_sweep_updates);
+        assert!(vs[4].2.use_gap_safe_aug);
+    }
+
+    #[test]
+    fn screening_beats_vanilla_on_wide_design() {
+        let data = simulate(50, 1_500, 5, 0.4, 2.0, Loss::Gaussian, 11);
+        let vs = variants();
+        let (v_fit, _) = fit_timed(&data, vs[0].1, &vs[0].2);
+        let (s_fit, _) = fit_timed(&data, vs[1].1, &vs[1].2);
+        // screening shrinks the subproblem by orders of magnitude
+        assert!(s_fit.mean_screened() * 5.0 < v_fit.mean_screened());
+    }
+}

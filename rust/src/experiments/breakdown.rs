@@ -1,0 +1,86 @@
+//! Appendix F.10 (Figures 12–14): runtime breakdown along the path —
+//! how much of each step goes to coordinate descent, KKT checks,
+//! Hessian updates and screening, for the e2006-tfidf, madelon and
+//! rcv1 analogues, Hessian vs working+.
+
+use super::*;
+use crate::data::dataset_by_name;
+use crate::metrics::{sig_figs, Table};
+
+pub fn run(cfg: &ExpConfig) -> Result<(), String> {
+    let mut table = Table::new(&[
+        "Dataset", "Method", "CD (s)", "KKT (s)", "Hessian (s)", "Screen (s)", "Total (s)",
+    ]);
+    let mut series =
+        String::from("dataset,method,step,lambda,t_cd,t_kkt,t_hessian,t_screen,active\n");
+    for name in ["e2006-tfidf", "madelon", "rcv1"] {
+        let mut spec = dataset_by_name(name).ok_or("unknown dataset")?;
+        if !cfg.full {
+            spec.n = (spec.n / 4).max(100);
+            spec.p = (spec.p / 4).max(100);
+        }
+        let data = spec.generate(0);
+        for kind in [ScreeningKind::Hessian, ScreeningKind::Working] {
+            let (fit, secs) = fit_timed(&data, kind, &paper_settings());
+            let sum = |f: fn(&crate::path::StepStats) -> f64| -> f64 {
+                fit.steps.iter().map(f).sum()
+            };
+            table.row(vec![
+                name.into(),
+                kind.name().into(),
+                format!("{}", sig_figs(sum(|s| s.t_cd), 3)),
+                format!("{}", sig_figs(sum(|s| s.t_kkt), 3)),
+                format!("{}", sig_figs(sum(|s| s.t_hessian), 3)),
+                format!("{}", sig_figs(sum(|s| s.t_screen), 3)),
+                format!("{}", sig_figs(secs, 3)),
+            ]);
+            for (k, s) in fit.steps.iter().enumerate() {
+                series.push_str(&format!(
+                    "{name},{},{k},{:.6e},{:.6},{:.6},{:.6},{:.6},{}\n",
+                    kind.name(),
+                    s.lambda,
+                    s.t_cd,
+                    s.t_kkt,
+                    s.t_hessian,
+                    s.t_screen,
+                    s.active
+                ));
+            }
+        }
+    }
+    println!("\nFigures 12–14 — runtime breakdown along the path");
+    println!("{}", table.render());
+    write_csv(cfg, "fig12_breakdown", &table);
+    write_text(cfg, "fig12_series.csv", &series);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_timers_cover_most_of_total() {
+        let data = simulate(100, 600, 6, 0.4, 2.0, Loss::Gaussian, 14);
+        let (fit, secs) = fit_timed(&data, ScreeningKind::Hessian, &paper_settings());
+        let tracked: f64 = fit
+            .steps
+            .iter()
+            .map(|s| s.t_cd + s.t_kkt + s.t_hessian + s.t_screen)
+            .sum();
+        assert!(tracked <= secs * 1.01, "tracked {tracked} > total {secs}");
+        assert!(
+            tracked >= secs * 0.4,
+            "timers only cover {:.0}% of the fit",
+            100.0 * tracked / secs
+        );
+    }
+
+    #[test]
+    fn working_spends_no_hessian_time() {
+        let data = simulate(60, 300, 5, 0.4, 2.0, Loss::Gaussian, 15);
+        let (fit, _) = fit_timed(&data, ScreeningKind::Working, &paper_settings());
+        let th: f64 = fit.steps.iter().map(|s| s.t_hessian).sum();
+        assert_eq!(th, 0.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Appendix F.7 (Figure 9): sensitivity to γ — the fraction of the
+//! strong rule's unit bound mixed into the Hessian estimate. Sweeps
+//! γ ∈ [0.001, 0.3], recording screened counts, violations and time
+//! (relative per ρ level, as in the paper's figure).
+
+use super::*;
+use crate::metrics::{sig_figs, Summary, Table};
+
+pub fn run(cfg: &ExpConfig) -> Result<(), String> {
+    let gammas = [0.001, 0.003, 0.01, 0.03, 0.1, 0.3];
+    let (n, p, s) = cfg.high_dim();
+    struct Cell {
+        gamma: f64,
+        rho: f64,
+        rep: u64,
+    }
+    let mut cells = Vec::new();
+    for &gamma in &gammas {
+        for &rho in &[0.0, 0.4, 0.8] {
+            for rep in 0..cfg.reps as u64 {
+                cells.push(Cell { gamma, rho, rep });
+            }
+        }
+    }
+    let results = cfg.coordinator().run_with_progress("fig9", cells, |_, c| {
+        let data = simulate(n, p, s, c.rho, 2.0, Loss::Gaussian, cfg.cell_seed(5_000, c.rep));
+        let mut settings = paper_settings();
+        settings.gamma = c.gamma;
+        let (fit, secs) = fit_timed(&data, ScreeningKind::Hessian, &settings);
+        let steps = fit.steps.len().max(1) as f64;
+        (
+            c.gamma,
+            c.rho,
+            fit.mean_screened(),
+            fit.total_violations() as f64 / steps,
+            secs,
+        )
+    });
+
+    let mut table = Table::new(&["gamma", "rho", "Screened", "Violations", "Rel. time"]);
+    for &rho in &[0.0, 0.4, 0.8] {
+        // relative to the mean over γ at this ρ (paper's normalization)
+        let rho_times: Vec<f64> = results
+            .iter()
+            .filter(|r| r.1 == rho)
+            .map(|r| r.4)
+            .collect();
+        let rho_mean = rho_times.iter().sum::<f64>() / rho_times.len().max(1) as f64;
+        for &gamma in &gammas {
+            let rows: Vec<_> = results
+                .iter()
+                .filter(|r| r.0 == gamma && r.1 == rho)
+                .collect();
+            let scr = Summary::of(&rows.iter().map(|r| r.2).collect::<Vec<_>>());
+            let vio = Summary::of(&rows.iter().map(|r| r.3).collect::<Vec<_>>());
+            let t = Summary::of(&rows.iter().map(|r| r.4).collect::<Vec<_>>());
+            table.row(vec![
+                format!("{gamma}"),
+                format!("{rho}"),
+                format!("{}", sig_figs(scr.mean, 4)),
+                format!("{}", sig_figs(vio.mean, 3)),
+                format!("{}", sig_figs(t.mean / rho_mean, 3)),
+            ]);
+        }
+    }
+    println!("\nFigure 9 — γ sweep (screened, violations, relative time)");
+    println!("{}", table.render());
+    write_csv(cfg, "fig9_gamma", &table);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn larger_gamma_fewer_violations_more_screened() {
+        let mk = |gamma: f64| {
+            let data = simulate(60, 1_000, 8, 0.8, 2.0, Loss::Gaussian, 10);
+            let mut settings = paper_settings();
+            settings.gamma = gamma;
+            fit_timed(&data, ScreeningKind::Hessian, &settings).0
+        };
+        let small = mk(0.0);
+        let large = mk(0.3);
+        assert!(
+            large.total_violations() <= small.total_violations(),
+            "violations: γ=0.3 {} vs γ=0 {}",
+            large.total_violations(),
+            small.total_violations()
+        );
+        assert!(
+            large.mean_screened() >= small.mean_screened(),
+            "screened: γ=0.3 {} vs γ=0 {}",
+            large.mean_screened(),
+            small.mean_screened()
+        );
+    }
+}

@@ -1,0 +1,98 @@
+//! Appendix F.1 (Figure 4): cost of increased path resolution. Fits
+//! paths of length m ∈ {10, 20, 50, 100} on the appendix high-dim
+//! design and the low-dim design, for the four main methods.
+
+use super::*;
+use crate::metrics::{sig_figs, Summary, Table};
+
+pub fn run(cfg: &ExpConfig) -> Result<(), String> {
+    let lengths = [10usize, 20, 50, 100];
+    let scenarios: Vec<(&'static str, (usize, usize, usize), f64)> = vec![
+        ("low-dim", cfg.low_dim(), 1.0),
+        ("high-dim", cfg.appendix_dim(), 2.0),
+    ];
+    struct Cell {
+        scenario: &'static str,
+        m: usize,
+        kind: ScreeningKind,
+        rep: u64,
+    }
+    let mut cells = Vec::new();
+    for (name, _, _) in &scenarios {
+        for &m in &lengths {
+            for kind in main_methods() {
+                for rep in 0..cfg.reps as u64 {
+                    cells.push(Cell {
+                        scenario: name,
+                        m,
+                        kind,
+                        rep,
+                    });
+                }
+            }
+        }
+    }
+    let dims: std::collections::HashMap<&str, ((usize, usize, usize), f64)> = scenarios
+        .iter()
+        .map(|(n, d, s)| (*n, (*d, *s)))
+        .collect();
+    let results = cfg.coordinator().run_with_progress("fig4", cells, |_, c| {
+        let ((n, p, s), snr) = dims[c.scenario];
+        let data = simulate(n, p, s, 0.4, snr, Loss::Gaussian, cfg.cell_seed(1_000, c.rep));
+        let mut settings = paper_settings();
+        settings.path_length = c.m;
+        let (_, secs) = fit_timed(&data, c.kind, &settings);
+        (c.scenario, c.m, c.kind, secs)
+    });
+
+    let mut table = Table::new(&["Scenario", "Path length", "Method", "Time (s)", "CI half"]);
+    for (name, _, _) in &scenarios {
+        for &m in &lengths {
+            for kind in main_methods() {
+                let times: Vec<f64> = results
+                    .iter()
+                    .filter(|(sc, mm, k, _)| *sc == *name && *mm == m && *k == kind)
+                    .map(|(_, _, _, t)| *t)
+                    .collect();
+                let s = Summary::of(&times);
+                table.row(vec![
+                    name.to_string(),
+                    format!("{m}"),
+                    kind.name().into(),
+                    format!("{}", sig_figs(s.mean, 3)),
+                    format!("{}", sig_figs(s.ci_half, 2)),
+                ]);
+            }
+        }
+    }
+    println!("\nFigure 4 — full-path time vs path length");
+    println!("{}", table.render());
+    write_csv(cfg, "fig4_path_length", &table);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn longer_paths_cost_more_but_sublinearly_for_hessian() {
+        let data = simulate(60, 800, 5, 0.4, 2.0, Loss::Gaussian, 3);
+        let mut s10 = paper_settings();
+        s10.path_length = 10;
+        let mut s100 = paper_settings();
+        s100.path_length = 100;
+        let (f10, _) = fit_timed(&data, ScreeningKind::Hessian, &s10);
+        let (f100, _) = fit_timed(&data, ScreeningKind::Hessian, &s100);
+        // More steps on the finer grid...
+        assert!(f100.lambdas.len() > f10.lambdas.len());
+        // ...but pass count grows far slower than 10x (warm starts —
+        // the paper's F.1 point about the marginal price of resolution).
+        assert!(
+            (f100.total_passes() as f64) < 6.0 * f10.total_passes() as f64,
+            "passes {} vs {}",
+            f100.total_passes(),
+            f10.total_passes()
+        );
+    }
+}

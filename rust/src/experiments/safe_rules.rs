@@ -1,0 +1,74 @@
+//! Appendix F.6 (Figure 8): the safe rules the main paper omits —
+//! EDPP, Gap Safe and Dynamic Sasvi — on the high-dimensional
+//! least-squares scenario, with the Hessian rule as the reference.
+//! (The paper found these "performed so poorly that we omit the
+//! results"; the expected shape is a large gap to the Hessian rule.)
+
+use super::*;
+use crate::metrics::{sig_figs, Summary, Table};
+
+pub fn run(cfg: &ExpConfig) -> Result<(), String> {
+    let (n, p, s) = cfg.high_dim();
+    let methods = [
+        ScreeningKind::Hessian,
+        ScreeningKind::GapSafe,
+        ScreeningKind::Edpp,
+        ScreeningKind::Sasvi,
+    ];
+    struct Cell {
+        kind: ScreeningKind,
+        rho: f64,
+        rep: u64,
+    }
+    let mut cells = Vec::new();
+    for &kind in &methods {
+        for &rho in &[0.0, 0.4, 0.8] {
+            for rep in 0..cfg.reps as u64 {
+                cells.push(Cell { kind, rho, rep });
+            }
+        }
+    }
+    let results = cfg.coordinator().run_with_progress("fig8", cells, |_, c| {
+        let data = simulate(n, p, s, c.rho, 2.0, Loss::Gaussian, cfg.cell_seed(4_000, c.rep));
+        let (fit, secs) = fit_timed(&data, c.kind, &paper_settings());
+        (c.kind, c.rho, secs, fit.mean_screened())
+    });
+
+    let mut table = Table::new(&["Method", "rho", "Time (s)", "CI half", "Screened"]);
+    for &kind in &methods {
+        for &rho in &[0.0, 0.4, 0.8] {
+            let rows: Vec<_> = results
+                .iter()
+                .filter(|(k, r, _, _)| *k == kind && *r == rho)
+                .collect();
+            let sm = Summary::of(&rows.iter().map(|r| r.2).collect::<Vec<_>>());
+            let scr = rows.iter().map(|r| r.3).sum::<f64>() / rows.len().max(1) as f64;
+            table.row(vec![
+                kind.name().into(),
+                format!("{rho}"),
+                format!("{}", sig_figs(sm.mean, 3)),
+                format!("{}", sig_figs(sm.ci_half, 2)),
+                format!("{}", sig_figs(scr, 4)),
+            ]);
+        }
+    }
+    println!("\nFigure 8 — safe rules (EDPP / Gap Safe / Sasvi) vs Hessian");
+    println!("{}", table.render());
+    write_csv(cfg, "fig8_safe_rules", &table);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn safe_rules_screen_far_more_conservatively() {
+        let data = simulate(50, 800, 5, 0.4, 2.0, Loss::Gaussian, 9);
+        let (h, _) = fit_timed(&data, ScreeningKind::Hessian, &paper_settings());
+        let (g, _) = fit_timed(&data, ScreeningKind::GapSafe, &paper_settings());
+        let (sv, _) = fit_timed(&data, ScreeningKind::Sasvi, &paper_settings());
+        assert!(h.mean_screened() < g.mean_screened());
+        assert!(h.mean_screened() < sv.mean_screened());
+    }
+}

@@ -1,0 +1,90 @@
+//! Appendix F.2 (Figure 5): sensitivity to the convergence tolerance.
+//! ε ∈ {10⁻³, 10⁻⁴, 10⁻⁵, 10⁻⁶} on the appendix design, both losses,
+//! four methods.
+
+use super::*;
+use crate::metrics::{sig_figs, Summary, Table};
+
+pub fn run(cfg: &ExpConfig) -> Result<(), String> {
+    let tols = [1e-3, 1e-4, 1e-5, 1e-6];
+    let (n, p, s) = cfg.appendix_dim();
+    struct Cell {
+        loss: Loss,
+        eps: f64,
+        kind: ScreeningKind,
+        rep: u64,
+    }
+    let mut cells = Vec::new();
+    for loss in [Loss::Gaussian, Loss::Logistic] {
+        for &eps in &tols {
+            for kind in main_methods() {
+                for rep in 0..cfg.reps as u64 {
+                    cells.push(Cell {
+                        loss,
+                        eps,
+                        kind,
+                        rep,
+                    });
+                }
+            }
+        }
+    }
+    let results = cfg.coordinator().run_with_progress("fig5", cells, |_, c| {
+        let data = simulate(n, p, s, 0.4, 2.0, c.loss, cfg.cell_seed(2_000, c.rep));
+        let mut settings = paper_settings();
+        settings.cd.eps = c.eps;
+        let (_, secs) = fit_timed(&data, c.kind, &settings);
+        (c.loss, c.eps, c.kind, secs)
+    });
+
+    let mut table = Table::new(&["Loss", "eps", "Method", "Time (s)", "CI half"]);
+    for loss in [Loss::Gaussian, Loss::Logistic] {
+        for &eps in &tols {
+            for kind in main_methods() {
+                let times: Vec<f64> = results
+                    .iter()
+                    .filter(|(l, e, k, _)| *l == loss && *e == eps && *k == kind)
+                    .map(|(_, _, _, t)| *t)
+                    .collect();
+                let sm = Summary::of(&times);
+                table.row(vec![
+                    format!("{loss:?}"),
+                    format!("{eps:e}"),
+                    kind.name().into(),
+                    format!("{}", sig_figs(sm.mean, 3)),
+                    format!("{}", sig_figs(sm.ci_half, 2)),
+                ]);
+            }
+        }
+    }
+    println!("\nFigure 5 — full-path time vs convergence tolerance");
+    println!("{}", table.render());
+    write_csv(cfg, "fig5_tolerance", &table);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hessian_lead_survives_tight_tolerance() {
+        // F.2's point: the gap between Hessian and the rest never
+        // disappears as ε tightens.
+        let data = simulate(60, 800, 5, 0.4, 2.0, Loss::Gaussian, 5);
+        let mut tight = paper_settings();
+        tight.cd.eps = 1e-6;
+        let (h, _) = fit_timed(&data, ScreeningKind::Hessian, &tight);
+        let (w, _) = fit_timed(&data, ScreeningKind::Working, &tight);
+        assert!(h.total_passes() <= w.total_passes() * 2);
+        // both still converge to matching solutions
+        let bh = h.beta_dense(h.lambdas.len() - 1, 800);
+        let bw = w.beta_dense(h.lambdas.len().min(w.lambdas.len()) - 1, 800);
+        let diff = bh
+            .iter()
+            .zip(&bw)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(diff < 1e-2, "solutions diverged: {diff}");
+    }
+}

@@ -1,0 +1,473 @@
+//! Hessian tracking: the paper's Algorithm 1 (sweep-operator updates of
+//! H = X_AᵀD(w)X_A and Q = H⁻¹ as the active set changes), the
+//! Appendix-C preconditioner, and the eq.-(7) warm start.
+//!
+//! Complexity matches §3.3.1: a step with leaving set C, entering set D
+//! and persisting set E costs
+//! O(|D|²n + n|D||E| + |C|³ + |C||E|²) — the Gram panels against X
+//! dominate, exactly as the paper argues, and this is what makes the
+//! rule affordable relative to an O(|A|³ + |A|²n) rebuild.
+
+use crate::linalg::cholesky::Cholesky;
+use crate::linalg::eigen::SymEigen;
+use crate::linalg::{DenseMatrix, Design};
+
+/// Tracks H and H⁻¹ for the current active set, in a fixed column order
+/// (`active[k]` ↔ row/column k of `h`/`q`).
+#[derive(Clone, Debug)]
+pub struct HessianTracker {
+    active: Vec<usize>,
+    /// H = X_AᵀD(w)X_A (possibly already including the preconditioner α
+    /// on the diagonal — see `precondition`).
+    h: DenseMatrix,
+    /// Q = H⁻¹ (preconditioned when applicable).
+    q: DenseMatrix,
+    /// Appendix-C ridge α = n·10⁻⁴.
+    alpha: f64,
+    /// Count of sweep updates / rebuilds, for the experiment breakdowns.
+    pub n_sweep_updates: usize,
+    pub n_rebuilds: usize,
+}
+
+impl HessianTracker {
+    /// `alpha` is the preconditioning constant (paper: n·10⁻⁴).
+    pub fn new(alpha: f64) -> Self {
+        Self {
+            active: Vec::new(),
+            h: DenseMatrix::zeros(0, 0),
+            q: DenseMatrix::zeros(0, 0),
+            alpha,
+            n_sweep_updates: 0,
+            n_rebuilds: 0,
+        }
+    }
+
+    pub fn active(&self) -> &[usize] {
+        &self.active
+    }
+
+    pub fn dim(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn h(&self) -> &DenseMatrix {
+        &self.h
+    }
+
+    pub fn q(&self) -> &DenseMatrix {
+        &self.q
+    }
+
+    /// v = Q·s for a vector ordered like `active`.
+    pub fn q_times(&self, s: &[f64]) -> Vec<f64> {
+        assert_eq!(s.len(), self.dim());
+        let mut out = vec![0.0; self.dim()];
+        self.q.gemv(s, &mut out);
+        out
+    }
+
+    /// Rebuild H and Q from scratch for `new_active` (weights `w`,
+    /// `None` = unweighted). O(|A|²n + |A|³). Used at the first step,
+    /// for GLM "full updates" (§3.3.3) and by the no-sweep ablation.
+    pub fn rebuild<D: Design + ?Sized>(
+        &mut self,
+        design: &D,
+        new_active: &[usize],
+        w: Option<&[f64]>,
+    ) {
+        let k = new_active.len();
+        let mut h = DenseMatrix::zeros(k, k);
+        for a in 0..k {
+            for b in 0..=a {
+                let v = design.gram_weighted(new_active[a], new_active[b], w);
+                *h.at_mut(a, b) = v;
+                *h.at_mut(b, a) = v;
+            }
+        }
+        self.active = new_active.to_vec();
+        self.install(h);
+        self.n_rebuilds += 1;
+    }
+
+    /// Algorithm 1: update from the current active set to `new_active`
+    /// with the *reduction* step (Schur complement on the leaving block)
+    /// followed by the *augmentation* step (block-inverse on the
+    /// entering block). Weights must be the same as those used to build
+    /// the current H (sweep updates are only valid when D(w) is fixed —
+    /// §3.3.3; for GLMs that is the upper-bound regime).
+    pub fn update<D: Design + ?Sized>(
+        &mut self,
+        design: &D,
+        new_active: &[usize],
+        w: Option<&[f64]>,
+    ) {
+        let new_set: std::collections::HashSet<usize> = new_active.iter().copied().collect();
+        // Positions (in the current ordering) that stay / leave.
+        let keep_pos: Vec<usize> = (0..self.active.len())
+            .filter(|&k| new_set.contains(&self.active[k]))
+            .collect();
+        let drop_pos: Vec<usize> = (0..self.active.len())
+            .filter(|&k| !new_set.contains(&self.active[k]))
+            .collect();
+
+        // --- Reduction: Q_EE − Q_EC Q_CC⁻¹ Q_CE ; H → H_EE. ---
+        if !drop_pos.is_empty() {
+            let e = keep_pos.len();
+            let c = drop_pos.len();
+            let mut q_ee = DenseMatrix::zeros(e, e);
+            let mut q_ec = DenseMatrix::zeros(e, c);
+            let mut q_cc = DenseMatrix::zeros(c, c);
+            let mut h_ee = DenseMatrix::zeros(e, e);
+            for (a, &pa) in keep_pos.iter().enumerate() {
+                for (b, &pb) in keep_pos.iter().enumerate() {
+                    *q_ee.at_mut(a, b) = self.q.at(pa, pb);
+                    *h_ee.at_mut(a, b) = self.h.at(pa, pb);
+                }
+                for (b, &pb) in drop_pos.iter().enumerate() {
+                    *q_ec.at_mut(a, b) = self.q.at(pa, pb);
+                }
+            }
+            for (a, &pa) in drop_pos.iter().enumerate() {
+                for (b, &pb) in drop_pos.iter().enumerate() {
+                    *q_cc.at_mut(a, b) = self.q.at(pa, pb);
+                }
+            }
+            // Q_CC is a principal sub-matrix of an SPD matrix ⇒ SPD.
+            let q_new = match Cholesky::factor(&q_cc) {
+                Ok(ch) => {
+                    // M = Q_CC⁻¹ Q_CE  (solve per column of Q_ECᵀ)
+                    let mut m = DenseMatrix::zeros(c, e);
+                    let mut col = vec![0.0; c];
+                    for j in 0..e {
+                        for i in 0..c {
+                            col[i] = q_ec.at(j, i);
+                        }
+                        ch.solve_in_place(&mut col);
+                        for i in 0..c {
+                            *m.at_mut(i, j) = col[i];
+                        }
+                    }
+                    // Q_EE − Q_EC·M
+                    let correction = q_ec.gemm(&m);
+                    let mut q_new = q_ee;
+                    for j in 0..e {
+                        for i in 0..e {
+                            *q_new.at_mut(i, j) -= correction.at(i, j);
+                        }
+                    }
+                    q_new
+                }
+                Err(_) => {
+                    // Degenerate Q_CC (can happen after aggressive
+                    // preconditioning): fall back to inverting H_EE.
+                    invert_spd_preconditioned(&h_ee, self.alpha)
+                }
+            };
+            self.active = keep_pos.iter().map(|&k| self.active[k]).collect();
+            self.h = h_ee;
+            self.q = q_new;
+        }
+
+        // --- Augmentation: entering block D. ---
+        let have: std::collections::HashSet<usize> = self.active.iter().copied().collect();
+        let entering: Vec<usize> = new_active
+            .iter()
+            .copied()
+            .filter(|j| !have.contains(j))
+            .collect();
+        if !entering.is_empty() {
+            let e = self.active.len();
+            let d = entering.len();
+            // Gram panels against X (the O(n|D||E|) + O(n|D|²) cost).
+            let mut g_ed = DenseMatrix::zeros(e, d);
+            let mut g_dd = DenseMatrix::zeros(d, d);
+            for (b, &jd) in entering.iter().enumerate() {
+                for (a, &je) in self.active.iter().enumerate() {
+                    *g_ed.at_mut(a, b) = design.gram_weighted(je, jd, w);
+                }
+                for (a, &ja) in entering.iter().enumerate().take(b + 1) {
+                    let v = design.gram_weighted(ja, jd, w);
+                    *g_dd.at_mut(a, b) = v;
+                    *g_dd.at_mut(b, a) = v;
+                }
+            }
+            // T = Q·G_ED ; S = G_DD − G_EDᵀ·T (Schur complement).
+            let t = self.q.gemm(&g_ed);
+            let mut s = g_dd.clone();
+            let gt = g_ed.t_gemm(&t); // (d×d) = G_EDᵀ T
+            for j in 0..d {
+                for i in 0..d {
+                    *s.at_mut(i, j) -= gt.at(i, j);
+                }
+            }
+            // S⁻¹ with the Appendix-C preconditioner when needed.
+            let s_inv = invert_spd_preconditioned(&s, self.alpha);
+
+            // Assemble Q_new = [[Q + T S⁻¹ Tᵀ, −T S⁻¹], [−S⁻¹ Tᵀ, S⁻¹]].
+            let ts = t.gemm(&s_inv); // e×d
+            let mut q_new = DenseMatrix::zeros(e + d, e + d);
+            let tst = ts.gemm(&t.transpose()); // e×e
+            for j in 0..e {
+                for i in 0..e {
+                    *q_new.at_mut(i, j) = self.q.at(i, j) + tst.at(i, j);
+                }
+            }
+            for j in 0..d {
+                for i in 0..e {
+                    *q_new.at_mut(i, e + j) = -ts.at(i, j);
+                    *q_new.at_mut(e + j, i) = -ts.at(i, j);
+                }
+                for i in 0..d {
+                    *q_new.at_mut(e + i, e + j) = s_inv.at(i, j);
+                }
+            }
+            // H_new = [[H, G_ED], [G_EDᵀ, G_DD]].
+            let mut h_new = DenseMatrix::zeros(e + d, e + d);
+            for j in 0..e {
+                for i in 0..e {
+                    *h_new.at_mut(i, j) = self.h.at(i, j);
+                }
+            }
+            for j in 0..d {
+                for i in 0..e {
+                    *h_new.at_mut(i, e + j) = g_ed.at(i, j);
+                    *h_new.at_mut(e + j, i) = g_ed.at(i, j);
+                }
+                for i in 0..d {
+                    *h_new.at_mut(e + i, e + j) = g_dd.at(i, j);
+                }
+            }
+            self.active.extend_from_slice(&entering);
+            self.h = h_new;
+            self.q = q_new;
+        }
+        self.n_sweep_updates += 1;
+    }
+
+    /// Install a freshly computed H, inverting it with preconditioning.
+    fn install(&mut self, h: DenseMatrix) {
+        self.q = invert_spd_preconditioned(&h, self.alpha);
+        self.h = h;
+    }
+
+    /// Warm start of eq. (7): given signs s of β̂_A and the λ decrement,
+    /// returns Δβ (ordered like `active`) = (λ_k − λ_{k+1}) · Q · s.
+    pub fn warm_start_delta(&self, signs: &[f64], lambda_drop: f64) -> Vec<f64> {
+        let mut d = self.q_times(signs);
+        for v in d.iter_mut() {
+            *v *= lambda_drop;
+        }
+        d
+    }
+
+    /// Max |H·Q − I| — a health metric used in tests and debug assertions.
+    pub fn inverse_error(&self) -> f64 {
+        let k = self.dim();
+        if k == 0 {
+            return 0.0;
+        }
+        let prod = self.h.gemm(&self.q);
+        prod.max_abs_diff(&DenseMatrix::identity(k))
+    }
+}
+
+/// Invert an SPD (or nearly-SPD) matrix with the Appendix-C policy:
+/// try Cholesky; on failure (or a dangerously small pivot) fall back to
+/// the spectral route Q(Λ + αI)⁻¹Qᵀ, adding α only when
+/// min eig < α, exactly as the paper prescribes.
+pub fn invert_spd_preconditioned(a: &DenseMatrix, alpha: f64) -> DenseMatrix {
+    let k = a.nrows();
+    if k == 0 {
+        return DenseMatrix::zeros(0, 0);
+    }
+    // Fast path: well-conditioned Cholesky.
+    if let Ok(ch) = Cholesky::factor(a) {
+        // Check the smallest pivot as a proxy for min eig.
+        let min_pivot = (0..k).map(|i| ch.l().at(i, i)).fold(f64::INFINITY, f64::min);
+        if min_pivot * min_pivot > alpha {
+            return ch.inverse();
+        }
+    }
+    // Appendix C: spectral decomposition; shift if min eig < α.
+    let eig = SymEigen::factor(a);
+    if eig.min_eigenvalue() < alpha {
+        eig.apply_spectral(|l| 1.0 / (l + alpha))
+    } else {
+        eig.apply_spectral(|l| 1.0 / l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DesignMatrix;
+    use crate::testkit::{forall, Config, Gen};
+
+    fn gram_direct(design: &DesignMatrix, active: &[usize], w: Option<&[f64]>) -> DenseMatrix {
+        let k = active.len();
+        let mut h = DenseMatrix::zeros(k, k);
+        for a in 0..k {
+            for b in 0..k {
+                *h.at_mut(a, b) = design.gram_weighted(active[a], active[b], w);
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn rebuild_matches_direct_gram_and_inverse() {
+        let mut g = Gen::new(1);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(30, 10));
+        let mut t = HessianTracker::new(1e-8);
+        t.rebuild(&x, &[1, 4, 7], None);
+        let h = gram_direct(&x, &[1, 4, 7], None);
+        assert!(t.h().max_abs_diff(&h) < 1e-12);
+        assert!(t.inverse_error() < 1e-8, "inv err {}", t.inverse_error());
+    }
+
+    #[test]
+    fn augmentation_only_matches_rebuild() {
+        let mut g = Gen::new(2);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(40, 12));
+        let mut t = HessianTracker::new(1e-8);
+        t.rebuild(&x, &[0, 3], None);
+        t.update(&x, &[0, 3, 5, 9], None);
+        let mut fresh = HessianTracker::new(1e-8);
+        fresh.rebuild(&x, &[0, 3, 5, 9], None);
+        assert_eq!(t.active(), &[0, 3, 5, 9]);
+        assert!(t.h().max_abs_diff(fresh.h()) < 1e-10);
+        assert!(t.q().max_abs_diff(fresh.q()) < 1e-8);
+    }
+
+    #[test]
+    fn reduction_only_matches_rebuild() {
+        let mut g = Gen::new(3);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(40, 12));
+        let mut t = HessianTracker::new(1e-8);
+        t.rebuild(&x, &[0, 2, 5, 9, 11], None);
+        t.update(&x, &[0, 5, 11], None);
+        let mut fresh = HessianTracker::new(1e-8);
+        fresh.rebuild(&x, &[0, 5, 11], None);
+        assert_eq!(t.active(), &[0, 5, 11]);
+        assert!(t.h().max_abs_diff(fresh.h()) < 1e-9);
+        assert!(t.q().max_abs_diff(fresh.q()) < 1e-7);
+    }
+
+    #[test]
+    fn simultaneous_enter_and_leave() {
+        let mut g = Gen::new(4);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(50, 15));
+        let mut t = HessianTracker::new(1e-8);
+        t.rebuild(&x, &[1, 2, 3, 8], None);
+        t.update(&x, &[2, 8, 10, 14, 4], None);
+        let expected: Vec<usize> = vec![2, 8, 10, 14, 4];
+        let mut sorted_active = t.active().to_vec();
+        let mut sorted_expected = expected.clone();
+        sorted_active.sort_unstable();
+        sorted_expected.sort_unstable();
+        assert_eq!(sorted_active, sorted_expected);
+        let h = gram_direct(&x, t.active(), None);
+        assert!(t.h().max_abs_diff(&h) < 1e-9);
+        assert!(t.inverse_error() < 1e-7);
+    }
+
+    #[test]
+    fn weighted_updates_match() {
+        let mut g = Gen::new(5);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(30, 8));
+        let w: Vec<f64> = (0..30).map(|i| 0.1 + 0.2 * ((i % 4) as f64)).collect();
+        let mut t = HessianTracker::new(1e-8);
+        t.rebuild(&x, &[0, 2], Some(&w));
+        t.update(&x, &[0, 2, 6], Some(&w));
+        let h = gram_direct(&x, t.active(), Some(&w));
+        assert!(t.h().max_abs_diff(&h) < 1e-10);
+        assert!(t.inverse_error() < 1e-8);
+    }
+
+    #[test]
+    fn empty_transitions() {
+        let mut g = Gen::new(6);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(20, 6));
+        let mut t = HessianTracker::new(1e-8);
+        t.rebuild(&x, &[], None);
+        assert_eq!(t.dim(), 0);
+        t.update(&x, &[3], None);
+        assert_eq!(t.active(), &[3]);
+        t.update(&x, &[], None);
+        assert_eq!(t.dim(), 0);
+        assert_eq!(t.inverse_error(), 0.0);
+    }
+
+    #[test]
+    fn duplicate_columns_are_preconditioned_not_fatal() {
+        // Two identical columns ⇒ singular Gram; Appendix-C ridge keeps
+        // the tracker finite.
+        let mut g = Gen::new(7);
+        let mut m = g.gaussian_matrix(20, 4);
+        let c0: Vec<f64> = m.col(0).to_vec();
+        m.col_mut(1).copy_from_slice(&c0);
+        let x = DesignMatrix::Dense(m);
+        let mut t = HessianTracker::new(20.0 * 1e-4);
+        t.rebuild(&x, &[0, 1], None);
+        assert!(t.q().data().iter().all(|v| v.is_finite()));
+        let d = t.warm_start_delta(&[1.0, 1.0], 0.5);
+        assert!(d.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn warm_start_delta_formula() {
+        let mut g = Gen::new(8);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(25, 5));
+        let mut t = HessianTracker::new(1e-10);
+        t.rebuild(&x, &[0, 1, 2], None);
+        let signs = vec![1.0, -1.0, 1.0];
+        let d = t.warm_start_delta(&signs, 0.3);
+        // compare against direct solve H x = s scaled by 0.3
+        let h = gram_direct(&x, &[0, 1, 2], None);
+        let sol = Cholesky::factor(&h).unwrap().solve(&signs);
+        for i in 0..3 {
+            assert!((d[i] - 0.3 * sol[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn property_random_transition_chains() {
+        forall(Config { cases: 12, seed: 99 }, |g| {
+            let n = g.usize_in(15, 40);
+            let p = g.usize_in(6, 14);
+            let x = DesignMatrix::Dense(g.gaussian_matrix(n, p));
+            let mut t = HessianTracker::new(1e-8);
+            let mut current: Vec<usize> = Vec::new();
+            for _step in 0..5 {
+                let k = g.usize_in(0, p.min(n) - 1);
+                let next = g.rng.sample_indices(p, k);
+                if current.is_empty() {
+                    t.rebuild(&x, &next, None);
+                } else {
+                    t.update(&x, &next, None);
+                }
+                current = next;
+                let h = gram_direct(&x, t.active(), None);
+                if t.h().max_abs_diff(&h) > 1e-7 {
+                    return Err(format!("H drift {}", t.h().max_abs_diff(&h)));
+                }
+                if t.inverse_error() > 1e-5 {
+                    return Err(format!("Q drift {}", t.inverse_error()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sweep_counters_track_calls() {
+        let mut g = Gen::new(11);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(20, 6));
+        let mut t = HessianTracker::new(1e-8);
+        t.rebuild(&x, &[0], None);
+        t.update(&x, &[0, 1], None);
+        t.update(&x, &[1], None);
+        assert_eq!(t.n_rebuilds, 1);
+        assert_eq!(t.n_sweep_updates, 2);
+    }
+}

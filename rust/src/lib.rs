@@ -1,0 +1,68 @@
+//! # hessian-screening
+//!
+//! A production-grade reproduction of **“The Hessian Screening Rule”**
+//! (Johan Larsson & Jonas Wallin, NeurIPS 2022): pathwise ℓ₁-regularized
+//! GLM solving (lasso, logistic, Poisson) with the paper's second-order
+//! sequential screening rule, sweep-operator Hessian updates, Hessian
+//! warm starts, and re-implementations of every baseline the paper
+//! compares against (Strong rule, working(+) sets, Celer, Blitz,
+//! Gap Safe, EDPP, Dynamic Sasvi).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: path driver (paper Alg. 2),
+//!   coordinate-descent solver, screening rules, Hessian machinery,
+//!   data substrate, experiment harness, CLI.
+//! * **L2 (python/compile/model.py)** — JAX formulations of the numeric
+//!   hot spots (correlation sweep Xᵀr, weighted Gram blocks), AOT-lowered
+//!   to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels backing L2,
+//!   validated against a pure-jnp oracle.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) so the solve path never touches Python.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hessian_screening::prelude::*;
+//!
+//! // Simulate a small lasso problem (n=100, p=50, 5 true signals).
+//! let data = SyntheticSpec::new(100, 50, 5)
+//!     .rho(0.4)
+//!     .snr(2.0)
+//!     .seed(42)
+//!     .generate();
+//!
+//! // Fit a full regularization path with the Hessian screening rule.
+//! let fit = PathFitter::new(Loss::Gaussian, ScreeningKind::Hessian)
+//!     .fit(&data.design, &data.response);
+//! assert!(fit.lambdas.len() > 1);
+//! ```
+
+pub mod cli;
+pub mod coordinator;
+pub mod cv;
+pub mod data;
+pub mod experiments;
+pub mod hessian;
+pub mod linalg;
+pub mod loss;
+pub mod metrics;
+pub mod model;
+pub mod path;
+pub mod penalty;
+pub mod runtime;
+pub mod screening;
+pub mod solver;
+pub mod rng;
+pub mod testkit;
+
+/// Convenient re-exports of the main user-facing types.
+pub mod prelude {
+    pub use crate::data::{standardize, Dataset, DesignMatrix, SyntheticSpec};
+    pub use crate::linalg::{CscMatrix, DenseMatrix, Design};
+    pub use crate::loss::Loss;
+    pub use crate::path::{PathFit, PathFitter, PathSettings};
+    pub use crate::screening::ScreeningKind;
+}

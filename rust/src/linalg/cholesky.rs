@@ -1,0 +1,246 @@
+//! Cholesky factorization of symmetric positive-definite matrices.
+//!
+//! Used by the Hessian machinery: the augmentation step of the sweep
+//! update (Algorithm 1) needs S⁻¹ for the Schur complement
+//! S = X_DᵀX_D − X_DᵀX_A Q X_AᵀX_D, and the initial H⁻¹ at the first
+//! active set is formed by a Cholesky solve. LAPACK is unavailable, so
+//! this is a straightforward right-looking factorization with
+//! column-dot inner loops.
+
+use super::blas;
+use super::DenseMatrix;
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: DenseMatrix,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum CholeskyError {
+    /// Leading minor `k` is not positive definite.
+    NotPositiveDefinite(usize),
+    NotSquare,
+}
+
+impl std::fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholeskyError::NotPositiveDefinite(k) => {
+                write!(f, "matrix not positive definite at pivot {k}")
+            }
+            CholeskyError::NotSquare => write!(f, "matrix not square"),
+        }
+    }
+}
+
+impl std::error::Error for CholeskyError {}
+
+impl Cholesky {
+    /// Factorize a symmetric positive-definite matrix (only the lower
+    /// triangle of `a` is read).
+    pub fn factor(a: &DenseMatrix) -> Result<Self, CholeskyError> {
+        if a.nrows() != a.ncols() {
+            return Err(CholeskyError::NotSquare);
+        }
+        let n = a.nrows();
+        let mut l = DenseMatrix::zeros(n, n);
+        for j in 0..n {
+            // d = a_jj - sum_k l_jk^2
+            let mut d = a.at(j, j);
+            for k in 0..j {
+                let ljk = l.at(j, k);
+                d -= ljk * ljk;
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return Err(CholeskyError::NotPositiveDefinite(j));
+            }
+            let djj = d.sqrt();
+            *l.at_mut(j, j) = djj;
+            for i in j + 1..n {
+                let mut s = a.at(i, j);
+                for k in 0..j {
+                    s -= l.at(i, k) * l.at(j, k);
+                }
+                *l.at_mut(i, j) = s / djj;
+            }
+        }
+        Ok(Self { l })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.l.nrows()
+    }
+
+    pub fn l(&self) -> &DenseMatrix {
+        &self.l
+    }
+
+    /// Solve A x = b in place.
+    pub fn solve_in_place(&self, b: &mut [f64]) {
+        let n = self.dim();
+        assert_eq!(b.len(), n);
+        // Forward: L z = b.
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l.at(i, k) * b[k];
+            }
+            b[i] = s / self.l.at(i, i);
+        }
+        // Backward: Lᵀ x = z.
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for k in i + 1..n {
+                s -= self.l.at(k, i) * b[k];
+            }
+            b[i] = s / self.l.at(i, i);
+        }
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    /// A⁻¹ as a dense matrix (solves against the identity columns).
+    pub fn inverse(&self) -> DenseMatrix {
+        let n = self.dim();
+        let mut inv = DenseMatrix::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e.iter_mut().for_each(|v| *v = 0.0);
+            e[j] = 1.0;
+            self.solve_in_place(&mut e);
+            inv.col_mut(j).copy_from_slice(&e);
+        }
+        inv
+    }
+
+    /// log det A = 2 Σ log l_ii.
+    pub fn log_det(&self) -> f64 {
+        (0..self.dim()).map(|i| self.l.at(i, i).ln()).sum::<f64>() * 2.0
+    }
+}
+
+/// Solve the SPD system A x = b directly (factor + solve), with a ridge
+/// fallback: if factorization fails, retry with A + αI for increasing α.
+/// This mirrors the paper's Appendix-C attitude: never let a borderline
+/// Hessian kill the path.
+pub fn solve_spd_ridge(a: &DenseMatrix, b: &[f64], alpha0: f64) -> Vec<f64> {
+    if let Ok(ch) = Cholesky::factor(a) {
+        return ch.solve(b);
+    }
+    let n = a.nrows();
+    let mut alpha = alpha0.max(1e-12);
+    loop {
+        let mut aa = a.clone();
+        for i in 0..n {
+            *aa.at_mut(i, i) += alpha;
+        }
+        if let Ok(ch) = Cholesky::factor(&aa) {
+            return ch.solve(b);
+        }
+        alpha *= 10.0;
+        assert!(alpha < 1e12, "ridge fallback diverged");
+    }
+}
+
+/// Relative residual ‖Ax − b‖/‖b‖, for tests.
+pub fn rel_residual(a: &DenseMatrix, x: &[f64], b: &[f64]) -> f64 {
+    let n = a.nrows();
+    let mut r = vec![0.0; n];
+    a.gemv(x, &mut r);
+    for i in 0..n {
+        r[i] -= b[i];
+    }
+    blas::nrm2(&r) / blas::nrm2(b).max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn random_spd(n: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut b = DenseMatrix::zeros(n, n);
+        for j in 0..n {
+            for i in 0..n {
+                *b.at_mut(i, j) = rng.next_gaussian();
+            }
+        }
+        let mut a = b.t_gemm(&b);
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f64; // well conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = random_spd(8, 1);
+        let ch = Cholesky::factor(&a).unwrap();
+        let rec = ch.l().gemm(&ch.l().transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn solve_accuracy() {
+        let a = random_spd(12, 2);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let b: Vec<f64> = (0..12).map(|_| rng.next_gaussian()).collect();
+        let ch = Cholesky::factor(&a).unwrap();
+        let x = ch.solve(&b);
+        assert!(rel_residual(&a, &x, &b) < 1e-10);
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = random_spd(6, 4);
+        let inv = Cholesky::factor(&a).unwrap().inverse();
+        let prod = a.gemm(&inv);
+        assert!(prod.max_abs_diff(&DenseMatrix::identity(6)) < 1e-9);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = DenseMatrix::identity(3);
+        *a.at_mut(1, 1) = -1.0;
+        match Cholesky::factor(&a) {
+            Err(CholeskyError::NotPositiveDefinite(1)) => {}
+            other => panic!("expected NPD at pivot 1, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let a = DenseMatrix::zeros(2, 3);
+        assert_eq!(Cholesky::factor(&a).unwrap_err(), CholeskyError::NotSquare);
+    }
+
+    #[test]
+    fn ridge_fallback_on_singular() {
+        // Rank-1 matrix: plain Cholesky fails, ridge version succeeds.
+        let mut a = DenseMatrix::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                *a.at_mut(i, j) = 1.0;
+            }
+        }
+        let x = solve_spd_ridge(&a, &[1.0, 1.0, 1.0], 1e-6);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn log_det_matches_identity_scaling() {
+        let mut a = DenseMatrix::identity(4);
+        for i in 0..4 {
+            *a.at_mut(i, i) = 2.0;
+        }
+        let ch = Cholesky::factor(&a).unwrap();
+        assert!((ch.log_det() - 4.0 * 2.0f64.ln()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,309 @@
+//! Dense column-major matrix.
+//!
+//! Column-major is the right layout for pathwise coordinate descent:
+//! every inner-loop primitive (`col_dot`, `col_axpy`) walks one
+//! contiguous column, and the full correlation sweep Xᵀr is a sequence
+//! of contiguous dot products.
+
+use super::blas;
+use super::Design;
+
+/// Dense n×p matrix, column-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    nrows: usize,
+    ncols: usize,
+    /// data[j*nrows .. (j+1)*nrows] is column j.
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Self {
+            nrows,
+            ncols,
+            data: vec![0.0; nrows * ncols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            *m.at_mut(i, i) = 1.0;
+        }
+        m
+    }
+
+    /// Build from a column-major buffer.
+    pub fn from_col_major(nrows: usize, ncols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), nrows * ncols);
+        Self { nrows, ncols, data }
+    }
+
+    /// Build from row-slices (each of length ncols).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let nrows = rows.len();
+        let ncols = if nrows == 0 { 0 } else { rows[0].len() };
+        let mut m = Self::zeros(nrows, ncols);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), ncols);
+            for (j, &v) in r.iter().enumerate() {
+                *m.at_mut(i, j) = v;
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        unsafe { *self.data.get_unchecked(j * self.nrows + i) }
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        unsafe { self.data.get_unchecked_mut(j * self.nrows + i) }
+    }
+
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// out ← A·v.
+    pub fn gemv(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.ncols);
+        assert_eq!(out.len(), self.nrows);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for j in 0..self.ncols {
+            blas::axpy(v[j], self.col(j), out);
+        }
+    }
+
+    /// out ← Aᵀ·v.
+    pub fn t_gemv_dense(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.nrows);
+        assert_eq!(out.len(), self.ncols);
+        for j in 0..self.ncols {
+            out[j] = blas::dot(self.col(j), v);
+        }
+    }
+
+    /// C ← AᵀB (self = A, m×k result where self is n×m, other n×k).
+    pub fn t_gemm(&self, other: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.nrows, other.nrows);
+        let mut c = DenseMatrix::zeros(self.ncols, other.ncols);
+        for j in 0..other.ncols {
+            let bj = other.col(j);
+            for i in 0..self.ncols {
+                *c.at_mut(i, j) = blas::dot(self.col(i), bj);
+            }
+        }
+        c
+    }
+
+    /// C ← A·B.
+    pub fn gemm(&self, other: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.ncols, other.nrows);
+        let mut c = DenseMatrix::zeros(self.nrows, other.ncols);
+        for j in 0..other.ncols {
+            let bj = other.col(j);
+            let cj = c.col_mut(j);
+            for (k, &bkj) in bj.iter().enumerate() {
+                blas::axpy(bkj, self.col(k), cj);
+            }
+        }
+        c
+    }
+
+    /// Transpose (fresh allocation).
+    pub fn transpose(&self) -> DenseMatrix {
+        let mut t = DenseMatrix::zeros(self.ncols, self.nrows);
+        for j in 0..self.ncols {
+            for i in 0..self.nrows {
+                *t.at_mut(j, i) = self.at(i, j);
+            }
+        }
+        t
+    }
+
+    /// Extract the sub-matrix with the given columns (in order).
+    pub fn select_cols(&self, cols: &[usize]) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.nrows, cols.len());
+        for (jj, &j) in cols.iter().enumerate() {
+            m.col_mut(jj).copy_from_slice(self.col(j));
+        }
+        m
+    }
+
+    /// Symmetric max |a_ij − b_ij|, for tests.
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f64 {
+        assert_eq!(self.nrows, other.nrows);
+        assert_eq!(self.ncols, other.ncols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        blas::nrm2(&self.data)
+    }
+}
+
+impl Design for DenseMatrix {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    #[inline]
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        blas::dot(self.col(j), v)
+    }
+
+    #[inline]
+    fn col_axpy(&self, j: usize, alpha: f64, v: &mut [f64]) {
+        blas::axpy(alpha, self.col(j), v);
+    }
+
+    #[inline]
+    fn col_sq_norm(&self, j: usize) -> f64 {
+        blas::sq_norm(self.col(j))
+    }
+
+    fn gram(&self, i: usize, j: usize) -> f64 {
+        blas::dot(self.col(i), self.col(j))
+    }
+
+    fn gram_weighted(&self, i: usize, j: usize, w: Option<&[f64]>) -> f64 {
+        match w {
+            None => self.gram(i, j),
+            Some(w) => blas::dot_w(self.col(i), self.col(j), w),
+        }
+    }
+
+    fn density(&self) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> DenseMatrix {
+        // [[1, 4], [2, 5], [3, 6]]
+        DenseMatrix::from_col_major(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn indexing_and_cols() {
+        let m = small();
+        assert_eq!(m.at(0, 0), 1.0);
+        assert_eq!(m.at(2, 1), 6.0);
+        assert_eq!(m.col(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn from_rows_matches_col_major() {
+        let m = DenseMatrix::from_rows(&[vec![1.0, 4.0], vec![2.0, 5.0], vec![3.0, 6.0]]);
+        assert_eq!(m, small());
+    }
+
+    #[test]
+    fn gemv_and_t_gemv() {
+        let m = small();
+        let mut out = vec![0.0; 3];
+        m.gemv(&[1.0, -1.0], &mut out);
+        assert_eq!(out, vec![-3.0, -3.0, -3.0]);
+        let mut c = vec![0.0; 2];
+        m.t_gemv_dense(&[1.0, 0.0, 1.0], &mut c);
+        assert_eq!(c, vec![4.0, 10.0]);
+    }
+
+    #[test]
+    fn design_trait_ops() {
+        let m = small();
+        assert_eq!(m.col_dot(0, &[1.0, 1.0, 1.0]), 6.0);
+        assert_eq!(m.col_sq_norm(1), 77.0);
+        let mut v = vec![0.0; 3];
+        m.col_axpy(0, 2.0, &mut v);
+        assert_eq!(v, vec![2.0, 4.0, 6.0]);
+        assert_eq!(m.gram(0, 1), 32.0);
+        let w = vec![1.0, 0.0, 0.0];
+        assert_eq!(m.gram_weighted(0, 1, Some(&w)), 4.0);
+    }
+
+    #[test]
+    fn t_gemm_is_gram() {
+        let m = small();
+        let g = m.t_gemm(&m);
+        assert_eq!(g.nrows(), 2);
+        assert_eq!(g.at(0, 0), 14.0);
+        assert_eq!(g.at(0, 1), 32.0);
+        assert_eq!(g.at(1, 0), 32.0);
+        assert_eq!(g.at(1, 1), 77.0);
+    }
+
+    #[test]
+    fn gemm_identity() {
+        let m = small();
+        let i2 = DenseMatrix::identity(2);
+        assert_eq!(m.gemm(&i2), m);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = small();
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().at(1, 2), 6.0);
+    }
+
+    #[test]
+    fn select_cols_subset() {
+        let m = small();
+        let s = m.select_cols(&[1]);
+        assert_eq!(s.ncols(), 1);
+        assert_eq!(s.col(0), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn subset_gemv_via_design() {
+        let m = small();
+        let mut out = vec![0.0; 3];
+        m.gemv_subset(&[1], &[2.0], &mut out);
+        assert_eq!(out, vec![8.0, 10.0, 12.0]);
+        let mut c = vec![0.0; 1];
+        m.t_gemv_subset(&[1.0, 1.0, 1.0], &[0], &mut c);
+        assert_eq!(c, vec![6.0]);
+    }
+}

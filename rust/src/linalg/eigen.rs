@@ -1,0 +1,213 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! The paper's Appendix C preconditions the Hessian through its spectral
+//! decomposition H = QΛQᵀ, adding α to the diagonal when
+//! min(diag Λ) < α with α = n·10⁻⁴ and using Q(αI + Λ)⁻¹Qᵀ in place of
+//! the true inverse. Jacobi is slow for large matrices but the Hessian
+//! here has dimension |A| (the active set), typically ≤ a few hundred,
+//! where Jacobi's simplicity and unconditional robustness win.
+
+use super::DenseMatrix;
+
+/// Eigendecomposition A = Q Λ Qᵀ (A symmetric).
+pub struct SymEigen {
+    /// Eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Orthogonal matrix of eigenvectors (columns match `values`).
+    pub vectors: DenseMatrix,
+}
+
+impl SymEigen {
+    /// Cyclic Jacobi with threshold sweeping. `a` must be symmetric;
+    /// only O(n²) extra storage.
+    pub fn factor(a: &DenseMatrix) -> Self {
+        assert_eq!(a.nrows(), a.ncols(), "matrix must be square");
+        let n = a.nrows();
+        let mut m = a.clone();
+        let mut q = DenseMatrix::identity(n);
+        if n <= 1 {
+            return Self {
+                values: (0..n).map(|i| m.at(i, i)).collect(),
+                vectors: q,
+            };
+        }
+        let max_sweeps = 64;
+        for _sweep in 0..max_sweeps {
+            // Off-diagonal Frobenius norm.
+            let mut off = 0.0;
+            for i in 0..n {
+                for j in i + 1..n {
+                    off += m.at(i, j).powi(2);
+                }
+            }
+            let scale = (0..n).map(|i| m.at(i, i).abs()).fold(1e-300, f64::max);
+            if off.sqrt() <= 1e-14 * scale * n as f64 {
+                break;
+            }
+            for p in 0..n - 1 {
+                for r in p + 1..n {
+                    let apr = m.at(p, r);
+                    if apr.abs() <= 1e-300 {
+                        continue;
+                    }
+                    let app = m.at(p, p);
+                    let arr = m.at(r, r);
+                    // Rotation angle: tan(2θ) = 2a_pr / (a_pp − a_rr).
+                    let theta = 0.5 * (2.0 * apr).atan2(app - arr);
+                    let c = theta.cos();
+                    let s = theta.sin();
+                    // Apply the Givens rotation G(p, r, θ) from both
+                    // sides of m and on the right of q.
+                    for k in 0..n {
+                        let mkp = m.at(k, p);
+                        let mkr = m.at(k, r);
+                        *m.at_mut(k, p) = c * mkp + s * mkr;
+                        *m.at_mut(k, r) = -s * mkp + c * mkr;
+                    }
+                    for k in 0..n {
+                        let mpk = m.at(p, k);
+                        let mrk = m.at(r, k);
+                        *m.at_mut(p, k) = c * mpk + s * mrk;
+                        *m.at_mut(r, k) = -s * mpk + c * mrk;
+                    }
+                    for k in 0..n {
+                        let qkp = q.at(k, p);
+                        let qkr = q.at(k, r);
+                        *q.at_mut(k, p) = c * qkp + s * qkr;
+                        *q.at_mut(k, r) = -s * qkp + c * qkr;
+                    }
+                }
+            }
+        }
+        // Collect and sort ascending, permuting eigenvectors along.
+        let mut order: Vec<usize> = (0..n).collect();
+        let vals: Vec<f64> = (0..n).map(|i| m.at(i, i)).collect();
+        order.sort_by(|&i, &j| vals[i].partial_cmp(&vals[j]).unwrap());
+        let values: Vec<f64> = order.iter().map(|&i| vals[i]).collect();
+        let mut vectors = DenseMatrix::zeros(n, n);
+        for (jj, &j) in order.iter().enumerate() {
+            vectors.col_mut(jj).copy_from_slice(q.col(j));
+        }
+        Self { values, vectors }
+    }
+
+    pub fn min_eigenvalue(&self) -> f64 {
+        self.values.first().copied().unwrap_or(0.0)
+    }
+
+    /// Reconstruct Q f(Λ) Qᵀ for an eigenvalue map `f` — this is how the
+    /// preconditioned inverse Q(αI + Λ)⁻¹Qᵀ of Appendix C is built.
+    pub fn apply_spectral(&self, f: impl Fn(f64) -> f64) -> DenseMatrix {
+        let n = self.values.len();
+        let mut out = DenseMatrix::zeros(n, n);
+        for k in 0..n {
+            let fk = f(self.values[k]);
+            if fk == 0.0 {
+                continue;
+            }
+            let qk = self.vectors.col(k);
+            for j in 0..n {
+                let w = fk * qk[j];
+                let col = out.col_mut(j);
+                for i in 0..n {
+                    col[i] += w * qk[i];
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn random_sym(n: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut a = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.next_gaussian();
+                *a.at_mut(i, j) = v;
+                *a.at_mut(j, i) = v;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let mut a = DenseMatrix::zeros(3, 3);
+        *a.at_mut(0, 0) = 3.0;
+        *a.at_mut(1, 1) = -1.0;
+        *a.at_mut(2, 2) = 2.0;
+        let e = SymEigen::factor(&a);
+        assert!((e.values[0] + 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2, 1], [1, 2]] has eigenvalues 1 and 3.
+        let mut a = DenseMatrix::zeros(2, 2);
+        *a.at_mut(0, 0) = 2.0;
+        *a.at_mut(1, 1) = 2.0;
+        *a.at_mut(0, 1) = 1.0;
+        *a.at_mut(1, 0) = 1.0;
+        let e = SymEigen::factor(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        let a = random_sym(10, 7);
+        let e = SymEigen::factor(&a);
+        let rec = e.apply_spectral(|x| x);
+        assert!(rec.max_abs_diff(&a) < 1e-9, "reconstruction");
+        let qtq = e.vectors.t_gemm(&e.vectors);
+        assert!(qtq.max_abs_diff(&DenseMatrix::identity(10)) < 1e-10, "Q orthogonal");
+    }
+
+    #[test]
+    fn spectral_inverse() {
+        let mut a = random_sym(6, 9);
+        // make SPD
+        let g = a.t_gemm(&a);
+        a = g;
+        for i in 0..6 {
+            *a.at_mut(i, i) += 1.0;
+        }
+        let e = SymEigen::factor(&a);
+        assert!(e.min_eigenvalue() > 0.0);
+        let inv = e.apply_spectral(|x| 1.0 / x);
+        let prod = a.gemm(&inv);
+        assert!(prod.max_abs_diff(&DenseMatrix::identity(6)) < 1e-8);
+    }
+
+    #[test]
+    fn preconditioner_shifts_small_eigenvalues() {
+        // Appendix C behaviour: eigenvalues below alpha get shifted.
+        let mut a = DenseMatrix::zeros(2, 2);
+        *a.at_mut(0, 0) = 1e-9;
+        *a.at_mut(1, 1) = 5.0;
+        let e = SymEigen::factor(&a);
+        let alpha = 0.01;
+        let pinv = e.apply_spectral(|x| 1.0 / (x + alpha));
+        // (1e-9 + 0.01)^-1 ≈ 100, finite; plain inverse would be 1e9.
+        assert!(pinv.at(0, 0) < 101.0);
+        assert!(pinv.at(0, 0) > 99.0);
+    }
+
+    #[test]
+    fn handles_size_one_and_zero() {
+        let a = DenseMatrix::from_col_major(1, 1, vec![4.0]);
+        let e = SymEigen::factor(&a);
+        assert_eq!(e.values, vec![4.0]);
+        let z = DenseMatrix::zeros(0, 0);
+        let e0 = SymEigen::factor(&z);
+        assert!(e0.values.is_empty());
+    }
+}

@@ -1,0 +1,464 @@
+//! GLM loss functions.
+//!
+//! The paper's objective is `f(β; X) + λ‖β‖₁` with `f` smooth and convex
+//! (§1, eq. 1), instantiated for least-squares (the lasso), logistic
+//! regression, and — in Appendix F.9 — Poisson regression. All three are
+//! "linear-predictor" losses of the form `f(β) = Σᵢ fᵢ(xᵢᵀβ)` (§3.3.3,
+//! eq. 8); this module implements, for each:
+//!
+//! * the mean function μ(η) and pseudo-residual y − μ(η) (so the
+//!   *correlation* c = −∇f = Xᵀ(y − μ));
+//! * the Hessian weights wᵢ = fᵢ″(η) used by the GLM Hessian
+//!   X_AᵀD(w)X_A, plus the global upper bound on fᵢ″ that §3.3.3 uses
+//!   in place of full updates (¼ for logistic, 1 for Gaussian, none for
+//!   Poisson);
+//! * the primal value, the Fenchel dual value at the scaled dual point
+//!   (y − μ)/max(λ, ‖Xᵀ(y − μ)‖∞), and hence the duality gap that the
+//!   solver uses as its convergence criterion `G ≤ ε·ζ` (§4);
+//! * the paper's normalization constants ζ: ‖y‖² (Gaussian), n·log 2
+//!   (logistic), n + Σ log(yᵢ!) (Poisson);
+//! * deviance, for the glmnet-style early-stopping rules.
+//!
+//! Conventions: no intercept (the data layer centers X, and y for the
+//! Gaussian case, exactly as in the paper's §4); the "null model" is
+//! β = 0.
+
+/// Which GLM loss the problem uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Loss {
+    /// f(β) = ½‖Xβ − y‖² — the standard lasso.
+    Gaussian,
+    /// fᵢ(t) = log(1 + eᵗ) − yᵢ t with yᵢ ∈ {0, 1}.
+    Logistic,
+    /// fᵢ(t) = eᵗ − yᵢ t (+ log yᵢ! constant), yᵢ ∈ {0, 1, 2, …}.
+    Poisson,
+}
+
+/// Numerically safe x·log(x) with the convention 0·log 0 = 0.
+#[inline]
+fn xlogx(x: f64) -> f64 {
+    if x <= 0.0 {
+        0.0
+    } else {
+        x * x.ln()
+    }
+}
+
+/// log(1 + eᵗ) without overflow.
+#[inline]
+pub fn log1pexp(t: f64) -> f64 {
+    if t > 35.0 {
+        t
+    } else if t < -35.0 {
+        t.exp()
+    } else {
+        t.exp().ln_1p()
+    }
+}
+
+/// Logistic sigmoid.
+#[inline]
+pub fn sigmoid(t: f64) -> f64 {
+    if t >= 0.0 {
+        1.0 / (1.0 + (-t).exp())
+    } else {
+        let e = t.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// ln Γ(x+1) = ln x! via Stirling/Lanczos-free series; exact for the
+/// small integer counts synthetic Poisson data produces.
+fn ln_factorial(k: f64) -> f64 {
+    let k = k.round().max(0.0) as u64;
+    if k < 2 {
+        return 0.0;
+    }
+    if k <= 256 {
+        let mut s = 0.0;
+        for i in 2..=k {
+            s += (i as f64).ln();
+        }
+        s
+    } else {
+        // Stirling with 1/(12k) correction — plenty for ζ normalization.
+        let kf = k as f64;
+        kf * kf.ln() - kf + 0.5 * (2.0 * std::f64::consts::PI * kf).ln() + 1.0 / (12.0 * kf)
+    }
+}
+
+impl Loss {
+    /// Mean function μ(η) = fᵢ′(η) + yᵢ ... i.e. E[y | η].
+    #[inline]
+    pub fn mu(self, eta: f64) -> f64 {
+        match self {
+            Loss::Gaussian => eta,
+            Loss::Logistic => sigmoid(eta),
+            Loss::Poisson => eta.min(500.0).exp(),
+        }
+    }
+
+    /// Hessian weight w(η) = fᵢ″(η).
+    #[inline]
+    pub fn weight(self, eta: f64) -> f64 {
+        match self {
+            Loss::Gaussian => 1.0,
+            Loss::Logistic => {
+                let m = sigmoid(eta);
+                m * (1.0 - m)
+            }
+            Loss::Poisson => eta.min(500.0).exp(),
+        }
+    }
+
+    /// Global upper bound on fᵢ″, if one exists (§3.3.3): used when the
+    /// Hessian is updated with the bound instead of full re-computation.
+    #[inline]
+    pub fn weight_upper_bound(self) -> Option<f64> {
+        match self {
+            Loss::Gaussian => Some(1.0),
+            Loss::Logistic => Some(0.25),
+            Loss::Poisson => None,
+        }
+    }
+
+    /// Whether Gap-Safe screening is valid for this loss (requires a
+    /// Lipschitz gradient; fails for Poisson — paper App. F.9).
+    pub fn supports_gap_safe(self) -> bool {
+        !matches!(self, Loss::Poisson)
+    }
+
+    /// Σᵢ fᵢ(ηᵢ) — the smooth part of the primal. The Poisson constant
+    /// Σ log yᵢ! is *included* so that ζ = f(0) exactly as in the paper.
+    pub fn value(self, y: &[f64], eta: &[f64]) -> f64 {
+        debug_assert_eq!(y.len(), eta.len());
+        match self {
+            Loss::Gaussian => {
+                let mut s = 0.0;
+                for i in 0..y.len() {
+                    let r = y[i] - eta[i];
+                    s += r * r;
+                }
+                0.5 * s
+            }
+            Loss::Logistic => {
+                let mut s = 0.0;
+                for i in 0..y.len() {
+                    s += log1pexp(eta[i]) - y[i] * eta[i];
+                }
+                s
+            }
+            Loss::Poisson => {
+                let mut s = 0.0;
+                for i in 0..y.len() {
+                    s += eta[i].min(500.0).exp() - y[i] * eta[i] + ln_factorial(y[i]);
+                }
+                s
+            }
+        }
+    }
+
+    /// out ← y − μ(η): the pseudo-residual whose correlation Xᵀ(y − μ)
+    /// is the negative gradient c(λ) of §2.
+    pub fn pseudo_residual_into(self, y: &[f64], eta: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(y.len(), eta.len());
+        debug_assert_eq!(y.len(), out.len());
+        match self {
+            Loss::Gaussian => {
+                for i in 0..y.len() {
+                    out[i] = y[i] - eta[i];
+                }
+            }
+            _ => {
+                for i in 0..y.len() {
+                    out[i] = y[i] - self.mu(eta[i]);
+                }
+            }
+        }
+    }
+
+    /// out ← w(η).
+    pub fn weights_into(self, eta: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(eta.len(), out.len());
+        for i in 0..eta.len() {
+            out[i] = self.weight(eta[i]);
+        }
+    }
+
+    /// Convergence normalizer ζ (§4): ‖y‖² (Gaussian), n·log 2
+    /// (logistic), n + Σ log yᵢ! (Poisson — App. F.9).
+    pub fn zeta(self, y: &[f64]) -> f64 {
+        match self {
+            Loss::Gaussian => y.iter().map(|v| v * v).sum(),
+            Loss::Logistic => y.len() as f64 * std::f64::consts::LN_2,
+            Loss::Poisson => {
+                y.len() as f64 + y.iter().map(|&v| ln_factorial(v)).sum::<f64>()
+            }
+        }
+    }
+
+    /// Model deviance 2·(f(β) − f_sat): the quantity whose ratio to the
+    /// null deviance drives the glmnet-style stopping rules (§4).
+    pub fn deviance(self, y: &[f64], eta: &[f64]) -> f64 {
+        match self {
+            Loss::Gaussian => {
+                let mut s = 0.0;
+                for i in 0..y.len() {
+                    let r = y[i] - eta[i];
+                    s += r * r;
+                }
+                s
+            }
+            Loss::Logistic => {
+                let mut s = 0.0;
+                for i in 0..y.len() {
+                    s += log1pexp(eta[i]) - y[i] * eta[i];
+                }
+                2.0 * s
+            }
+            Loss::Poisson => {
+                // f_sat_i = yᵢ − yᵢ log yᵢ (+ log yᵢ!), attained at η = log yᵢ.
+                let mut s = 0.0;
+                for i in 0..y.len() {
+                    s += eta[i].min(500.0).exp() - y[i] * eta[i] - (y[i] - xlogx(y[i]));
+                }
+                2.0 * s
+            }
+        }
+    }
+
+    /// Null deviance (β = 0 ⇒ η = 0).
+    pub fn null_deviance(self, y: &[f64]) -> f64 {
+        let eta = vec![0.0; y.len()];
+        self.deviance(y, &eta)
+    }
+
+    /// Fenchel dual value D(θ) at the *scaled* dual point
+    /// θ = resid / s where resid = y − μ(η) and s = max(λ, ‖Xᵀresid‖∞).
+    ///
+    /// Derivations (fᵢ*(u) the convex conjugate of fᵢ):
+    /// * Gaussian: D(θ) = ½‖y‖² − (λ²/2)‖θ − y/λ‖²  (paper eq. 9);
+    /// * logistic: D(θ) = −Σ [ xlogx(yᵢ−λθᵢ) + xlogx(1−yᵢ+λθᵢ) ];
+    /// * Poisson:  D(θ) = −Σ [ xlogx(yᵢ−λθᵢ) − (yᵢ−λθᵢ) − log yᵢ! ].
+    ///
+    /// Values are clamped into the dual domain, which can only decrease
+    /// D, so the resulting gap stays a valid upper bound on
+    /// sub-optimality.
+    pub fn dual_value(self, y: &[f64], resid: &[f64], scale: f64, lambda: f64) -> f64 {
+        debug_assert!(scale > 0.0);
+        let a = lambda / scale; // λθᵢ = a·residᵢ
+        match self {
+            Loss::Gaussian => {
+                // ½‖y‖² − ½‖a·r − y‖²
+                let mut s = 0.0;
+                for i in 0..y.len() {
+                    let d = a * resid[i] - y[i];
+                    s += y[i] * y[i] - d * d;
+                }
+                0.5 * s
+            }
+            Loss::Logistic => {
+                let mut s = 0.0;
+                for i in 0..y.len() {
+                    let u = (y[i] - a * resid[i]).clamp(0.0, 1.0);
+                    s += xlogx(u) + xlogx(1.0 - u);
+                }
+                -s
+            }
+            Loss::Poisson => {
+                let mut s = 0.0;
+                for i in 0..y.len() {
+                    let u = (y[i] - a * resid[i]).max(0.0);
+                    s += xlogx(u) - u - ln_factorial(y[i]);
+                }
+                -s
+            }
+        }
+    }
+
+    /// Duality gap G(β, θ) = P(β) − D(θ) for the ℓ₁ problem at `lambda`,
+    /// given η = Xβ, the pseudo-residual, ‖Xᵀresid‖∞ and ‖β‖₁.
+    /// Guaranteed non-negative up to round-off; clamped at 0.
+    pub fn duality_gap(
+        self,
+        y: &[f64],
+        eta: &[f64],
+        resid: &[f64],
+        xt_resid_inf: f64,
+        lambda: f64,
+        l1_norm: f64,
+    ) -> f64 {
+        let primal = self.value(y, eta) + lambda * l1_norm;
+        let scale = lambda.max(xt_resid_inf);
+        let dual = self.dual_value(y, resid, scale, lambda);
+        (primal - dual).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_and_log1pexp_extremes() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!(sigmoid(100.0) > 1.0 - 1e-12);
+        assert!(sigmoid(-100.0) < 1e-12);
+        assert!((log1pexp(0.0) - std::f64::consts::LN_2).abs() < 1e-15);
+        assert!((log1pexp(50.0) - 50.0).abs() < 1e-12);
+        assert!(log1pexp(-50.0) < 1e-12);
+        assert!(log1pexp(-50.0) > 0.0);
+    }
+
+    #[test]
+    fn ln_factorial_values() {
+        assert_eq!(ln_factorial(0.0), 0.0);
+        assert_eq!(ln_factorial(1.0), 0.0);
+        assert!((ln_factorial(5.0) - (120.0f64).ln()).abs() < 1e-12);
+        // Stirling branch vs. exact sum continuity.
+        let exact: f64 = (2..=300u64).map(|i| (i as f64).ln()).sum();
+        assert!((ln_factorial(300.0) - exact).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gaussian_value_and_residual() {
+        let y = vec![1.0, 2.0, 3.0];
+        let eta = vec![0.5, 2.0, 2.0];
+        assert!((Loss::Gaussian.value(&y, &eta) - 0.5 * (0.25 + 0.0 + 1.0)).abs() < 1e-14);
+        let mut r = vec![0.0; 3];
+        Loss::Gaussian.pseudo_residual_into(&y, &eta, &mut r);
+        assert_eq!(r, vec![0.5, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn logistic_gradient_matches_finite_difference() {
+        let y = vec![1.0, 0.0, 1.0];
+        let eta = vec![0.3, -0.2, 1.5];
+        // d/dηᵢ Σ f = μ(ηᵢ) − yᵢ = −residᵢ.
+        let mut r = vec![0.0; 3];
+        Loss::Logistic.pseudo_residual_into(&y, &eta, &mut r);
+        let h = 1e-6;
+        for i in 0..3 {
+            let mut ep = eta.clone();
+            ep[i] += h;
+            let mut em = eta.clone();
+            em[i] -= h;
+            let fd = (Loss::Logistic.value(&y, &ep) - Loss::Logistic.value(&y, &em)) / (2.0 * h);
+            assert!((fd + r[i]).abs() < 1e-6, "i={i} fd={fd} r={}", r[i]);
+        }
+    }
+
+    #[test]
+    fn poisson_gradient_and_weight_match_finite_difference() {
+        let y = vec![2.0, 0.0, 5.0];
+        let eta = vec![0.5, -1.0, 1.2];
+        let mut r = vec![0.0; 3];
+        Loss::Poisson.pseudo_residual_into(&y, &eta, &mut r);
+        let h = 1e-6;
+        for i in 0..3 {
+            let mut ep = eta.clone();
+            ep[i] += h;
+            let mut em = eta.clone();
+            em[i] -= h;
+            let fd = (Loss::Poisson.value(&y, &ep) - Loss::Poisson.value(&y, &em)) / (2.0 * h);
+            assert!((fd + r[i]).abs() < 1e-5);
+            let fdd = (Loss::Poisson.value(&y, &ep) + Loss::Poisson.value(&y, &em)
+                - 2.0 * Loss::Poisson.value(&y, &eta))
+                / (h * h);
+            assert!((fdd - Loss::Poisson.weight(eta[i])).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn weight_bounds() {
+        assert_eq!(Loss::Gaussian.weight_upper_bound(), Some(1.0));
+        assert_eq!(Loss::Logistic.weight_upper_bound(), Some(0.25));
+        assert_eq!(Loss::Poisson.weight_upper_bound(), None);
+        for &eta in &[-3.0, 0.0, 2.5] {
+            assert!(Loss::Logistic.weight(eta) <= 0.25 + 1e-15);
+        }
+        assert!(!Loss::Poisson.supports_gap_safe());
+        assert!(Loss::Logistic.supports_gap_safe());
+    }
+
+    #[test]
+    fn zeta_values() {
+        let y = vec![1.0, -2.0, 2.0];
+        assert!((Loss::Gaussian.zeta(&y) - 9.0).abs() < 1e-14);
+        assert!((Loss::Logistic.zeta(&y) - 3.0 * std::f64::consts::LN_2).abs() < 1e-14);
+        let yp = vec![0.0, 1.0, 3.0];
+        // n + log 0! + log 1! + log 3! = 3 + 0 + 0 + log 6
+        assert!((Loss::Poisson.zeta(&yp) - (3.0 + 6.0f64.ln())).abs() < 1e-12);
+        // ζ = f(0) for Poisson, as the paper uses.
+        let eta0 = vec![0.0; 3];
+        assert!((Loss::Poisson.zeta(&yp) - Loss::Poisson.value(&yp, &eta0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn null_deviance_logistic_is_2nlog2_for_balanced() {
+        let y = vec![0.0, 1.0, 0.0, 1.0];
+        let d = Loss::Logistic.null_deviance(&y);
+        assert!((d - 2.0 * 4.0 * std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poisson_deviance_zero_at_saturation() {
+        let y = vec![1.0, 4.0, 2.0];
+        let eta: Vec<f64> = y.iter().map(|v: &f64| v.ln()).collect();
+        assert!(Loss::Poisson.deviance(&y, &eta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaussian_gap_zero_at_optimum_of_unconstrained() {
+        // For λ ≥ ‖Xᵀy‖∞ the solution is β = 0, η = 0 and the gap at the
+        // scaled dual point must vanish: P(0) = ½‖y‖², θ = y/s with
+        // s = max(λ, ‖Xᵀy‖∞); when s comes from the correlation bound the
+        // gap is exactly P − D.
+        let y = vec![1.0, -1.0, 0.5];
+        let eta = vec![0.0; 3];
+        let resid = y.clone();
+        // Pretend ‖Xᵀr‖∞ = λ: θ = r/λ, a = 1 ⇒ D = ½‖y‖².
+        let g = Loss::Gaussian.duality_gap(&y, &eta, &resid, 1.0, 1.0, 0.0);
+        assert!(g.abs() < 1e-14, "gap {g}");
+    }
+
+    #[test]
+    fn gaps_are_nonnegative_random_points() {
+        let y = vec![1.0, 0.0, 1.0, 1.0, 0.0];
+        let eta = vec![0.2, -0.4, 0.9, 0.0, 0.3];
+        for loss in [Loss::Gaussian, Loss::Logistic] {
+            let mut r = vec![0.0; 5];
+            loss.pseudo_residual_into(&y, &eta, &mut r);
+            let xt = 2.3; // arbitrary claimed correlation bound
+            let g = loss.duality_gap(&y, &eta, &r, xt, 0.7, 1.2);
+            assert!(g >= 0.0, "{loss:?} gap {g}");
+        }
+        let yp = vec![1.0, 0.0, 3.0, 2.0, 1.0];
+        let mut r = vec![0.0; 5];
+        Loss::Poisson.pseudo_residual_into(&yp, &eta, &mut r);
+        let g = Loss::Poisson.duality_gap(&yp, &eta, &r, 2.0, 0.7, 1.2);
+        assert!(g >= 0.0, "poisson gap {g}");
+    }
+
+    #[test]
+    fn logistic_gap_shrinks_toward_solution() {
+        // 1-predictor problem solved by hand: smaller gap nearer optimum.
+        let y = vec![1.0, 0.0];
+        let x = [1.0, -1.0];
+        let lambda = 0.1;
+        let gap_at = |b: f64| {
+            let eta = [x[0] * b, x[1] * b];
+            let mut r = vec![0.0; 2];
+            Loss::Logistic.pseudo_residual_into(&y, &eta, &mut r);
+            let xt = (x[0] * r[0] + x[1] * r[1]).abs();
+            Loss::Logistic.duality_gap(&y, &eta, &r, xt, lambda, b.abs())
+        };
+        // KKT: x·(y−μ) = λ·sign(b) ⇒ 2·(1−σ(b))… solve roughly: b* ≈ 2.197−?
+        // σ(b)=1−λ/2=0.95 ⇒ b*=ln(0.95/0.05)=2.944.
+        let g_far = gap_at(0.0);
+        let g_near = gap_at(2.9);
+        let g_opt = gap_at((0.95f64 / 0.05).ln());
+        assert!(g_near < g_far);
+        assert!(g_opt < 1e-6, "gap at optimum {g_opt}");
+    }
+}

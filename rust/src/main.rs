@@ -1,0 +1,357 @@
+//! `hx` — the hessian-screening coordinator CLI.
+//!
+//! Subcommands:
+//!   fit            fit one regularization path (synthetic or catalog data)
+//!   exp <id>       regenerate a paper table/figure (fig1…fig12, tab1, tab3, all)
+//!   cv             k-fold cross-validated λ selection
+//!   homotopy       adaptive-grid (approximate homotopy) lasso path
+//!   runtime-check  load AOT artifacts via PJRT and cross-check vs native
+//!   list           datasets, methods, experiments
+//!
+//! Run `hx <cmd> --help` conventions: every option is `--key value`.
+
+use hessian_screening::cli::Args;
+use hessian_screening::cv::{cross_validate, CvSettings};
+use hessian_screening::coordinator::Coordinator;
+use hessian_screening::data::{dataset_by_name, dataset_catalog, SyntheticSpec};
+use hessian_screening::experiments::{self, ExpConfig};
+use hessian_screening::linalg::Design;
+use hessian_screening::loss::Loss;
+use hessian_screening::metrics::{fmt_secs, Table};
+use hessian_screening::path::{
+    fit_approximate_homotopy, HomotopySettings, PathFitter, PathSettings,
+};
+use hessian_screening::runtime::{EngineSweep, RuntimeEngine};
+use hessian_screening::screening::ScreeningKind;
+
+const USAGE: &str = "\
+hx — Hessian Screening Rule (Larsson & Wallin, NeurIPS 2022) reproduction
+
+USAGE:
+  hx fit [--dataset NAME | --n N --p P --s S] [--rho R] [--snr S]
+         [--loss gaussian|logistic|poisson] [--method hessian|strong|working|
+          celer|blitz|gap_safe|edpp|sasvi|none] [--path-length M] [--eps E]
+         [--gamma G] [--seed K] [--engine]
+  hx exp <fig1|fig2|fig3|tab1|fig4|fig5|fig6|tab3|fig8|fig9|fig10|fig11|fig12|all>
+         [--reps R] [--full] [--out DIR] [--threads T] [--seed K]
+         [--datasets a,b,c]   (tab1 only)
+  hx cv  [--dataset NAME | --n N --p P --s S] [--folds K] [--method M]
+         [--loss L] [--path-length M] [--seed K]
+  hx homotopy [--n N --p P --s S] [--rho R] [--min-ratio X]
+  hx runtime-check [--artifacts DIR]
+  hx list
+";
+
+fn parse_loss(s: &str) -> Result<Loss, String> {
+    match s.to_ascii_lowercase().as_str() {
+        "gaussian" | "lasso" | "ls" | "least-squares" => Ok(Loss::Gaussian),
+        "logistic" | "binomial" => Ok(Loss::Logistic),
+        "poisson" => Ok(Loss::Poisson),
+        other => Err(format!("unknown loss '{other}'")),
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.pos(0) {
+        Some("fit") => cmd_fit(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("cv") => cmd_cv(&args),
+        Some("homotopy") => cmd_homotopy(&args),
+        Some("runtime-check") => cmd_runtime_check(&args),
+        Some("list") => cmd_list(),
+        _ => {
+            eprint!("{USAGE}");
+            Err("missing or unknown subcommand".to_string())
+        }
+    }
+    .map_or_else(
+        |e| {
+            eprintln!("error: {e}");
+            1
+        },
+        |_| 0,
+    );
+    std::process::exit(code);
+}
+
+fn path_settings_from(args: &Args) -> Result<PathSettings, String> {
+    let mut s = PathSettings::default();
+    if let Some(m) = args.get_usize("path-length")? {
+        s.path_length = m;
+    }
+    if let Some(e) = args.get_f64("eps")? {
+        s.cd.eps = e;
+    }
+    if let Some(g) = args.get_f64("gamma")? {
+        s.gamma = g;
+    }
+    if let Some(r) = args.get_f64("min-ratio")? {
+        s.lambda_min_ratio = Some(r);
+    }
+    if args.flag("no-warm-starts") {
+        s.hessian_warm_starts = false;
+    }
+    if args.flag("no-gap-safe") {
+        s.use_gap_safe_aug = false;
+    }
+    if args.flag("no-sweep") {
+        s.hessian_sweep_updates = false;
+    }
+    if let Some(seed) = args.get_usize("seed")? {
+        s.seed = seed as u64;
+    }
+    Ok(s)
+}
+
+fn cmd_fit(args: &Args) -> Result<(), String> {
+    let loss = parse_loss(args.get("loss").unwrap_or("gaussian"))?;
+    let kind = ScreeningKind::parse(args.get("method").unwrap_or("hessian"))
+        .ok_or("unknown --method")?;
+    let data = if let Some(name) = args.get("dataset") {
+        dataset_by_name(name)
+            .ok_or_else(|| format!("unknown dataset '{name}' (see `hx list`)"))?
+            .generate(args.get_usize("seed")?.unwrap_or(0) as u64)
+    } else {
+        let n = args.get_usize("n")?.unwrap_or(200);
+        let p = args.get_usize("p")?.unwrap_or(2_000);
+        let s = args.get_usize("s")?.unwrap_or(10);
+        let rho = args.get_f64("rho")?.unwrap_or(0.3);
+        let snr = args.get_f64("snr")?.unwrap_or(2.0);
+        experiments::simulate(n, p, s, rho, snr, loss, args.get_usize("seed")?.unwrap_or(0) as u64)
+    };
+    let loss = data.loss; // catalog datasets carry their own loss
+    let settings = path_settings_from(args)?;
+    let fitter = PathFitter::new(loss, kind).with_settings(settings);
+
+    // Optional AOT/PJRT sweep engine.
+    let engine = if args.flag("engine") {
+        Some(RuntimeEngine::load_default().map_err(|e| e.to_string())?)
+    } else {
+        None
+    };
+    let t = std::time::Instant::now();
+    let fit = match (&engine, &data.design) {
+        (Some(eng), hessian_screening::data::DesignMatrix::Dense(m)) => {
+            match EngineSweep::new(eng, m, loss).map_err(|e| e.to_string())? {
+                Some(sweep) => {
+                    eprintln!("(full KKT sweeps via PJRT artifact)");
+                    fitter.fit_with_engine(&data.design, &data.response, Some(&sweep))
+                }
+                None => {
+                    eprintln!("(no artifact for this shape; native sweeps)");
+                    fitter.fit(&data.design, &data.response)
+                }
+            }
+        }
+        _ => fitter.fit(&data.design, &data.response),
+    };
+    let secs = t.elapsed().as_secs_f64();
+
+    println!(
+        "dataset={} n={} p={} loss={loss:?} method={kind}",
+        data.name,
+        data.n(),
+        data.p()
+    );
+    let mut table = Table::new(&["step", "lambda", "active", "screened", "passes", "dev.ratio"]);
+    let m = fit.lambdas.len();
+    for k in (0..m).step_by((m / 15).max(1)) {
+        let s = &fit.steps[k];
+        table.row(vec![
+            format!("{k}"),
+            format!("{:.4}", fit.lambdas[k]),
+            format!("{}", s.active),
+            format!("{}", s.screened),
+            format!("{}", s.passes),
+            format!("{:.4}", s.dev_ratio),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "steps={} total_passes={} violations={} time={}s",
+        m,
+        fit.total_passes(),
+        fit.total_violations(),
+        fmt_secs(secs)
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<(), String> {
+    let name = args.pos(1).ok_or("usage: hx exp <id> (see `hx list`)")?;
+    let mut cfg = ExpConfig {
+        reps: args.get_usize("reps")?.unwrap_or(3),
+        full: args.flag("full"),
+        out_dir: args.get("out").map(std::path::PathBuf::from),
+        threads: args
+            .get_usize("threads")?
+            .unwrap_or_else(|| Coordinator::auto().threads),
+        seed: args.get_usize("seed")?.unwrap_or(0x9E15) as u64,
+    };
+    if cfg.out_dir.is_none() {
+        cfg.out_dir = Some(std::path::PathBuf::from("results"));
+    }
+    if name == "tab1" {
+        if let Some(list) = args.get_list("datasets") {
+            return experiments::real_data::run_subset(&cfg, Some(&list));
+        }
+    }
+    experiments::run_experiment(name, &cfg)
+}
+
+fn cmd_cv(args: &Args) -> Result<(), String> {
+    let loss = parse_loss(args.get("loss").unwrap_or("gaussian"))?;
+    let kind = ScreeningKind::parse(args.get("method").unwrap_or("hessian"))
+        .ok_or("unknown --method")?;
+    let data = if let Some(name) = args.get("dataset") {
+        dataset_by_name(name)
+            .ok_or_else(|| format!("unknown dataset '{name}'"))?
+            .generate(args.get_usize("seed")?.unwrap_or(0) as u64)
+    } else {
+        let n = args.get_usize("n")?.unwrap_or(200);
+        let p = args.get_usize("p")?.unwrap_or(1_000);
+        let s = args.get_usize("s")?.unwrap_or(10);
+        experiments::simulate(
+            n,
+            p,
+            s,
+            args.get_f64("rho")?.unwrap_or(0.3),
+            args.get_f64("snr")?.unwrap_or(3.0),
+            loss,
+            args.get_usize("seed")?.unwrap_or(0) as u64,
+        )
+    };
+    let loss = data.loss;
+    let mut settings = CvSettings::default();
+    settings.n_folds = args.get_usize("folds")?.unwrap_or(10);
+    settings.path = path_settings_from(args)?;
+    let t = std::time::Instant::now();
+    let cv = cross_validate(&data.design, &data.response, loss, kind, &settings);
+    let secs = t.elapsed().as_secs_f64();
+    let mut table = Table::new(&["lambda", "cv deviance", "se", ""]);
+    let m = cv.lambdas.len();
+    for k in (0..m).step_by((m / 20).max(1)) {
+        let marker = if k == cv.idx_min {
+            "<- min"
+        } else if k == cv.idx_1se {
+            "<- 1se"
+        } else {
+            ""
+        };
+        table.row(vec![
+            format!("{:.4}", cv.lambdas[k]),
+            format!("{:.4}", cv.cv_mean[k]),
+            format!("{:.4}", cv.cv_se[k]),
+            marker.into(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "lambda_min={:.4} ({} predictors), lambda_1se={:.4} ({} predictors), {} folds in {}s",
+        cv.lambda_min(),
+        cv.selected_coefs(false).len(),
+        cv.lambda_1se(),
+        cv.selected_coefs(true).len(),
+        settings.n_folds,
+        fmt_secs(secs)
+    );
+    Ok(())
+}
+
+fn cmd_homotopy(args: &Args) -> Result<(), String> {
+    let n = args.get_usize("n")?.unwrap_or(200);
+    let p = args.get_usize("p")?.unwrap_or(1_000);
+    let s = args.get_usize("s")?.unwrap_or(10);
+    let rho = args.get_f64("rho")?.unwrap_or(0.3);
+    let data = SyntheticSpec::new(n, p, s)
+        .rho(rho)
+        .snr(2.0)
+        .seed(args.get_usize("seed")?.unwrap_or(0) as u64)
+        .generate();
+    let mut settings = HomotopySettings::default();
+    if let Some(r) = args.get_f64("min-ratio")? {
+        settings.lambda_min_ratio = r;
+    }
+    let fit = fit_approximate_homotopy(&data.design, &data.response, &settings);
+    let mut table = Table::new(&["step", "lambda", "active", "passes"]);
+    for (k, s) in fit.steps.iter().enumerate() {
+        table.row(vec![
+            format!("{k}"),
+            format!("{:.5}", s.lambda),
+            format!("{}", s.active),
+            format!("{}", s.passes),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "adaptive grid: {} breakpoint-driven steps (vs {} fixed), time={}s",
+        fit.lambdas.len(),
+        PathSettings::default().path_length,
+        fmt_secs(fit.total_time)
+    );
+    Ok(())
+}
+
+fn cmd_runtime_check(args: &Args) -> Result<(), String> {
+    let dir = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let engine = RuntimeEngine::load_dir(&dir).map_err(|e| e.to_string())?;
+    println!("loaded {} compiled artifacts from {}", engine.num_ops(), dir.display());
+
+    // Cross-check the 200x2000 sweep against the native path.
+    let (n, p) = (200usize, 2_000usize);
+    let data = SyntheticSpec::new(n, p, 10).rho(0.3).seed(1).generate();
+    let dense = match &data.design {
+        hessian_screening::data::DesignMatrix::Dense(m) => m,
+        _ => unreachable!(),
+    };
+    let reg = engine
+        .register_design(dense.data(), n, p)
+        .map_err(|e| e.to_string())?;
+    let r: Vec<f64> = data.response.clone();
+    let (c_pjrt, secs) = hessian_screening::metrics::timed(|| {
+        engine.correlation(&reg, &r).map_err(|e| e.to_string())
+    });
+    let c_pjrt = c_pjrt?.ok_or("no xt_r artifact for 200x2000")?;
+    let mut c_native = vec![0.0; p];
+    let (_, native_secs) = hessian_screening::metrics::timed(|| {
+        for (j, c) in c_native.iter_mut().enumerate() {
+            *c = dense.col_dot(j, &r);
+        }
+    });
+    let max_diff = c_pjrt
+        .iter()
+        .zip(&c_native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    let scale = c_native.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    println!(
+        "xt_r 200x2000: pjrt={}s native={}s max|Δ|={max_diff:.3e} (scale {scale:.3e})",
+        fmt_secs(secs),
+        fmt_secs(native_secs)
+    );
+    if max_diff > 1e-3 * scale.max(1.0) {
+        return Err(format!("PJRT/native mismatch: {max_diff}"));
+    }
+    println!("runtime-check OK (f32 artifact agrees with native f64)");
+    Ok(())
+}
+
+fn cmd_list() -> Result<(), String> {
+    println!("datasets (simulated analogues of the paper's Table 1):");
+    let mut t = Table::new(&["name", "n", "p", "density", "loss", "scaling"]);
+    for d in dataset_catalog() {
+        t.row(vec![
+            d.name.into(),
+            format!("{}", d.n),
+            format!("{}", d.p),
+            format!("{:.2}", d.density.unwrap_or(1.0)),
+            format!("{:?}", d.loss),
+            d.scale_note.into(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("methods: {}", ScreeningKind::all().map(|k| k.name()).join(", "));
+    println!("experiments: {}", experiments::EXPERIMENTS.join(", "));
+    Ok(())
+}

@@ -1,0 +1,213 @@
+//! Measurement substrate for the benchmark harness: repeated-run
+//! timing, mean / 95% confidence intervals (the error bars in the
+//! paper's Figures 3, 6, 10, 11), and plain-text table/CSV rendering
+//! of the experiment outputs.
+
+use std::time::Instant;
+
+/// Summary statistics of a sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    /// Ordinary 95% CI half-width: 1.96·sd/√n (the paper's "standard
+    /// 95% confidence intervals").
+    pub ci_half: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        let n = xs.len();
+        if n == 0 {
+            return Summary {
+                n: 0,
+                mean: f64::NAN,
+                sd: f64::NAN,
+                ci_half: f64::NAN,
+            };
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let sd = var.sqrt();
+        Summary {
+            n,
+            mean,
+            sd,
+            ci_half: 1.96 * sd / (n as f64).sqrt(),
+        }
+    }
+
+    pub fn lo(&self) -> f64 {
+        self.mean - self.ci_half
+    }
+
+    pub fn hi(&self) -> f64 {
+        self.mean + self.ci_half
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed().as_secs_f64())
+}
+
+/// Round to `sig` significant figures (paper tables use 3–4).
+pub fn sig_figs(x: f64, sig: u32) -> f64 {
+    if x == 0.0 || !x.is_finite() {
+        return x;
+    }
+    let mag = x.abs().log10().floor();
+    let factor = 10f64.powf(sig as f64 - 1.0 - mag);
+    (x * factor).round() / factor
+}
+
+/// A simple left-aligned text table (markdown-flavoured) for CLI output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let pad = widths[i] - cells[i].chars().count();
+                s.push(' ');
+                s.push_str(&cells[i]);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('|');
+            }
+            s
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('|');
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering for machine consumption (results/ directory).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .header
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds with 3 significant figures (the paper's convention).
+pub fn fmt_secs(s: f64) -> String {
+    format!("{}", sig_figs(s, 3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_known_values() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        // sample sd of 1..4 = sqrt(5/3)
+        assert!((s.sd - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert!((s.ci_half - 1.96 * s.sd / 2.0).abs() < 1e-12);
+        assert!(s.lo() < s.mean && s.mean < s.hi());
+    }
+
+    #[test]
+    fn summary_degenerate() {
+        assert!(Summary::of(&[]).mean.is_nan());
+        let one = Summary::of(&[5.0]);
+        assert_eq!(one.mean, 5.0);
+        assert_eq!(one.sd, 0.0);
+        assert_eq!(one.ci_half, 0.0);
+    }
+
+    #[test]
+    fn sig_figs_rounding() {
+        assert_eq!(sig_figs(123.456, 3), 123.0);
+        assert_eq!(sig_figs(0.0012345, 3), 0.00123);
+        assert_eq!(sig_figs(78.84, 3), 78.8);
+        assert_eq!(sig_figs(0.0, 3), 0.0);
+        assert_eq!(sig_figs(-123.456, 2), -120.0);
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new(&["method", "time"]);
+        t.row(vec!["hessian".into(), "1.0".into()]);
+        t.row(vec!["working".into(), "2.5".into()]);
+        let r = t.render();
+        assert!(r.contains("| method"));
+        assert!(r.lines().count() == 4);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().next().unwrap(), "method,time");
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new(&["a"]);
+        t.row(vec!["x,y".into()]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, secs) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Fitted-model API: prediction, original-scale coefficients, scoring
+//! and simple persistence — what a downstream user consumes after
+//! fitting a path or a CV run.
+
+use crate::data::{DesignMatrix, Standardization};
+use crate::linalg::Design;
+use crate::loss::Loss;
+use crate::path::PathFit;
+
+/// One selected model from a path: coefficients at a single λ, plus the
+/// standardization needed to express them on the original data scale.
+#[derive(Clone, Debug)]
+pub struct FittedModel {
+    pub loss: Loss,
+    pub lambda: f64,
+    /// Sparse coefficients on the *standardized* scale.
+    pub coefs: Vec<(usize, f64)>,
+    /// Present when the training data was standardized.
+    pub standardization: Option<Standardization>,
+    pub p: usize,
+}
+
+impl FittedModel {
+    /// Extract step `k` of a path fit.
+    pub fn from_path(fit: &PathFit, k: usize, p: usize, st: Option<Standardization>) -> Self {
+        Self {
+            loss: fit.loss,
+            lambda: fit.lambdas[k],
+            coefs: fit.betas[k].clone(),
+            standardization: st,
+            p,
+        }
+    }
+
+    /// Linear predictor η for rows of a design on the *same scale* the
+    /// model was fit on (standardized).
+    pub fn linear_predictor(&self, design: &DesignMatrix) -> Vec<f64> {
+        let mut eta = vec![0.0; design.nrows()];
+        for &(j, b) in &self.coefs {
+            design.col_axpy(j, b, &mut eta);
+        }
+        eta
+    }
+
+    /// Mean prediction μ(η) per row (identity / sigmoid / exp).
+    pub fn predict(&self, design: &DesignMatrix) -> Vec<f64> {
+        let y_shift = self
+            .standardization
+            .as_ref()
+            .map(|s| s.y_mean)
+            .unwrap_or(0.0);
+        self.linear_predictor(design)
+            .into_iter()
+            .map(|e| self.loss.mu(e) + y_shift)
+            .collect()
+    }
+
+    /// Hard class labels for logistic models.
+    pub fn classify(&self, design: &DesignMatrix) -> Vec<u8> {
+        assert!(matches!(self.loss, Loss::Logistic));
+        self.linear_predictor(design)
+            .into_iter()
+            .map(|e| u8::from(e > 0.0))
+            .collect()
+    }
+
+    /// Dense coefficients on the original (unstandardized) scale, with
+    /// the intercept implied by centering.
+    pub fn raw_coefficients(&self) -> (Vec<f64>, f64) {
+        let mut dense = vec![0.0; self.p];
+        for &(j, b) in &self.coefs {
+            dense[j] = b;
+        }
+        match &self.standardization {
+            Some(st) => st.unstandardize_coefs(&dense),
+            None => (dense, 0.0),
+        }
+    }
+
+    pub fn support(&self) -> Vec<usize> {
+        self.coefs.iter().map(|&(j, _)| j).collect()
+    }
+
+    /// Mean deviance on (design, y) — the generic score.
+    pub fn score_deviance(&self, design: &DesignMatrix, y: &[f64]) -> f64 {
+        let eta = self.linear_predictor(design);
+        self.loss.deviance(y, &eta) / y.len().max(1) as f64
+    }
+
+    /// Mean squared error (Gaussian convenience).
+    pub fn score_mse(&self, design: &DesignMatrix, y: &[f64]) -> f64 {
+        let eta = self.linear_predictor(design);
+        eta.iter()
+            .zip(y)
+            .map(|(e, v)| (e - v) * (e - v))
+            .sum::<f64>()
+            / y.len().max(1) as f64
+    }
+
+    /// Classification accuracy (logistic convenience).
+    pub fn score_accuracy(&self, design: &DesignMatrix, y: &[f64]) -> f64 {
+        let labels = self.classify(design);
+        labels
+            .iter()
+            .zip(y)
+            .filter(|(&l, &t)| (l as f64 - t).abs() < 0.5)
+            .count() as f64
+            / y.len().max(1) as f64
+    }
+
+    /// Serialize to a simple TSV: `j \t beta_j` lines with a header.
+    pub fn to_tsv(&self) -> String {
+        let mut out = format!(
+            "# loss={:?} lambda={} p={}\n",
+            self.loss, self.lambda, self.p
+        );
+        for &(j, b) in &self.coefs {
+            out.push_str(&format!("{j}\t{b:.17e}\n"));
+        }
+        out
+    }
+
+    /// Parse the TSV produced by [`Self::to_tsv`].
+    pub fn from_tsv(text: &str) -> Result<Self, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty input")?;
+        let mut loss = Loss::Gaussian;
+        let mut lambda = 0.0;
+        let mut p = 0usize;
+        for tok in header.trim_start_matches('#').split_whitespace() {
+            if let Some(v) = tok.strip_prefix("loss=") {
+                loss = match v {
+                    "Gaussian" => Loss::Gaussian,
+                    "Logistic" => Loss::Logistic,
+                    "Poisson" => Loss::Poisson,
+                    other => return Err(format!("unknown loss {other}")),
+                };
+            } else if let Some(v) = tok.strip_prefix("lambda=") {
+                lambda = v.parse().map_err(|_| "bad lambda")?;
+            } else if let Some(v) = tok.strip_prefix("p=") {
+                p = v.parse().map_err(|_| "bad p")?;
+            }
+        }
+        let mut coefs = Vec::new();
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut it = line.split('\t');
+            let j: usize = it
+                .next()
+                .ok_or("missing index")?
+                .parse()
+                .map_err(|_| "bad index")?;
+            let b: f64 = it
+                .next()
+                .ok_or("missing value")?
+                .parse()
+                .map_err(|_| "bad value")?;
+            coefs.push((j, b));
+        }
+        Ok(Self {
+            loss,
+            lambda,
+            coefs,
+            standardization: None,
+            p,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+    use crate::path::PathFitter;
+    use crate::screening::ScreeningKind;
+
+    fn fitted() -> (crate::data::Dataset, FittedModel) {
+        let data = SyntheticSpec::new(100, 30, 4).snr(5.0).seed(2).generate();
+        let fit = PathFitter::new(Loss::Gaussian, ScreeningKind::Hessian)
+            .fit(&data.design, &data.response);
+        let k = fit.lambdas.len() / 2;
+        let m = FittedModel::from_path(&fit, k, 30, None);
+        (data, m)
+    }
+
+    #[test]
+    fn predictions_reduce_mse_vs_null() {
+        let (data, m) = fitted();
+        let mse = m.score_mse(&data.design, &data.response);
+        let null_mse = data.response.iter().map(|v| v * v).sum::<f64>()
+            / data.response.len() as f64;
+        assert!(mse < 0.7 * null_mse, "mse {mse} vs null {null_mse}");
+        assert!(m.score_deviance(&data.design, &data.response) < 1.01 * null_mse);
+    }
+
+    #[test]
+    fn logistic_classification_beats_chance() {
+        let data = SyntheticSpec::new(200, 20, 3)
+            .loss(Loss::Logistic)
+            .signal_scale(1.5)
+            .seed(3)
+            .generate();
+        let fit = PathFitter::new(Loss::Logistic, ScreeningKind::Working)
+            .fit(&data.design, &data.response);
+        let m = FittedModel::from_path(&fit, fit.lambdas.len() - 1, 20, None);
+        let acc = m.score_accuracy(&data.design, &data.response);
+        assert!(acc > 0.65, "accuracy {acc}");
+        let probs = m.predict(&data.design);
+        assert!(probs.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let (_, m) = fitted();
+        let text = m.to_tsv();
+        let m2 = FittedModel::from_tsv(&text).unwrap();
+        assert_eq!(m.coefs, m2.coefs);
+        assert_eq!(m.p, m2.p);
+        assert!((m.lambda - m2.lambda).abs() < 1e-12);
+        assert_eq!(m.loss, m2.loss);
+    }
+
+    #[test]
+    fn from_tsv_rejects_garbage() {
+        assert!(FittedModel::from_tsv("").is_err());
+        assert!(FittedModel::from_tsv("# loss=Banana lambda=1 p=2\n").is_err());
+        assert!(FittedModel::from_tsv("# loss=Gaussian lambda=1 p=2\nxx\t1.0\n").is_err());
+    }
+
+    #[test]
+    fn support_and_raw_coefs() {
+        let (_, m) = fitted();
+        let support = m.support();
+        assert!(!support.is_empty());
+        let (raw, intercept) = m.raw_coefficients();
+        assert_eq!(raw.len(), 30);
+        assert_eq!(intercept, 0.0); // no standardization recorded
+        for &j in &support {
+            assert_ne!(raw[j], 0.0);
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! λ-grid construction (paper §4): a log-spaced path of `m` values from
+//! λ_max down to ξ·λ_max with ξ = 10⁻² when p > n and 10⁻⁴ otherwise —
+//! the glmnet defaults the paper adopts.
+
+/// Paper/glmnet default for ξ = λ_min/λ_max.
+pub fn default_lambda_min_ratio(n: usize, p: usize) -> f64 {
+    if p > n {
+        1e-2
+    } else {
+        1e-4
+    }
+}
+
+/// Log-spaced grid of `m` values from `lambda_max` to
+/// `ratio·lambda_max` inclusive, strictly decreasing.
+pub fn lambda_grid(lambda_max: f64, ratio: f64, m: usize) -> Vec<f64> {
+    assert!(lambda_max > 0.0, "lambda_max must be positive");
+    assert!((0.0..1.0).contains(&ratio), "ratio must be in (0,1)");
+    assert!(m >= 1);
+    if m == 1 {
+        return vec![lambda_max];
+    }
+    let log_max = lambda_max.ln();
+    let log_min = (lambda_max * ratio).ln();
+    (0..m)
+        .map(|k| {
+            let t = k as f64 / (m - 1) as f64;
+            (log_max + t * (log_min - log_max)).exp()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        assert_eq!(default_lambda_min_ratio(100, 1000), 1e-2);
+        assert_eq!(default_lambda_min_ratio(1000, 100), 1e-4);
+        assert_eq!(default_lambda_min_ratio(100, 100), 1e-4); // p > n strict
+    }
+
+    #[test]
+    fn grid_endpoints_and_monotonicity() {
+        let g = lambda_grid(2.0, 1e-2, 100);
+        assert_eq!(g.len(), 100);
+        assert!((g[0] - 2.0).abs() < 1e-12);
+        assert!((g[99] - 0.02).abs() < 1e-12);
+        for w in g.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    #[test]
+    fn grid_is_log_spaced() {
+        let g = lambda_grid(1.0, 1e-4, 5);
+        let ratios: Vec<f64> = g.windows(2).map(|w| w[1] / w[0]).collect();
+        for r in &ratios {
+            assert!((r - ratios[0]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_point_grid() {
+        assert_eq!(lambda_grid(3.0, 0.5, 1), vec![3.0]);
+    }
+}

@@ -1,0 +1,1043 @@
+//! Regularization-path driver — the paper's Algorithm 2, generalized
+//! over all screening strategies so that every method runs on *exactly*
+//! the same solver, λ grid, convergence criterion and KKT machinery
+//! (the paper's own methodology, §4: "equivalent implementations for
+//! all of the methods").
+//!
+//! Per step λ_k → λ_{k+1} the driver:
+//!
+//! 1. builds the rule's screened set and the working set `W`;
+//! 2. (Hessian) applies the eq.-(7) warm start from the tracked H⁻¹;
+//! 3. solves the subproblem on `W` to duality gap ε·ζ;
+//! 4. runs KKT checks per the §3.3.4 policy — strong set first, then
+//!    the full set, shrinking the candidate set `G` with Gap-Safe
+//!    screening after a failed full check;
+//! 5. updates the Hessian via Algorithm 1 and records instrumentation
+//!    (screened counts, violations, passes, per-phase wall time — the
+//!    raw material for every figure in the paper).
+//!
+//! Stopping follows glmnet/§4: dev-ratio ≥ 0.999, fractional deviance
+//! decrease < 10⁻⁵, or saturation (|ever-active| > min(n, p)).
+
+mod homotopy;
+mod lambda;
+
+pub use homotopy::{fit_approximate_homotopy, HomotopySettings};
+pub use lambda::{default_lambda_min_ratio, lambda_grid};
+
+use crate::hessian::HessianTracker;
+use crate::linalg::blas;
+use crate::linalg::Design;
+use crate::loss::Loss;
+use crate::rng::Xoshiro256pp;
+use crate::screening::{
+    edpp_keep, gap_safe_keep, hessian_screen, sasvi_keep, strong_set, ws_priority, ScreeningKind,
+};
+use crate::solver::{solve_subproblem, CdSettings, SolveState};
+use std::time::Instant;
+
+/// Path-level settings (defaults = the paper's §4).
+#[derive(Clone, Debug)]
+pub struct PathSettings {
+    /// Number of λ values (paper: 100).
+    pub path_length: usize,
+    /// λ_min/λ_max; `None` → 10⁻² if p > n else 10⁻⁴ (paper §4).
+    pub lambda_min_ratio: Option<f64>,
+    /// Explicit λ grid (overrides the log-spaced default when set).
+    pub lambda_path: Option<Vec<f64>>,
+    /// Hessian-rule unit-bound mixin γ (paper: 0.01).
+    pub gamma: f64,
+    /// Stop when 1 − dev/dev_null exceeds this (paper: 0.999).
+    pub dev_ratio_max: f64,
+    /// Stop when the fractional deviance decrease drops below this.
+    pub dev_change_min: f64,
+    /// §3.3.4 Gap-Safe augmentation of the KKT loop (Hessian/working+).
+    pub use_gap_safe_aug: bool,
+    /// Ablation toggles (App. F.8): eq.-(7) warm starts, Algorithm-1
+    /// sweep updates (false → rebuild each step), Hessian screening
+    /// (false → working-set strategy with whatever warm start is on).
+    pub hessian_warm_starts: bool,
+    pub hessian_sweep_updates: bool,
+    pub hessian_screening: bool,
+    /// GLM Hessian mode: Some(true) = full re-computation each step,
+    /// Some(false) = fᵢ″ upper bound + sweep updates, None = the paper's
+    /// heuristic `density(X)·n/max(n,p) < 10⁻³ → full` (§3.3.3).
+    pub glm_full_hessian: Option<bool>,
+    /// Saturation cap on the ever-active count; `None` → min(n, p).
+    pub max_ever_active: Option<usize>,
+    pub cd: CdSettings,
+    pub seed: u64,
+}
+
+impl Default for PathSettings {
+    fn default() -> Self {
+        Self {
+            path_length: 100,
+            lambda_min_ratio: None,
+            lambda_path: None,
+            gamma: 0.01,
+            dev_ratio_max: 0.999,
+            dev_change_min: 1e-5,
+            use_gap_safe_aug: true,
+            hessian_warm_starts: true,
+            hessian_sweep_updates: true,
+            hessian_screening: true,
+            glm_full_hessian: None,
+            max_ever_active: None,
+            cd: CdSettings::default(),
+            seed: 0,
+        }
+    }
+}
+
+/// Per-step instrumentation (the raw series behind Figures 1, 2, 7, 9,
+/// 12–14 and Table 3).
+#[derive(Clone, Debug, Default)]
+pub struct StepStats {
+    pub lambda: f64,
+    /// |W| when the subproblem is first solved (screened set size).
+    pub screened: usize,
+    /// |W| at convergence.
+    pub screened_final: usize,
+    pub active: usize,
+    /// Coordinate-descent passes (Fig. 2).
+    pub passes: usize,
+    /// Predictors the rule discarded that turned out KKT-violating.
+    pub violations: usize,
+    /// Full-set correlation sweeps performed.
+    pub full_sweeps: usize,
+    pub dev_ratio: f64,
+    /// Wall-clock split (seconds) for the F.10 breakdowns.
+    pub t_cd: f64,
+    pub t_kkt: f64,
+    pub t_hessian: f64,
+    pub t_screen: f64,
+}
+
+/// Result of a full path fit.
+#[derive(Clone, Debug)]
+pub struct PathFit {
+    pub lambdas: Vec<f64>,
+    /// Sparse coefficients per step: (predictor index, value).
+    pub betas: Vec<Vec<(usize, f64)>>,
+    pub dev_ratios: Vec<f64>,
+    pub steps: Vec<StepStats>,
+    /// Total wall time in seconds.
+    pub total_time: f64,
+    pub loss: Loss,
+    pub kind: ScreeningKind,
+    pub converged: bool,
+}
+
+impl PathFit {
+    /// Dense coefficient vector at step k.
+    pub fn beta_dense(&self, k: usize, p: usize) -> Vec<f64> {
+        let mut b = vec![0.0; p];
+        for &(j, v) in &self.betas[k] {
+            b[j] = v;
+        }
+        b
+    }
+
+    pub fn total_passes(&self) -> usize {
+        self.steps.iter().map(|s| s.passes).sum()
+    }
+
+    pub fn total_violations(&self) -> usize {
+        self.steps.iter().map(|s| s.violations).sum()
+    }
+
+    pub fn mean_screened(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.screened as f64).sum::<f64>() / self.steps.len() as f64
+    }
+}
+
+/// Fits ℓ₁-regularized GLM paths with a chosen screening strategy.
+#[derive(Clone, Debug)]
+pub struct PathFitter {
+    pub loss: Loss,
+    pub kind: ScreeningKind,
+    pub settings: PathSettings,
+}
+
+/// Internal: indexed set with O(1) membership (bitmap + insertion list).
+struct IndexSet {
+    member: Vec<bool>,
+    items: Vec<usize>,
+}
+
+impl IndexSet {
+    fn new(p: usize) -> Self {
+        Self {
+            member: vec![false; p],
+            items: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn insert(&mut self, j: usize) -> bool {
+        if self.member[j] {
+            false
+        } else {
+            self.member[j] = true;
+            self.items.push(j);
+            true
+        }
+    }
+
+    #[inline]
+    fn contains(&self, j: usize) -> bool {
+        self.member[j]
+    }
+
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    fn clear(&mut self) {
+        for &j in &self.items {
+            self.member[j] = false;
+        }
+        self.items.clear();
+    }
+
+    fn assign(&mut self, items: &[usize]) {
+        self.clear();
+        for &j in items {
+            self.insert(j);
+        }
+    }
+}
+
+impl PathFitter {
+    pub fn new(loss: Loss, kind: ScreeningKind) -> Self {
+        Self {
+            loss,
+            kind,
+            settings: PathSettings::default(),
+        }
+    }
+
+    pub fn with_settings(mut self, settings: PathSettings) -> Self {
+        self.settings = settings;
+        self
+    }
+
+    /// Fit the full regularization path (native sweeps only).
+    pub fn fit<D: Design + ?Sized>(&self, design: &D, y: &[f64]) -> PathFit {
+        self.fit_with_engine(design, y, None)
+    }
+
+    /// Fit the path, running full KKT sweeps through an AOT PJRT engine
+    /// when one is provided and has a matching artifact (the L1/L2
+    /// compiled hot path; see `crate::runtime`). Falls back to the
+    /// native f64 sweep per call when the artifact path is unavailable.
+    pub fn fit_with_engine<D: Design + ?Sized>(
+        &self,
+        design: &D,
+        y: &[f64],
+        engine: Option<&crate::runtime::EngineSweep>,
+    ) -> PathFit {
+        let t_total = Instant::now();
+        let n = design.nrows();
+        let p = design.ncols();
+        assert_eq!(y.len(), n, "response length mismatch");
+        if self.kind == ScreeningKind::Edpp {
+            assert!(
+                matches!(self.loss, Loss::Gaussian),
+                "EDPP is defined for the ordinary lasso only"
+            );
+        }
+        let s = &self.settings;
+        let loss = self.loss;
+        let gap_safe_ok = loss.supports_gap_safe();
+        let use_gs_aug = s.use_gap_safe_aug && gap_safe_ok;
+
+        let col_sq_norms: Vec<f64> = (0..p).map(|j| design.col_sq_norm(j)).collect();
+        let col_norms: Vec<f64> = col_sq_norms.iter().map(|v| v.sqrt()).collect();
+        let zeta = loss.zeta(y);
+        let null_dev = loss.null_deviance(y);
+        let tol = s.cd.eps * zeta;
+
+        let mut state = SolveState::new(n, p);
+        state.refresh(design, y, loss);
+        let mut c_full: Vec<f64> = (0..p).map(|j| design.col_dot(j, &state.resid)).collect();
+        let lambda_max = blas::amax(&c_full);
+        let argmax_col = (0..p)
+            .max_by(|&a, &b| c_full[a].abs().partial_cmp(&c_full[b].abs()).unwrap())
+            .unwrap_or(0);
+
+        let lambdas = match &s.lambda_path {
+            Some(path) => path.clone(),
+            None => {
+                let ratio = s
+                    .lambda_min_ratio
+                    .unwrap_or_else(|| default_lambda_min_ratio(n, p));
+                lambda_grid(lambda_max, ratio, s.path_length)
+            }
+        };
+
+        // GLM Hessian mode: the §3.3.3 heuristic unless overridden.
+        let glm_full = match (loss, s.glm_full_hessian) {
+            (Loss::Gaussian, _) => false,
+            (_, Some(v)) => v,
+            (_, None) => design.density() * n as f64 / n.max(p) as f64 >= 1e-3,
+        };
+        // In bound mode the tracker stores the *unweighted* Gram, and
+        // eq. (7) rescales by 1/bound (H ≈ bound·XᵀX — §3.3.3).
+        let warm_scale = if matches!(loss, Loss::Gaussian) || glm_full {
+            1.0
+        } else {
+            1.0 / loss.weight_upper_bound().unwrap_or(1.0)
+        };
+        let needs_hessian = self.kind == ScreeningKind::Hessian;
+        let mut tracker = HessianTracker::new(n as f64 * 1e-4);
+        let mut weights = vec![0.0; n];
+
+        let mut rng = Xoshiro256pp::seed_from_u64(s.seed);
+        let mut ever_active = IndexSet::new(p);
+        let mut w_set = IndexSet::new(p);
+        let mut g_set = IndexSet::new(p); // Gap-Safe candidate set
+        let max_ever = s.max_ever_active.unwrap_or(n.min(p));
+
+        let mut fit = PathFit {
+            lambdas: Vec::new(),
+            betas: Vec::new(),
+            dev_ratios: Vec::new(),
+            steps: Vec::new(),
+            total_time: 0.0,
+            loss,
+            kind: self.kind,
+            converged: true,
+        };
+        // Step 1 = λmax: the null model (closed form).
+        fit.lambdas.push(lambdas[0]);
+        fit.betas.push(Vec::new());
+        fit.dev_ratios.push(0.0);
+        fit.steps.push(StepStats {
+            lambda: lambdas[0],
+            dev_ratio: 0.0,
+            passes: 0,
+            ..Default::default()
+        });
+
+        let mut prev_active: Vec<usize> = Vec::new();
+        let mut prev_dev_ratio = 0.0;
+        let mut scratch_u = vec![0.0; n];
+
+        for k in 1..lambdas.len() {
+            let lp = lambdas[k - 1];
+            let ln = lambdas[k];
+            let mut st = StepStats {
+                lambda: ln,
+                ..Default::default()
+            };
+
+            // ---------------- screening + warm start ----------------
+            let t0 = Instant::now();
+            let strong = strong_set(&c_full, lp, ln);
+            let mut strong_member = vec![false; p];
+            for &j in &strong {
+                strong_member[j] = true;
+            }
+            w_set.clear();
+            match self.kind {
+                ScreeningKind::Hessian => {
+                    // v = Q·sign(β_A); u = (D(w)) X_A v.
+                    let tr_active = tracker.active().to_vec();
+                    let signs: Vec<f64> =
+                        tr_active.iter().map(|&j| state.beta[j].signum()).collect();
+                    let v = tracker.q_times(&signs);
+                    scratch_u.iter_mut().for_each(|x| *x = 0.0);
+                    for (idx, &j) in tr_active.iter().enumerate() {
+                        design.col_axpy(j, v[idx], &mut scratch_u);
+                    }
+                    if glm_full && !matches!(loss, Loss::Gaussian) {
+                        loss.weights_into(&state.eta, &mut weights);
+                        for i in 0..n {
+                            scratch_u[i] *= weights[i];
+                        }
+                    }
+                    if s.hessian_screening {
+                        let kept = hessian_screen(
+                            design,
+                            &c_full,
+                            &scratch_u,
+                            &prev_active,
+                            lp,
+                            ln,
+                            s.gamma,
+                        );
+                        for j in kept {
+                            w_set.insert(j);
+                        }
+                    }
+                    // Union with the ever-active set (§3.3).
+                    for &j in &ever_active.items {
+                        w_set.insert(j);
+                    }
+                    // Warm start, eq. (7).
+                    if s.hessian_warm_starts {
+                        for (idx, &j) in tr_active.iter().enumerate() {
+                            state.beta[j] += (lp - ln) * warm_scale * v[idx];
+                        }
+                    }
+                }
+                ScreeningKind::Strong => {
+                    for &j in &strong {
+                        w_set.insert(j);
+                    }
+                }
+                ScreeningKind::Working => {
+                    for &j in &ever_active.items {
+                        w_set.insert(j);
+                    }
+                }
+                ScreeningKind::GapSafe => {
+                    // Sequential Gap Safe from the previous solution.
+                    let scale = ln.max(blas::amax(&c_full));
+                    let xt_theta: Vec<f64> = c_full.iter().map(|c| c / scale).collect();
+                    let gap = loss.duality_gap(
+                        y,
+                        &state.eta,
+                        &state.resid,
+                        blas::amax(&c_full),
+                        ln,
+                        state.l1_norm(),
+                    );
+                    let cols: Vec<usize> = (0..p).collect();
+                    let kept = gap_safe_keep(&xt_theta, &cols, &col_norms, gap, ln);
+                    for j in kept {
+                        w_set.insert(j);
+                    }
+                    for &j in &prev_active {
+                        w_set.insert(j);
+                    }
+                }
+                ScreeningKind::Edpp => {
+                    let theta_prev: Vec<f64> = state.resid.iter().map(|r| r / lp).collect();
+                    let kept = edpp_keep(
+                        design,
+                        y,
+                        &theta_prev,
+                        lp,
+                        ln,
+                        k == 1,
+                        argmax_col,
+                        &col_norms,
+                    );
+                    for j in kept {
+                        w_set.insert(j);
+                    }
+                    for &j in &prev_active {
+                        w_set.insert(j);
+                    }
+                }
+                ScreeningKind::Sasvi => {
+                    let scale = ln.max(blas::amax(&c_full));
+                    let theta0: Vec<f64> = state.resid.iter().map(|r| r / scale).collect();
+                    let kept = sasvi_keep(design, y, &theta0, ln, &col_norms);
+                    for j in kept {
+                        w_set.insert(j);
+                    }
+                    for &j in &prev_active {
+                        w_set.insert(j);
+                    }
+                }
+                ScreeningKind::Celer | ScreeningKind::Blitz => {
+                    // Initial working set: previous active + the top
+                    // strong-set priorities, sized 2·|A| (min 10).
+                    let target = (2 * prev_active.len()).max(10).min(p);
+                    for &j in &prev_active {
+                        w_set.insert(j);
+                    }
+                    let scale = ln.max(blas::amax(&c_full));
+                    let mut cand: Vec<(f64, usize)> = strong
+                        .iter()
+                        .filter(|&&j| !w_set.contains(j))
+                        .map(|&j| (ws_priority(c_full[j] / scale, col_norms[j]), j))
+                        .collect();
+                    cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    for (_, j) in cand.into_iter().take(target.saturating_sub(w_set.len())) {
+                        w_set.insert(j);
+                    }
+                }
+                ScreeningKind::None => {
+                    for j in 0..p {
+                        w_set.insert(j);
+                    }
+                }
+            }
+            st.t_screen += t0.elapsed().as_secs_f64();
+            st.screened = w_set.len();
+            let w_init_member = w_set.member.clone();
+
+            // Reset the Gap-Safe candidate set (Alg. 2 line 14).
+            g_set.clear();
+            for j in 0..p {
+                g_set.insert(j);
+            }
+
+            // ---------------- inner solve/check loop ----------------
+            let mut first_full_done = false;
+            let mut ws_growth = (2 * w_set.len()).max(20);
+            // Stall guard: when the subproblem cannot reach the duality
+            // gap tolerance (numerically unreachable ε) and no KKT
+            // violations remain, repeating the solve cannot help —
+            // accept the solution and mark the fit non-converged.
+            let mut stalls = 0usize;
+            loop {
+                let t_cd = Instant::now();
+                let res = solve_subproblem(
+                    design,
+                    y,
+                    loss,
+                    ln,
+                    &w_set.items,
+                    &mut state,
+                    &col_sq_norms,
+                    zeta,
+                    &s.cd,
+                    &mut rng,
+                );
+                st.t_cd += t_cd.elapsed().as_secs_f64();
+                st.passes += res.passes;
+
+                let t_kkt = Instant::now();
+                match self.kind {
+                    ScreeningKind::Hessian | ScreeningKind::Working => {
+                        // §3.3.4: strong set first.
+                        let mut v_strong = Vec::new();
+                        for &j in &strong {
+                            if !w_set.contains(j) && g_set.contains(j) {
+                                let c = design.col_dot(j, &state.resid);
+                                c_full[j] = c;
+                                if c.abs() > ln {
+                                    v_strong.push(j);
+                                }
+                            }
+                        }
+                        if !v_strong.is_empty() {
+                            for j in v_strong {
+                                if !w_init_member[j] {
+                                    st.violations += 1;
+                                }
+                                w_set.insert(j);
+                            }
+                            st.t_kkt += t_kkt.elapsed().as_secs_f64();
+                            continue;
+                        }
+                        // Full (or Gap-Safe-restricted) check.
+                        let mut violations = Vec::new();
+                        let mut xt_inf = 0.0f64;
+                        if !first_full_done {
+                            let via_engine = engine
+                                .map(|es| {
+                                    es.full_sweep(
+                                        design,
+                                        y,
+                                        &state.eta,
+                                        &state.resid,
+                                        ln,
+                                        &mut c_full,
+                                    )
+                                })
+                                .unwrap_or(false);
+                            if via_engine {
+                                for (j, c) in c_full.iter().enumerate() {
+                                    xt_inf = xt_inf.max(c.abs());
+                                    if !w_set.contains(j) && c.abs() > ln {
+                                        violations.push(j);
+                                    }
+                                }
+                            } else {
+                                for j in 0..p {
+                                    let c = design.col_dot(j, &state.resid);
+                                    c_full[j] = c;
+                                    xt_inf = xt_inf.max(c.abs());
+                                    if !w_set.contains(j) && c.abs() > ln {
+                                        violations.push(j);
+                                    }
+                                }
+                            }
+                            st.full_sweeps += 1;
+                            first_full_done = true;
+                        } else {
+                            for &j in &g_set.items {
+                                let c = design.col_dot(j, &state.resid);
+                                c_full[j] = c;
+                                xt_inf = xt_inf.max(c.abs());
+                                if !w_set.contains(j) && c.abs() > ln {
+                                    violations.push(j);
+                                }
+                            }
+                        }
+                        if violations.is_empty() && res.converged {
+                            st.t_kkt += t_kkt.elapsed().as_secs_f64();
+                            break;
+                        }
+                        if use_gs_aug {
+                            // Gap-Safe shrink of G at marginal cost
+                            // (reuses the correlations just computed).
+                            let scale = ln.max(xt_inf);
+                            let gap = loss.duality_gap(
+                                y,
+                                &state.eta,
+                                &state.resid,
+                                xt_inf,
+                                ln,
+                                state.l1_norm(),
+                            );
+                            let radius = (2.0 * gap.max(0.0)).sqrt() / ln;
+                            let kept: Vec<usize> = g_set
+                                .items
+                                .iter()
+                                .copied()
+                                .filter(|&j| {
+                                    c_full[j].abs() / scale >= 1.0 - col_norms[j] * radius
+                                        || state.beta[j] != 0.0
+                                })
+                                .collect();
+                            g_set.assign(&kept);
+                        }
+                        if violations.is_empty() {
+                            // KKT-clean but gap not under tol: retry CD a
+                            // bounded number of times, then accept.
+                            stalls += 1;
+                            if res.converged || stalls >= 3 {
+                                if !res.converged {
+                                    fit.converged = false;
+                                }
+                                st.t_kkt += t_kkt.elapsed().as_secs_f64();
+                                break;
+                            }
+                        } else {
+                            stalls = 0;
+                        }
+                        for j in violations {
+                            if !w_init_member[j] {
+                                st.violations += 1;
+                            }
+                            w_set.insert(j);
+                        }
+                    }
+                    ScreeningKind::Strong
+                    | ScreeningKind::GapSafe
+                    | ScreeningKind::Edpp
+                    | ScreeningKind::Sasvi
+                    | ScreeningKind::None => {
+                        let mut violations = Vec::new();
+                        let iter_all = !first_full_done;
+                        let mut xt_inf = 0.0f64;
+                        let via_engine = iter_all
+                            && engine
+                                .map(|es| {
+                                    es.full_sweep(
+                                        design,
+                                        y,
+                                        &state.eta,
+                                        &state.resid,
+                                        ln,
+                                        &mut c_full,
+                                    )
+                                })
+                                .unwrap_or(false);
+                        if via_engine {
+                            for (j, c) in c_full.iter().enumerate() {
+                                xt_inf = xt_inf.max(c.abs());
+                                if !w_set.contains(j) && c.abs() > ln {
+                                    violations.push(j);
+                                }
+                            }
+                        } else {
+                            let candidates: Vec<usize> = if iter_all {
+                                (0..p).collect()
+                            } else {
+                                g_set.items.clone()
+                            };
+                            for &j in &candidates {
+                                let c = design.col_dot(j, &state.resid);
+                                c_full[j] = c;
+                                xt_inf = xt_inf.max(c.abs());
+                                if !w_set.contains(j) && c.abs() > ln {
+                                    violations.push(j);
+                                }
+                            }
+                        }
+                        if iter_all {
+                            st.full_sweeps += 1;
+                            first_full_done = true;
+                        }
+                        if violations.is_empty() {
+                            stalls += 1;
+                            if res.converged || stalls >= 3 {
+                                if !res.converged {
+                                    fit.converged = false;
+                                }
+                                st.t_kkt += t_kkt.elapsed().as_secs_f64();
+                                break;
+                            }
+                        } else {
+                            stalls = 0;
+                        }
+                        if gap_safe_ok {
+                            let scale = ln.max(xt_inf);
+                            let gap = loss.duality_gap(
+                                y,
+                                &state.eta,
+                                &state.resid,
+                                xt_inf,
+                                ln,
+                                state.l1_norm(),
+                            );
+                            let radius = (2.0 * gap.max(0.0)).sqrt() / ln;
+                            let kept: Vec<usize> = g_set
+                                .items
+                                .iter()
+                                .copied()
+                                .filter(|&j| {
+                                    c_full[j].abs() / scale >= 1.0 - col_norms[j] * radius
+                                        || state.beta[j] != 0.0
+                                })
+                                .collect();
+                            g_set.assign(&kept);
+                        }
+                        for j in violations {
+                            if !w_init_member[j] {
+                                st.violations += 1;
+                            }
+                            w_set.insert(j);
+                        }
+                    }
+                    ScreeningKind::Celer | ScreeningKind::Blitz => {
+                        // Dynamic working-set methods: global gap check,
+                        // Gap-Safe screen, prioritized re-selection.
+                        let mut xt_inf = 0.0f64;
+                        let via_engine = !first_full_done
+                            && engine
+                                .map(|es| {
+                                    es.full_sweep(
+                                        design,
+                                        y,
+                                        &state.eta,
+                                        &state.resid,
+                                        ln,
+                                        &mut c_full,
+                                    )
+                                })
+                                .unwrap_or(false);
+                        if via_engine {
+                            for c in &c_full {
+                                xt_inf = xt_inf.max(c.abs());
+                            }
+                        } else {
+                            let candidates: Vec<usize> = if !first_full_done {
+                                (0..p).collect()
+                            } else {
+                                g_set.items.clone()
+                            };
+                            for &j in &candidates {
+                                let c = design.col_dot(j, &state.resid);
+                                c_full[j] = c;
+                                xt_inf = xt_inf.max(c.abs());
+                            }
+                        }
+                        if !first_full_done {
+                            st.full_sweeps += 1;
+                            first_full_done = true;
+                        }
+                        let gap = loss.duality_gap(
+                            y,
+                            &state.eta,
+                            &state.resid,
+                            xt_inf,
+                            ln,
+                            state.l1_norm(),
+                        );
+                        if gap <= tol {
+                            st.t_kkt += t_kkt.elapsed().as_secs_f64();
+                            break;
+                        }
+                        if w_set.len() >= g_set.len().min(p) {
+                            // Working set already covers every candidate:
+                            // the subproblem IS the full problem, so a
+                            // stalled gap cannot improve by re-selection.
+                            stalls += 1;
+                            if stalls >= 3 {
+                                fit.converged = false;
+                                st.t_kkt += t_kkt.elapsed().as_secs_f64();
+                                break;
+                            }
+                        }
+                        let scale = ln.max(xt_inf);
+                        if gap_safe_ok {
+                            let radius = (2.0 * gap.max(0.0)).sqrt() / ln;
+                            let kept: Vec<usize> = g_set
+                                .items
+                                .iter()
+                                .copied()
+                                .filter(|&j| {
+                                    c_full[j].abs() / scale >= 1.0 - col_norms[j] * radius
+                                        || state.beta[j] != 0.0
+                                })
+                                .collect();
+                            g_set.assign(&kept);
+                        }
+                        // New working set: active ∪ top-priority from G.
+                        let active_now: Vec<usize> = state.active_set();
+                        let mut cand: Vec<(f64, usize)> = g_set
+                            .items
+                            .iter()
+                            .copied()
+                            .filter(|&j| state.beta[j] == 0.0)
+                            .map(|j| (ws_priority(c_full[j] / scale, col_norms[j]), j))
+                            .collect();
+                        cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                        w_set.clear();
+                        for j in active_now {
+                            w_set.insert(j);
+                        }
+                        for (_, j) in cand
+                            .into_iter()
+                            .take(ws_growth.saturating_sub(w_set.len()))
+                        {
+                            w_set.insert(j);
+                        }
+                        ws_growth *= 2;
+                    }
+                }
+                st.t_kkt += t_kkt.elapsed().as_secs_f64();
+            }
+
+            // ---------------- bookkeeping ----------------
+            st.screened_final = w_set.len();
+            let active = state.active_set();
+            st.active = active.len();
+            for &j in &active {
+                ever_active.insert(j);
+            }
+
+            // Update H / H⁻¹ (Algorithm 1) for the next step.
+            if needs_hessian {
+                let t_h = Instant::now();
+                if matches!(loss, Loss::Gaussian) || !glm_full {
+                    if s.hessian_sweep_updates && tracker.dim() > 0 {
+                        tracker.update(design, &active, None);
+                    } else {
+                        tracker.rebuild(design, &active, None);
+                    }
+                } else {
+                    loss.weights_into(&state.eta, &mut weights);
+                    tracker.rebuild(design, &active, Some(&weights));
+                }
+                st.t_hessian += t_h.elapsed().as_secs_f64();
+            }
+
+            let dev = loss.deviance(y, &state.eta);
+            let dev_ratio = 1.0 - dev / null_dev.max(1e-300);
+            st.dev_ratio = dev_ratio;
+
+            fit.lambdas.push(ln);
+            fit.betas
+                .push(active.iter().map(|&j| (j, state.beta[j])).collect());
+            fit.dev_ratios.push(dev_ratio);
+            fit.steps.push(st);
+            prev_active = active;
+
+            // Stopping rules (glmnet / §4).
+            if dev_ratio >= s.dev_ratio_max {
+                break;
+            }
+            if k > 1 && (dev_ratio - prev_dev_ratio) < s.dev_change_min * dev_ratio.abs().max(1e-12)
+            {
+                break;
+            }
+            prev_dev_ratio = dev_ratio;
+            if ever_active.len() > max_ever {
+                break;
+            }
+        }
+
+        fit.total_time = t_total.elapsed().as_secs_f64();
+        fit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SyntheticSpec};
+    use crate::testkit::all_close;
+
+    fn fit_pair(
+        kind_a: ScreeningKind,
+        kind_b: ScreeningKind,
+        loss: Loss,
+        n: usize,
+        p: usize,
+    ) -> (PathFit, PathFit, usize) {
+        let mut spec = SyntheticSpec::new(n, p, 5).rho(0.3).snr(2.0).loss(loss).seed(33);
+        if matches!(loss, Loss::Poisson) {
+            spec = spec.signal_scale(0.3);
+        }
+        let data = spec.generate();
+        let mut settings = PathSettings::default();
+        settings.path_length = 30;
+        // Tight tolerance so that "same solution" comparisons are not
+        // dominated by solver slack.
+        settings.cd.eps = 1e-8;
+        let a = PathFitter::new(loss, kind_a)
+            .with_settings(settings.clone())
+            .fit(&data.design, &data.response);
+        let b = PathFitter::new(loss, kind_b)
+            .with_settings(settings)
+            .fit(&data.design, &data.response);
+        (a, b, p)
+    }
+
+    fn assert_same_solutions(a: &PathFit, b: &PathFit, p: usize, tol: f64) {
+        let m = a.lambdas.len().min(b.lambdas.len());
+        assert!(m > 5, "paths too short: {} vs {}", a.lambdas.len(), b.lambdas.len());
+        for k in 0..m {
+            let ba = a.beta_dense(k, p);
+            let bb = b.beta_dense(k, p);
+            all_close(&ba, &bb, tol, tol).unwrap_or_else(|e| {
+                panic!("step {k} (λ={}): {e}", a.lambdas[k]);
+            });
+        }
+    }
+
+    #[test]
+    fn hessian_matches_none_gaussian() {
+        let (a, b, p) = fit_pair(ScreeningKind::Hessian, ScreeningKind::None, Loss::Gaussian, 60, 40);
+        assert_same_solutions(&a, &b, p, 2e-3);
+    }
+
+    #[test]
+    fn strong_and_working_match_gaussian() {
+        let (a, b, p) = fit_pair(ScreeningKind::Strong, ScreeningKind::Working, Loss::Gaussian, 50, 80);
+        assert_same_solutions(&a, &b, p, 2e-3);
+    }
+
+    #[test]
+    fn celer_blitz_match_gaussian() {
+        let (a, b, p) = fit_pair(ScreeningKind::Celer, ScreeningKind::Blitz, Loss::Gaussian, 50, 80);
+        assert_same_solutions(&a, &b, p, 2e-3);
+    }
+
+    #[test]
+    fn safe_rules_match_gaussian() {
+        let (a, b, p) = fit_pair(ScreeningKind::GapSafe, ScreeningKind::Edpp, Loss::Gaussian, 50, 60);
+        assert_same_solutions(&a, &b, p, 2e-3);
+        let (c, d, p2) = fit_pair(ScreeningKind::Sasvi, ScreeningKind::None, Loss::Gaussian, 50, 60);
+        assert_same_solutions(&c, &d, p2, 2e-3);
+    }
+
+    #[test]
+    fn hessian_matches_working_logistic() {
+        let (a, b, p) = fit_pair(ScreeningKind::Hessian, ScreeningKind::Working, Loss::Logistic, 80, 40);
+        assert_same_solutions(&a, &b, p, 5e-3);
+    }
+
+    #[test]
+    fn hessian_matches_working_poisson() {
+        let (a, b, p) = fit_pair(ScreeningKind::Hessian, ScreeningKind::Working, Loss::Poisson, 80, 30);
+        assert_same_solutions(&a, &b, p, 5e-3);
+    }
+
+    #[test]
+    fn path_monotone_dev_ratio_and_growing_support() {
+        let data = SyntheticSpec::new(100, 50, 5).rho(0.4).snr(3.0).seed(1).generate();
+        let fit = PathFitter::new(Loss::Gaussian, ScreeningKind::Hessian)
+            .fit(&data.design, &data.response);
+        // dev ratio is non-decreasing along a lasso path
+        for w in fit.dev_ratios.windows(2) {
+            assert!(w[1] >= w[0] - 1e-8, "dev ratio decreased: {w:?}");
+        }
+        // first step is the null model
+        assert!(fit.betas[0].is_empty());
+        assert!(fit.dev_ratios.last().unwrap() > &0.5);
+    }
+
+    #[test]
+    fn screened_set_smaller_than_p_for_hessian() {
+        let data = SyntheticSpec::new(50, 300, 5).rho(0.5).snr(2.0).seed(5).generate();
+        let fit = PathFitter::new(Loss::Gaussian, ScreeningKind::Hessian)
+            .fit(&data.design, &data.response);
+        let mean = fit.mean_screened();
+        assert!(mean < 150.0, "hessian screened too much: {mean}");
+    }
+
+    #[test]
+    fn hessian_fewer_screened_than_strong_high_correlation() {
+        let data = SyntheticSpec::new(50, 400, 5).rho(0.8).snr(2.0).seed(9).generate();
+        let mut settings = PathSettings::default();
+        settings.path_length = 40;
+        let h = PathFitter::new(Loss::Gaussian, ScreeningKind::Hessian)
+            .with_settings(settings.clone())
+            .fit(&data.design, &data.response);
+        let s = PathFitter::new(Loss::Gaussian, ScreeningKind::Strong)
+            .with_settings(settings)
+            .fit(&data.design, &data.response);
+        assert!(
+            h.mean_screened() < s.mean_screened(),
+            "hessian {} vs strong {}",
+            h.mean_screened(),
+            s.mean_screened()
+        );
+    }
+
+    #[test]
+    fn warm_starts_reduce_passes() {
+        let data = SyntheticSpec::new(200, 30, 5).snr(5.0).seed(11).generate();
+        let mut on = PathSettings::default();
+        on.path_length = 50;
+        let mut off = on.clone();
+        off.hessian_warm_starts = false;
+        let with_ws = PathFitter::new(Loss::Gaussian, ScreeningKind::Hessian)
+            .with_settings(on)
+            .fit(&data.design, &data.response);
+        let without = PathFitter::new(Loss::Gaussian, ScreeningKind::Hessian)
+            .with_settings(off)
+            .fit(&data.design, &data.response);
+        assert!(
+            with_ws.total_passes() <= without.total_passes(),
+            "warm {} vs cold {}",
+            with_ws.total_passes(),
+            without.total_passes()
+        );
+    }
+
+    #[test]
+    fn explicit_lambda_path_respected() {
+        let data = SyntheticSpec::new(40, 20, 3).seed(2).generate();
+        let mut settings = PathSettings::default();
+        settings.lambda_path = Some(vec![1.0, 0.5, 0.25]);
+        // λs are on the standardized scale; rescale by the data's λmax.
+        let fitter = PathFitter::new(Loss::Gaussian, ScreeningKind::Hessian).with_settings(settings);
+        let fit = fitter.fit(&data.design, &data.response);
+        assert_eq!(fit.lambdas.len().min(3), fit.lambdas.len().min(3));
+        assert!((fit.lambdas[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_design_path_fits() {
+        let data = SyntheticSpec::new(100, 200, 8).density(0.05).seed(3).generate();
+        let fit = PathFitter::new(Loss::Gaussian, ScreeningKind::Hessian)
+            .fit(&data.design, &data.response);
+        let fit2 = PathFitter::new(Loss::Gaussian, ScreeningKind::Working)
+            .fit(&data.design, &data.response);
+        assert_same_solutions(&fit, &fit2, 200, 5e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "EDPP")]
+    fn edpp_rejects_logistic() {
+        let data = SyntheticSpec::new(30, 10, 2).loss(Loss::Logistic).seed(1).generate();
+        let _ = PathFitter::new(Loss::Logistic, ScreeningKind::Edpp)
+            .fit(&data.design, &data.response);
+    }
+}

@@ -1,0 +1,147 @@
+//! Correlated-Gaussian design sampling.
+//!
+//! The paper's simulated experiments (§4.1) draw rows of X i.i.d. from
+//! N(0, Σ) with Σ either compound-symmetric (pairwise correlation ρ) or
+//! block/AR-structured (used by the simulated real-data analogues). For
+//! compound symmetry we exploit the one-factor representation
+//!
+//! ```text
+//! x_j = sqrt(ρ) · z0 + sqrt(1 − ρ) · z_j ,  z ~ N(0, I)
+//! ```
+//!
+//! which is O(np) instead of the O(p²) Cholesky route and exactly
+//! matches Σ = ρ 11ᵀ + (1−ρ) I.
+
+use super::Xoshiro256pp;
+
+/// Source of correlated Gaussian design rows.
+pub struct GaussianSource<'a> {
+    rng: &'a mut Xoshiro256pp,
+}
+
+impl<'a> GaussianSource<'a> {
+    pub fn new(rng: &'a mut Xoshiro256pp) -> Self {
+        Self { rng }
+    }
+
+    /// Fill `row` (length p) with one draw from N(0, Σ_ρ) where
+    /// Σ_ρ = ρ 11ᵀ + (1−ρ) I (compound symmetry / equicorrelation).
+    pub fn fill_equicorrelated_row(&mut self, row: &mut [f64], rho: f64) {
+        debug_assert!((0.0..1.0).contains(&rho));
+        let shared = rho.sqrt() * self.rng.next_gaussian();
+        let own = (1.0 - rho).sqrt();
+        for v in row.iter_mut() {
+            *v = shared + own * self.rng.next_gaussian();
+        }
+    }
+
+    /// Fill `row` with one draw from an AR(1) process with parameter
+    /// `rho`: corr(x_i, x_j) = ρ^|i−j|. Used by some dataset analogues
+    /// to mimic locally-correlated (e.g. genomic) designs.
+    pub fn fill_ar1_row(&mut self, row: &mut [f64], rho: f64) {
+        debug_assert!((-1.0..1.0).contains(&rho));
+        if row.is_empty() {
+            return;
+        }
+        let innov = (1.0 - rho * rho).sqrt();
+        row[0] = self.rng.next_gaussian();
+        for j in 1..row.len() {
+            row[j] = rho * row[j - 1] + innov * self.rng.next_gaussian();
+        }
+    }
+
+    /// Fill `row` with a block-equicorrelated draw: predictors are split
+    /// into contiguous blocks of size `block`, correlation `rho` within a
+    /// block and 0 across blocks. Mimics gene-module structure.
+    pub fn fill_block_row(&mut self, row: &mut [f64], rho: f64, block: usize) {
+        debug_assert!(block > 0);
+        let own = (1.0 - rho).sqrt();
+        let mut j = 0;
+        while j < row.len() {
+            let shared = rho.sqrt() * self.rng.next_gaussian();
+            let end = (j + block).min(row.len());
+            for v in &mut row[j..end] {
+                *v = shared + own * self.rng.next_gaussian();
+            }
+            j = end;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_corr(
+        fill: impl Fn(&mut GaussianSource, &mut [f64]),
+        p: usize,
+        n: usize,
+        a: usize,
+        b: usize,
+    ) -> f64 {
+        let mut rng = Xoshiro256pp::seed_from_u64(17);
+        let mut row = vec![0.0; p];
+        let (mut sa, mut sb, mut saa, mut sbb, mut sab) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let mut src = GaussianSource::new(&mut rng);
+            fill(&mut src, &mut row);
+            let (x, y) = (row[a], row[b]);
+            sa += x;
+            sb += y;
+            saa += x * x;
+            sbb += y * y;
+            sab += x * y;
+        }
+        let nf = n as f64;
+        let cov = sab / nf - (sa / nf) * (sb / nf);
+        let va = saa / nf - (sa / nf) * (sa / nf);
+        let vb = sbb / nf - (sb / nf) * (sb / nf);
+        cov / (va * vb).sqrt()
+    }
+
+    #[test]
+    fn equicorrelated_pairwise_correlation() {
+        for &rho in &[0.0, 0.4, 0.8] {
+            let c = sample_corr(
+                |s, r| s.fill_equicorrelated_row(r, rho),
+                10,
+                40_000,
+                1,
+                7,
+            );
+            assert!((c - rho).abs() < 0.02, "rho={rho} got {c}");
+        }
+    }
+
+    #[test]
+    fn ar1_decay() {
+        let c1 = sample_corr(|s, r| s.fill_ar1_row(r, 0.7), 10, 40_000, 3, 4);
+        let c3 = sample_corr(|s, r| s.fill_ar1_row(r, 0.7), 10, 40_000, 3, 6);
+        assert!((c1 - 0.7).abs() < 0.02, "lag1 {c1}");
+        assert!((c3 - 0.7f64.powi(3)).abs() < 0.03, "lag3 {c3}");
+    }
+
+    #[test]
+    fn block_structure_within_vs_across() {
+        let within = sample_corr(|s, r| s.fill_block_row(r, 0.6, 5), 10, 40_000, 1, 3);
+        let across = sample_corr(|s, r| s.fill_block_row(r, 0.6, 5), 10, 40_000, 3, 7);
+        assert!((within - 0.6).abs() < 0.02, "within {within}");
+        assert!(across.abs() < 0.02, "across {across}");
+    }
+
+    #[test]
+    fn unit_marginal_variance() {
+        let mut rng = Xoshiro256pp::seed_from_u64(23);
+        let mut row = vec![0.0; 4];
+        let n = 60_000;
+        let mut s = 0.0;
+        let mut ss = 0.0;
+        for _ in 0..n {
+            GaussianSource::new(&mut rng).fill_equicorrelated_row(&mut row, 0.5);
+            s += row[2];
+            ss += row[2] * row[2];
+        }
+        let var = ss / n as f64 - (s / n as f64).powi(2);
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+}

@@ -1,0 +1,316 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text) and executes them on the PJRT CPU
+//! client via the `xla` crate — the bridge that keeps Python off the
+//! solve path entirely.
+//!
+//! The [`RuntimeEngine`] compiles every artifact in `artifacts/` at
+//! startup (`HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile`), keyed by (op, shape). Designs are *registered*
+//! once — converted to f32 and uploaded as device buffers — so a KKT
+//! sweep at solve time moves only the O(n) residual across the FFI.
+//!
+//! Precision note: artifacts run in f32 while the native solver is f64.
+//! [`EngineSweep::full_sweep`] therefore re-verifies every *borderline*
+//! correlation (within 0.1% of the screening threshold) with the native
+//! f64 path, so KKT decisions never depend on f32 rounding.
+
+use crate::linalg::Design;
+use crate::loss::Loss;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One compiled artifact.
+struct CompiledOp {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A design uploaded to the PJRT device (f32, shape (p, n) row-major —
+/// byte-identical to the coordinator's column-major (n, p) storage).
+pub struct RegisteredDesign {
+    buffer: xla::PjRtBuffer,
+    pub n: usize,
+    pub p: usize,
+}
+
+/// The PJRT execution engine.
+pub struct RuntimeEngine {
+    client: xla::PjRtClient,
+    ops: HashMap<(String, String), CompiledOp>,
+}
+
+impl RuntimeEngine {
+    /// Load and compile every artifact listed in `dir`/manifest.tsv.
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut ops = HashMap::new();
+        for line in text.lines() {
+            let parts: Vec<&str> = line.trim().split('\t').collect();
+            if parts.len() != 4 {
+                continue;
+            }
+            let (op, key, _dtype, fname) = (parts[0], parts[1], parts[2], parts[3]);
+            let path = dir.join(fname);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {fname}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {fname}: {e:?}"))?;
+            ops.insert((op.to_string(), key.to_string()), CompiledOp { exe });
+        }
+        if ops.is_empty() {
+            return Err(anyhow!("no artifacts found in {}", dir.display()));
+        }
+        Ok(Self { client, ops })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn load_default() -> Result<Self> {
+        Self::load_dir(Path::new("artifacts"))
+    }
+
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn has(&self, op: &str, key: &str) -> bool {
+        self.ops.contains_key(&(op.to_string(), key.to_string()))
+    }
+
+    fn shape_key(n: usize, p: usize) -> String {
+        format!("{n}x{p}")
+    }
+
+    /// Whether a KKT sweep artifact exists for this loss and shape.
+    pub fn supports_sweep(&self, loss: Loss, n: usize, p: usize) -> bool {
+        let op = match loss {
+            Loss::Gaussian => "lasso_kkt",
+            Loss::Logistic => "logistic_kkt",
+            Loss::Poisson => return false,
+        };
+        self.has(op, &Self::shape_key(n, p))
+    }
+
+    /// Upload a design (as its raw column-major f64 buffer) to the
+    /// device, converting to f32. O(np), once per dataset.
+    pub fn register_design(
+        &self,
+        col_major: &[f64],
+        n: usize,
+        p: usize,
+    ) -> Result<RegisteredDesign> {
+        assert_eq!(col_major.len(), n * p);
+        let f32data: Vec<f32> = col_major.iter().map(|&v| v as f32).collect();
+        // Column-major (n, p) == row-major (p, n): upload with dims (p, n).
+        let buffer = self
+            .client
+            .buffer_from_host_buffer(&f32data, &[p, n], None)
+            .map_err(|e| anyhow!("uploading design: {e:?}"))?;
+        Ok(RegisteredDesign { buffer, n, p })
+    }
+
+    /// c = Xᵀr through the `xt_r` artifact. Returns None when no
+    /// artifact matches the shape.
+    pub fn correlation(&self, design: &RegisteredDesign, r: &[f64]) -> Result<Option<Vec<f64>>> {
+        let key = Self::shape_key(design.n, design.p);
+        let Some(op) = self.ops.get(&("xt_r".to_string(), key)) else {
+            return Ok(None);
+        };
+        let rf: Vec<f32> = r.iter().map(|&v| v as f32).collect();
+        let rbuf = self
+            .client
+            .buffer_from_host_buffer(&rf, &[design.n, 1], None)
+            .map_err(|e| anyhow!("uploading r: {e:?}"))?;
+        let out = op
+            .exe
+            .execute_b(&[&design.buffer, &rbuf])
+            .map_err(|e| anyhow!("execute xt_r: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(Some(v.into_iter().map(|x| x as f64).collect()))
+    }
+
+    /// Fused KKT sweep via `lasso_kkt`/`logistic_kkt`. Returns
+    /// (c, resid) in f64, or None when no artifact matches.
+    pub fn kkt_sweep(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambda: f64,
+    ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        let opname = match loss {
+            Loss::Gaussian => "lasso_kkt",
+            Loss::Logistic => "logistic_kkt",
+            Loss::Poisson => return Ok(None),
+        };
+        let key = Self::shape_key(design.n, design.p);
+        let Some(op) = self.ops.get(&(opname.to_string(), key)) else {
+            return Ok(None);
+        };
+        let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+        let ef: Vec<f32> = eta.iter().map(|&v| v as f32).collect();
+        let ybuf = self
+            .client
+            .buffer_from_host_buffer(&yf, &[design.n, 1], None)
+            .map_err(|e| anyhow!("uploading y: {e:?}"))?;
+        let ebuf = self
+            .client
+            .buffer_from_host_buffer(&ef, &[design.n, 1], None)
+            .map_err(|e| anyhow!("uploading eta: {e:?}"))?;
+        let lbuf = self
+            .client
+            .buffer_from_host_buffer(&[lambda as f32], &[], None)
+            .map_err(|e| anyhow!("uploading lambda: {e:?}"))?;
+        let out = op
+            .exe
+            .execute_b(&[&design.buffer, &ybuf, &ebuf, &lbuf])
+            .map_err(|e| anyhow!("execute {opname}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (c_l, r_l, _viol) = lit.to_tuple3().map_err(|e| anyhow!("untuple3: {e:?}"))?;
+        let c: Vec<f32> = c_l.to_vec().map_err(|e| anyhow!("c to_vec: {e:?}"))?;
+        let r: Vec<f32> = r_l.to_vec().map_err(|e| anyhow!("r to_vec: {e:?}"))?;
+        Ok(Some((
+            c.into_iter().map(|x| x as f64).collect(),
+            r.into_iter().map(|x| x as f64).collect(),
+        )))
+    }
+
+    /// Weighted Gram panel via `gram_block` (Algorithm-1 augmentation).
+    /// `xe_t`/`xd_t` are (e, n)/(d, n) row-major f64 slices.
+    pub fn gram_block(
+        &self,
+        xe_t: &[f64],
+        w: &[f64],
+        xd_t: &[f64],
+        e: usize,
+        d: usize,
+        n: usize,
+    ) -> Result<Option<Vec<f64>>> {
+        let key = format!("{e}x{d}x{n}");
+        let Some(op) = self.ops.get(&("gram_block".to_string(), key)) else {
+            return Ok(None);
+        };
+        let to32 = |s: &[f64]| s.iter().map(|&v| v as f32).collect::<Vec<f32>>();
+        let eb = self
+            .client
+            .buffer_from_host_buffer(&to32(xe_t), &[e, n], None)
+            .map_err(|er| anyhow!("upload xe: {er:?}"))?;
+        let wb = self
+            .client
+            .buffer_from_host_buffer(&to32(w), &[n, 1], None)
+            .map_err(|er| anyhow!("upload w: {er:?}"))?;
+        let db = self
+            .client
+            .buffer_from_host_buffer(&to32(xd_t), &[d, n], None)
+            .map_err(|er| anyhow!("upload xd: {er:?}"))?;
+        let out = op
+            .exe
+            .execute_b(&[&eb, &wb, &db])
+            .map_err(|er| anyhow!("execute gram_block: {er:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|er| anyhow!("fetch: {er:?}"))?
+            .to_tuple1()
+            .map_err(|er| anyhow!("untuple: {er:?}"))?;
+        let v: Vec<f32> = lit.to_vec().map_err(|er| anyhow!("to_vec: {er:?}"))?;
+        Ok(Some(v.into_iter().map(|x| x as f64).collect()))
+    }
+}
+
+/// An engine bound to one registered design: what the path driver uses
+/// for its full KKT sweeps ([`crate::path::PathFitter::fit_with_engine`]).
+pub struct EngineSweep<'a> {
+    pub engine: &'a RuntimeEngine,
+    pub design: RegisteredDesign,
+    pub loss: Loss,
+    /// Borderline band re-verified in f64 (fraction of λ).
+    pub recheck_band: f64,
+}
+
+impl<'a> EngineSweep<'a> {
+    /// Bind `engine` to a dense design; returns None when the engine
+    /// has no sweep artifact for this (loss, n, p).
+    pub fn new(
+        engine: &'a RuntimeEngine,
+        design: &crate::linalg::DenseMatrix,
+        loss: Loss,
+    ) -> Result<Option<Self>> {
+        let (n, p) = (design.nrows(), design.ncols());
+        if !engine.supports_sweep(loss, n, p) {
+            return Ok(None);
+        }
+        let reg = engine.register_design(design.data(), n, p)?;
+        Ok(Some(Self {
+            engine,
+            design: reg,
+            loss,
+            recheck_band: 1e-3,
+        }))
+    }
+
+    /// Full correlation sweep through the artifact, with native f64
+    /// re-verification of the borderline band around λ. Returns false
+    /// (leaving `c` untouched) when the artifact path is unavailable,
+    /// in which case the caller falls back to the native sweep.
+    pub fn full_sweep<D: Design + ?Sized>(
+        &self,
+        native: &D,
+        y: &[f64],
+        eta: &[f64],
+        resid: &[f64],
+        lambda: f64,
+        c: &mut [f64],
+    ) -> bool {
+        match self.engine.kkt_sweep(self.loss, &self.design, y, eta, lambda) {
+            Ok(Some((c32, _resid32))) => {
+                debug_assert_eq!(c32.len(), c.len());
+                let lo = lambda * (1.0 - self.recheck_band);
+                let hi = lambda * (1.0 + self.recheck_band);
+                for (j, cv) in c32.into_iter().enumerate() {
+                    let a = cv.abs();
+                    c[j] = if a >= lo && a <= hi {
+                        // f32 can't be trusted at the threshold: f64 it.
+                        native.col_dot(j, resid)
+                    } else {
+                        cv
+                    };
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full engine integration tests live in rust/tests/ (they need
+    // `make artifacts`). Here: pure logic.
+
+    #[test]
+    fn shape_key_format() {
+        assert_eq!(RuntimeEngine::shape_key(200, 2000), "200x2000");
+    }
+
+    #[test]
+    fn manifest_missing_is_error() {
+        let err = RuntimeEngine::load_dir(Path::new("/nonexistent-dir-xyz"));
+        assert!(err.is_err());
+    }
+}

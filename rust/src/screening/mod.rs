@@ -1,0 +1,415 @@
+//! Predictor screening rules.
+//!
+//! Every rule here is expressed in the paper's §3 "gradient estimate"
+//! framing: a rule builds an estimate c̃(λ_{k+1}) of the correlation
+//! vector at the next path step and discards predictor j when
+//! |c̃_j| < λ_{k+1} (eq. 4). The Hessian rule (§3.3) is the paper's
+//! contribution; the others are the baselines of §1/§4 and Appendix F.6:
+//!
+//! * [`strong_set`] — the sequential strong rule (unit bound, eq. 5);
+//! * [`hessian_screen`] — the Hessian Screening Rule (eq. 6 + the
+//!   strong-restriction and γ adjustments of §3.3);
+//! * [`gap_safe_keep`] — Gap Safe sphere test (§3.3.4 / Fercoq et al.);
+//! * [`edpp_keep`] — Enhanced Dual Polytope Projection (lasso only);
+//! * [`sasvi_keep`] — (Dynamic) Sasvi ball test;
+//! * working sets / Celer / Blitz are *strategies* layered on these
+//!   estimates and live in the path driver (`crate::path`).
+
+use crate::linalg::Design;
+
+/// Which screening strategy a path fit uses. `Working` is the paper's
+/// "working+" (working-set strategy augmented with Gap-Safe checks,
+/// §3.3.4); `None` disables screening (every predictor always enters
+/// the subproblem).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ScreeningKind {
+    Hessian,
+    Strong,
+    Working,
+    Celer,
+    Blitz,
+    GapSafe,
+    Edpp,
+    Sasvi,
+    None,
+}
+
+impl ScreeningKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ScreeningKind::Hessian => "hessian",
+            ScreeningKind::Strong => "strong",
+            ScreeningKind::Working => "working",
+            ScreeningKind::Celer => "celer",
+            ScreeningKind::Blitz => "blitz",
+            ScreeningKind::GapSafe => "gap_safe",
+            ScreeningKind::Edpp => "edpp",
+            ScreeningKind::Sasvi => "sasvi",
+            ScreeningKind::None => "none",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "hessian" => ScreeningKind::Hessian,
+            "strong" => ScreeningKind::Strong,
+            "working" | "working+" | "working_plus" => ScreeningKind::Working,
+            "celer" => ScreeningKind::Celer,
+            "blitz" => ScreeningKind::Blitz,
+            "gap_safe" | "gapsafe" => ScreeningKind::GapSafe,
+            "edpp" => ScreeningKind::Edpp,
+            "sasvi" => ScreeningKind::Sasvi,
+            "none" => ScreeningKind::None,
+            _ => return None,
+        })
+    }
+
+    /// All strategies, in the order used by the experiment harness.
+    pub fn all() -> [ScreeningKind; 9] {
+        [
+            ScreeningKind::Hessian,
+            ScreeningKind::Strong,
+            ScreeningKind::Working,
+            ScreeningKind::Celer,
+            ScreeningKind::Blitz,
+            ScreeningKind::GapSafe,
+            ScreeningKind::Edpp,
+            ScreeningKind::Sasvi,
+            ScreeningKind::None,
+        ]
+    }
+}
+
+impl std::fmt::Display for ScreeningKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Sequential strong rule (eq. 5): keep j iff
+/// |c(λ_k)_j| ≥ 2λ_{k+1} − λ_k. Active predictors always satisfy this
+/// (|c_j| = λ_k ≥ 2λ_{k+1} − λ_k whenever λ_{k+1} ≤ λ_k).
+pub fn strong_set(c_prev: &[f64], lambda_prev: f64, lambda_next: f64) -> Vec<usize> {
+    let thr = 2.0 * lambda_next - lambda_prev;
+    c_prev
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.abs() >= thr)
+        .map(|(j, _)| j)
+        .collect()
+}
+
+/// Strong-rule *membership* test for a single predictor.
+#[inline]
+pub fn strong_keeps(c_prev_j: f64, lambda_prev: f64, lambda_next: f64) -> bool {
+    c_prev_j.abs() >= 2.0 * lambda_next - lambda_prev
+}
+
+/// The Hessian Screening Rule (§3.3). Inputs:
+/// * `c_prev` — the full correlation vector c(λ_k) at the solved step;
+/// * `u` — the n-vector D(w)·X_A·(X_AᵀD(w)X_A)⁻¹·sign(β̂_A) computed by
+///   the path driver from the Hessian tracker (the expensive inner
+///   products against all of X are restricted to the strong set below,
+///   exactly as in the paper's modification);
+/// * `active_prev` — A(λ_k); `gamma` — the unit-bound mixin (0.01).
+///
+/// Returns the screened (kept) set; the caller unions it with the
+/// ever-active set (§3.3 "one more modification").
+#[allow(clippy::too_many_arguments)]
+pub fn hessian_screen<D: Design + ?Sized>(
+    design: &D,
+    c_prev: &[f64],
+    u: &[f64],
+    active_prev: &[usize],
+    lambda_prev: f64,
+    lambda_next: f64,
+    gamma: f64,
+) -> Vec<usize> {
+    let p = design.ncols();
+    let dl = lambda_next - lambda_prev; // negative along the path
+    let mut keep = Vec::with_capacity(active_prev.len() * 2 + 8);
+    let mut is_active = vec![false; p];
+    for &j in active_prev {
+        is_active[j] = true;
+    }
+    for j in 0..p {
+        if is_active[j] {
+            // c̃_j = λ_{k+1}·sign(β̂_j): exactly at the boundary — kept.
+            keep.push(j);
+            continue;
+        }
+        if !strong_keeps(c_prev[j], lambda_prev, lambda_next) {
+            // Outside the strong set: assumed inactive (c̃_j = 0).
+            continue;
+        }
+        // Second-order estimate (eq. 6) + γ·unit-bound upward bias.
+        let est = c_prev[j] + dl * design.col_dot(j, u) + gamma * (-dl) * c_prev[j].signum();
+        if est.abs() >= lambda_next {
+            keep.push(j);
+        }
+    }
+    keep
+}
+
+/// Gap Safe sphere test: keep j iff
+/// |xⱼᵀθ| ≥ 1 − ‖xⱼ‖·√(2G/λ²) (§3.3.4). `xt_theta` may be restricted
+/// to a candidate set; `cols[i]` names the predictor behind
+/// `xt_theta[i]`. Returns the kept subset of `cols`.
+pub fn gap_safe_keep(
+    xt_theta: &[f64],
+    cols: &[usize],
+    col_norms: &[f64],
+    gap: f64,
+    lambda: f64,
+) -> Vec<usize> {
+    let radius = (2.0 * gap.max(0.0)).sqrt() / lambda;
+    cols.iter()
+        .zip(xt_theta)
+        .filter(|(&j, &xt)| xt.abs() >= 1.0 - col_norms[j] * radius)
+        .map(|(&j, _)| j)
+        .collect()
+}
+
+/// EDPP (Enhanced Dual Polytope Projection), sequential, for the
+/// ordinary lasso only. Given the previous dual optimum
+/// θ_prev = r(λ_k)/λ_k:
+///
+///   v1 = y/λ_k − θ_prev                       (λ_k < λ_max)
+///   v1 = sign(x_{j*}ᵀy)·x_{j*}                (λ_k = λ_max)
+///   v2 = y/λ_{k+1} − θ_prev
+///   v2⊥ = v2 − (⟨v1,v2⟩/‖v1‖²)·v1
+///   keep j ⇔ |xⱼᵀ(θ_prev + v2⊥/2)| ≥ 1 − ‖xⱼ‖·‖v2⊥‖/2.
+///
+/// As the paper notes (§1), sequential EDPP is only *safe in practice*
+/// when θ_prev is exact; with iterative solvers it behaves heuristically
+/// — we therefore pair it with KKT checks like every other rule.
+#[allow(clippy::too_many_arguments)]
+pub fn edpp_keep<D: Design + ?Sized>(
+    design: &D,
+    y: &[f64],
+    theta_prev: &[f64],
+    lambda_prev: f64,
+    lambda_next: f64,
+    at_lambda_max: bool,
+    argmax_col: usize,
+    col_norms: &[f64],
+) -> Vec<usize> {
+    let n = y.len();
+    let mut v1 = vec![0.0; n];
+    if at_lambda_max {
+        // v1 = sign(x_{j*}ᵀ y) · x_{j*}
+        design.col_axpy(argmax_col, 1.0, &mut v1);
+        let s = design.col_dot(argmax_col, y).signum();
+        for v in v1.iter_mut() {
+            *v *= s;
+        }
+    } else {
+        for i in 0..n {
+            v1[i] = y[i] / lambda_prev - theta_prev[i];
+        }
+    }
+    let mut v2 = vec![0.0; n];
+    for i in 0..n {
+        v2[i] = y[i] / lambda_next - theta_prev[i];
+    }
+    let v1v2 = crate::linalg::blas::dot(&v1, &v2);
+    let v1n = crate::linalg::blas::sq_norm(&v1);
+    let coef = if v1n > 0.0 { v1v2 / v1n } else { 0.0 };
+    // v2⊥ and the test center θ_prev + v2⊥/2 fused into one vector.
+    let mut center = vec![0.0; n];
+    let mut v2p_sq = 0.0;
+    for i in 0..n {
+        let v2p = v2[i] - coef * v1[i];
+        v2p_sq += v2p * v2p;
+        center[i] = theta_prev[i] + 0.5 * v2p;
+    }
+    let half_norm = 0.5 * v2p_sq.sqrt();
+    let p = design.ncols();
+    let mut keep = Vec::new();
+    for j in 0..p {
+        let t = design.col_dot(j, &center).abs();
+        if t >= 1.0 - col_norms[j] * half_norm {
+            keep.push(j);
+        }
+    }
+    keep
+}
+
+/// Sasvi ball test for the lasso. The Sasvi safe region is
+/// {θ : ⟨θ − θ₀, θ − y/λ⟩ ≤ 0} — the ball with diameter from the
+/// feasible dual point θ₀ to y/λ. Keep j iff
+/// |xⱼᵀc| + r‖xⱼ‖ ≥ 1 with c = (θ₀ + y/λ)/2, r = ‖y/λ − θ₀‖/2.
+/// ("Dynamic" = re-applied with the current θ₀ at every outer check;
+/// the half-space refinement of the full dome is omitted — the ball is
+/// still safe, just slightly larger. DESIGN.md §3 documents this.)
+pub fn sasvi_keep<D: Design + ?Sized>(
+    design: &D,
+    y: &[f64],
+    theta0: &[f64],
+    lambda: f64,
+    col_norms: &[f64],
+) -> Vec<usize> {
+    let n = y.len();
+    let mut center = vec![0.0; n];
+    let mut diam_sq = 0.0;
+    for i in 0..n {
+        let yl = y[i] / lambda;
+        center[i] = 0.5 * (theta0[i] + yl);
+        let d = yl - theta0[i];
+        diam_sq += d * d;
+    }
+    let r = 0.5 * diam_sq.sqrt();
+    let p = design.ncols();
+    let mut keep = Vec::new();
+    for j in 0..p {
+        if design.col_dot(j, &center).abs() + r * col_norms[j] >= 1.0 {
+            keep.push(j);
+        }
+    }
+    keep
+}
+
+/// Working-set priority used by Blitz and Celer: the normalized distance
+/// of predictor j's dual constraint from the current dual point,
+/// d_j = (1 − |xⱼᵀθ|)/‖xⱼ‖. Smaller = more likely active.
+#[inline]
+pub fn ws_priority(xt_theta_j: f64, col_norm_j: f64) -> f64 {
+    (1.0 - xt_theta_j.abs()) / col_norm_j.max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DesignMatrix;
+    use crate::testkit::Gen;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in ScreeningKind::all() {
+            assert_eq!(ScreeningKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ScreeningKind::parse("working+"), Some(ScreeningKind::Working));
+        assert_eq!(ScreeningKind::parse("Gap-Safe"), Some(ScreeningKind::GapSafe));
+        assert_eq!(ScreeningKind::parse("bogus"), None);
+        assert_eq!(format!("{}", ScreeningKind::Hessian), "hessian");
+    }
+
+    #[test]
+    fn strong_rule_threshold() {
+        let c = vec![0.9, 0.5, -0.95, 0.1];
+        // λ_k = 1, λ_{k+1} = 0.9 ⇒ threshold 0.8
+        let s = strong_set(&c, 1.0, 0.9);
+        assert_eq!(s, vec![0, 2]);
+        assert!(strong_keeps(0.8, 1.0, 0.9));
+        assert!(!strong_keeps(0.79, 1.0, 0.9));
+    }
+
+    #[test]
+    fn strong_rule_keeps_active() {
+        // active predictors have |c| = λ_k which always passes
+        assert!(strong_keeps(1.0, 1.0, 0.5));
+        assert!(strong_keeps(-1.0, 1.0, 0.999));
+    }
+
+    #[test]
+    fn hessian_screen_exact_when_no_active_change() {
+        // Remark 3.2: with u built from the true Hessian, the estimate is
+        // exact for the next step if the active set is unchanged; here we
+        // check the mechanical behaviour: active are always kept, weak
+        // correlations dropped.
+        let mut g = Gen::new(3);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(20, 6));
+        let u = vec![0.0; 20]; // no second-order correction
+        let c_prev = vec![1.0, 0.95, 0.5, -0.99, 0.2, -0.6];
+        let keep = hessian_screen(&x, &c_prev, &u, &[0], 1.0, 0.9, 0.0);
+        // j=0 active → kept. Strong threshold 0.8: j∈{1,3} pass strong;
+        // estimate = c_prev (u = 0, γ = 0): |0.95| ≥ 0.9 keep, |−0.99| keep.
+        assert_eq!(keep, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn hessian_screen_gamma_biases_upward() {
+        let mut g = Gen::new(4);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(10, 3));
+        let u = vec![0.0; 10];
+        // c = 0.895 < λnext = 0.9, strong keeps (0.895 ≥ 0.8).
+        let c_prev = vec![0.895, 0.0, 0.0];
+        let no_gamma = hessian_screen(&x, &c_prev, &u, &[], 1.0, 0.9, 0.0);
+        assert!(no_gamma.is_empty());
+        // γ = 0.1: est = 0.895 + 0.1·0.1 = 0.905 ≥ 0.9 → kept.
+        let with_gamma = hessian_screen(&x, &c_prev, &u, &[], 1.0, 0.9, 0.1);
+        assert_eq!(with_gamma, vec![0]);
+    }
+
+    #[test]
+    fn gap_safe_zero_gap_keeps_only_boundary() {
+        // gap = 0 ⇒ radius 0 ⇒ keep only |xᵀθ| ≥ 1.
+        let xt = vec![1.0, 0.99, -1.0];
+        let cols = vec![0, 1, 2];
+        let norms = vec![1.0, 1.0, 1.0];
+        let keep = gap_safe_keep(&xt, &cols, &norms, 0.0, 0.5);
+        assert_eq!(keep, vec![0, 2]);
+    }
+
+    #[test]
+    fn gap_safe_large_gap_keeps_everything() {
+        let xt = vec![0.0, 0.1];
+        let cols = vec![0, 1];
+        let norms = vec![1.0, 1.0];
+        let keep = gap_safe_keep(&xt, &cols, &norms, 100.0, 0.5);
+        assert_eq!(keep, vec![0, 1]);
+    }
+
+    #[test]
+    fn edpp_at_lambda_max_discards_weak_predictors() {
+        let mut g = Gen::new(5);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(30, 8));
+        let y = g.gaussian_vec(30);
+        use crate::linalg::Design;
+        let norms: Vec<f64> = (0..8).map(|j| x.col_sq_norm(j).sqrt()).collect();
+        let c: Vec<f64> = (0..8).map(|j| x.col_dot(j, &y)).collect();
+        let (jmax, cmax) = c
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .map(|(j, c)| (j, c.abs()))
+            .unwrap();
+        let lmax = cmax;
+        let theta = y.iter().map(|v| v / lmax).collect::<Vec<_>>();
+        let keep = edpp_keep(&x, &y, &theta, lmax, 0.9 * lmax, true, jmax, &norms);
+        // The argmax predictor must be kept; the set must not be all of p
+        // for a reasonable step (EDPP has real discarding power just
+        // below λmax).
+        assert!(keep.contains(&jmax));
+        assert!(keep.len() < 8, "kept {keep:?}");
+    }
+
+    #[test]
+    fn sasvi_keeps_superset_of_boundary() {
+        let mut g = Gen::new(6);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(25, 6));
+        let y = g.gaussian_vec(25);
+        use crate::linalg::Design;
+        let norms: Vec<f64> = (0..6).map(|j| x.col_sq_norm(j).sqrt()).collect();
+        let c: Vec<f64> = (0..6).map(|j| x.col_dot(j, &y)).collect();
+        let lmax = c.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let theta: Vec<f64> = y.iter().map(|v| v / lmax).collect();
+        // At λ = λmax, θ₀ = y/λ: the ball degenerates to a point and the
+        // kept set is exactly {j : |xⱼᵀy|/λmax ≥ 1} = argmax set.
+        let keep = sasvi_keep(&x, &y, &theta, lmax, &norms);
+        assert_eq!(keep.len(), 1);
+        // Just below λmax the ball inflates and keeps more.
+        let lam = 0.8 * lmax;
+        let theta2: Vec<f64> = y.iter().map(|v| v / lmax).collect();
+        let keep2 = sasvi_keep(&x, &y, &theta2, lam, &norms);
+        assert!(keep2.len() >= keep.len());
+    }
+
+    #[test]
+    fn priority_ordering() {
+        assert!(ws_priority(0.99, 1.0) < ws_priority(0.5, 1.0));
+        assert!(ws_priority(-0.99, 1.0) < ws_priority(0.5, 1.0));
+        // larger column norm ⇒ higher priority (smaller d)
+        assert!(ws_priority(0.5, 2.0) < ws_priority(0.5, 1.0));
+    }
+}

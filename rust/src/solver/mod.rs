@@ -1,0 +1,739 @@
+//! Subproblem solver: cyclic coordinate descent with shuffling (§4),
+//! duality-gap convergence `G(β, θ) ≤ ε·ζ`, and the Blitz-style line
+//! search for non-quadratic losses (§4, footnote 4).
+//!
+//! The solver always works on a *working set* `W` of predictor indices
+//! — the screening rules and the path driver (paper Alg. 2) decide what
+//! goes into `W`; this module solves
+//!
+//! ```text
+//! minimize over {β : supp(β) ⊆ W} of  f(β; X) + λ‖β‖₁ (+ φ‖β‖²/2)
+//! ```
+//!
+//! to duality gap ε·ζ and reports how many coordinate-descent passes it
+//! used (the quantity plotted in the paper's Figure 2).
+//!
+//! For the Gaussian loss, coordinate descent runs directly on the
+//! quadratic objective with an exactly-maintained residual. For general
+//! losses (§3.3.3) we use proximal-Newton steps: coordinate descent on
+//! the local quadratic model followed by a backtracking line search on
+//! the true objective (the "line search algorithm used in Blitz").
+
+use crate::linalg::blas::{self, soft_threshold};
+use crate::linalg::Design;
+use crate::loss::Loss;
+use crate::rng::Xoshiro256pp;
+
+/// Solver configuration (defaults follow the paper's §4).
+#[derive(Clone, Debug)]
+pub struct CdSettings {
+    /// Duality-gap tolerance multiplier: converged when G ≤ eps·ζ.
+    pub eps: f64,
+    /// Hard cap on coordinate-descent passes per subproblem.
+    pub max_passes: usize,
+    /// CD epochs per prox-Newton quadratic model (GLM losses).
+    pub inner_epochs: usize,
+    /// Backtracking line search on prox-Newton steps (Blitz §4).
+    pub line_search: bool,
+    /// Elastic-net quadratic penalty φ (0 = pure lasso).
+    pub phi: f64,
+    /// Shuffle coordinate order each pass (paper: "with shuffling").
+    pub shuffle: bool,
+}
+
+impl Default for CdSettings {
+    fn default() -> Self {
+        Self {
+            eps: 1e-4,
+            max_passes: 10_000,
+            inner_epochs: 1,
+            line_search: true,
+            phi: 0.0,
+            shuffle: true,
+        }
+    }
+}
+
+/// Outcome of one subproblem solve.
+#[derive(Clone, Copy, Debug)]
+pub struct SubResult {
+    /// Coordinate-descent passes used (Figure 2's y-axis).
+    pub passes: usize,
+    /// Final duality gap on the working set.
+    pub gap: f64,
+    pub converged: bool,
+}
+
+/// Mutable solve state threaded through the path driver. `eta = Xβ` and
+/// `resid = y − μ(η)` are kept consistent with `beta` on exit.
+pub struct SolveState {
+    pub beta: Vec<f64>,
+    pub eta: Vec<f64>,
+    pub resid: Vec<f64>,
+}
+
+impl SolveState {
+    pub fn new(n: usize, p: usize) -> Self {
+        Self {
+            beta: vec![0.0; p],
+            eta: vec![0.0; n],
+            resid: vec![0.0; n],
+        }
+    }
+
+    /// Recompute η = Xβ and the pseudo-residual from scratch.
+    pub fn refresh<D: Design + ?Sized>(&mut self, design: &D, y: &[f64], loss: Loss) {
+        self.eta.iter_mut().for_each(|v| *v = 0.0);
+        for (j, &b) in self.beta.iter().enumerate() {
+            if b != 0.0 {
+                design.col_axpy(j, b, &mut self.eta);
+            }
+        }
+        loss.pseudo_residual_into(y, &self.eta, &mut self.resid);
+    }
+
+    pub fn l1_norm(&self) -> f64 {
+        blas::asum(&self.beta)
+    }
+
+    /// Support of β.
+    pub fn active_set(&self) -> Vec<usize> {
+        self.beta
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| **b != 0.0)
+            .map(|(j, _)| j)
+            .collect()
+    }
+}
+
+/// Solve the subproblem restricted to `working`. Returns pass count and
+/// final gap. `col_sq_norms[j]` must hold ‖xⱼ‖² for j ∈ working.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_subproblem<D: Design + ?Sized>(
+    design: &D,
+    y: &[f64],
+    loss: Loss,
+    lambda: f64,
+    working: &[usize],
+    state: &mut SolveState,
+    col_sq_norms: &[f64],
+    zeta: f64,
+    settings: &CdSettings,
+    rng: &mut Xoshiro256pp,
+) -> SubResult {
+    match loss {
+        Loss::Gaussian => solve_gaussian(
+            design,
+            y,
+            lambda,
+            working,
+            state,
+            col_sq_norms,
+            zeta,
+            settings,
+            rng,
+        ),
+        _ => solve_glm(
+            design,
+            y,
+            loss,
+            lambda,
+            working,
+            state,
+            zeta,
+            settings,
+            rng,
+        ),
+    }
+}
+
+/// Duality gap of the *working-set* problem at the current state
+/// (Lemma 3.4's certificate: θ = resid / max(λ, ‖X_Wᵀ resid‖∞)).
+pub fn working_gap<D: Design + ?Sized>(
+    design: &D,
+    y: &[f64],
+    loss: Loss,
+    lambda: f64,
+    working: &[usize],
+    state: &SolveState,
+) -> f64 {
+    let mut xt_inf = 0.0f64;
+    for &j in working {
+        xt_inf = xt_inf.max(design.col_dot(j, &state.resid).abs());
+    }
+    loss.duality_gap(y, &state.eta, &state.resid, xt_inf, lambda, state.l1_norm())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn solve_gaussian<D: Design + ?Sized>(
+    design: &D,
+    y: &[f64],
+    lambda: f64,
+    working: &[usize],
+    state: &mut SolveState,
+    col_sq_norms: &[f64],
+    zeta: f64,
+    settings: &CdSettings,
+    rng: &mut Xoshiro256pp,
+) -> SubResult {
+    let tol = settings.eps * zeta;
+    // Maintain r = y − Xβ directly.
+    state.refresh(design, y, Loss::Gaussian);
+    let mut order: Vec<usize> = working.to_vec();
+    let mut passes = 0;
+
+    loop {
+        // Convergence check first: warm starts are often already optimal
+        // (paper Fig. 2 counts 1 pass in that regime, so we check before
+        // the first pass and count the epoch that confirms it).
+        // CD below maintains `resid` only, so sync η = y − r before the
+        // gap evaluation (the primal is computed from η).
+        for i in 0..y.len() {
+            state.eta[i] = y[i] - state.resid[i];
+        }
+        let gap = working_gap(design, y, Loss::Gaussian, lambda, working, state);
+        if gap <= tol || passes >= settings.max_passes {
+            return SubResult {
+                passes: passes.max(1),
+                gap,
+                converged: gap <= tol,
+            };
+        }
+        if settings.shuffle {
+            rng.shuffle(&mut order);
+        }
+        for &j in &order {
+            let vj = col_sq_norms[j];
+            if vj <= 0.0 {
+                continue;
+            }
+            let bj = state.beta[j];
+            let g = design.col_dot(j, &state.resid);
+            let u = g + vj * bj;
+            let new = soft_threshold(u, lambda) / (vj + settings.phi);
+            if new != bj {
+                design.col_axpy(j, bj - new, &mut state.resid);
+                state.beta[j] = new;
+            }
+        }
+        passes += 1;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn solve_glm<D: Design + ?Sized>(
+    design: &D,
+    y: &[f64],
+    loss: Loss,
+    lambda: f64,
+    working: &[usize],
+    state: &mut SolveState,
+    zeta: f64,
+    settings: &CdSettings,
+    rng: &mut Xoshiro256pp,
+) -> SubResult {
+    let n = y.len();
+    let tol = settings.eps * zeta;
+    state.refresh(design, y, loss);
+    let mut order: Vec<usize> = working.to_vec();
+    let mut passes = 0;
+    let mut w = vec![0.0; n];
+    let mut d_eta = vec![0.0; n];
+    let mut weighted_resid = vec![0.0; n];
+
+    loop {
+        let gap = working_gap(design, y, loss, lambda, working, state);
+        if gap <= tol || passes >= settings.max_passes {
+            return SubResult {
+                passes: passes.max(1),
+                gap,
+                converged: gap <= tol,
+            };
+        }
+
+        // Build the local quadratic model at the current β (paper
+        // §3.3.3): weights w = f″(η), gradient via the pseudo-residual.
+        loss.weights_into(&state.eta, &mut w);
+        // Guard against vanishing curvature far in the tails.
+        for wi in w.iter_mut() {
+            *wi = wi.max(1e-10);
+        }
+        d_eta.iter_mut().for_each(|v| *v = 0.0);
+        let beta0: Vec<f64> = order.iter().map(|&j| state.beta[j]).collect();
+
+        // Inner CD epochs on the quadratic model.
+        for _ in 0..settings.inner_epochs.max(1) {
+            if settings.shuffle {
+                rng.shuffle(&mut order);
+            }
+            // weighted_resid = w ⊙ d_eta, updated incrementally below.
+            for i in 0..n {
+                weighted_resid[i] = w[i] * d_eta[i];
+            }
+            for &j in &order {
+                // h_j = xⱼᵀ D(w) xⱼ ; recomputed per epoch because w is
+                // fixed within the quadratic model.
+                let hj = design_weighted_sq_norm(design, j, &w);
+                if hj <= 0.0 {
+                    continue;
+                }
+                let bj = state.beta[j];
+                // smooth grad of model: −xⱼᵀresid + xⱼᵀ(w ⊙ d_eta)
+                let g = -design.col_dot(j, &state.resid) + design.col_dot(j, &weighted_resid);
+                let u = hj * bj - g;
+                let new = soft_threshold(u, lambda) / (hj + settings.phi);
+                if new != bj {
+                    let delta = new - bj;
+                    // d_eta += delta * x_j ; weighted_resid += delta * w ⊙ x_j
+                    design.col_axpy(j, delta, &mut d_eta);
+                    state.beta[j] = new;
+                    // Recompute the weighted residual contribution lazily:
+                    // cheaper to axpy on weighted_resid with the weighted
+                    // column; we approximate by scaling after the fact.
+                    // Correctness requires weighted_resid == w ⊙ d_eta, so
+                    // update it exactly:
+                    design_col_axpy_weighted(design, j, delta, &w, &mut weighted_resid);
+                }
+            }
+            passes += 1;
+        }
+
+        // Proximal-Newton step direction is Δη = d_eta (already includes
+        // β updates). Line search on the true objective (Blitz).
+        let mut alpha = 1.0;
+        if settings.line_search {
+            let p0 = loss.value(y, &state.eta) + lambda * state.l1_norm_with(&order, &beta0);
+            let l1_new = state.l1_norm();
+            let mut trial_eta = vec![0.0; n];
+            let mut accepted = false;
+            for _ in 0..24 {
+                for i in 0..n {
+                    trial_eta[i] = state.eta[i] + alpha * d_eta[i];
+                }
+                // ℓ₁ norm along the segment interpolates ≤ linearly:
+                // ‖β0 + α(β−β0)‖₁ ≤ (1−α)‖β0‖₁ + α‖β‖₁; using the convex
+                // bound keeps the test conservative.
+                let l1_alpha = (1.0 - alpha) * state.l1_norm_with(&order, &beta0) + alpha * l1_new;
+                let p_trial = loss.value(y, &trial_eta) + lambda * l1_alpha;
+                if p_trial <= p0 + 1e-12 * p0.abs().max(1.0) {
+                    accepted = true;
+                    break;
+                }
+                alpha *= 0.5;
+            }
+            if !accepted {
+                alpha = 0.0;
+            }
+        }
+
+        if alpha == 1.0 {
+            blas::axpy(1.0, &d_eta, &mut state.eta);
+        } else {
+            // Scale β back toward β0 and rebuild η consistently.
+            for (k, &j) in order.iter().enumerate() {
+                state.beta[j] = beta0[k] + alpha * (state.beta[j] - beta0[k]);
+            }
+            blas::axpy(alpha, &d_eta, &mut state.eta);
+            if alpha == 0.0 {
+                // Stalled: bail out with the current gap.
+                loss.pseudo_residual_into(y, &state.eta, &mut state.resid);
+                let gap = working_gap(design, y, loss, lambda, working, state);
+                return SubResult {
+                    passes: passes.max(1),
+                    gap,
+                    converged: gap <= tol,
+                };
+            }
+        }
+        loss.pseudo_residual_into(y, &state.eta, &mut state.resid);
+    }
+}
+
+impl SolveState {
+    /// ‖β‖₁ when the coordinates in `order` are replaced by `vals`.
+    fn l1_norm_with(&self, order: &[usize], vals: &[f64]) -> f64 {
+        let mut s = self.l1_norm();
+        for (k, &j) in order.iter().enumerate() {
+            s += vals[k].abs() - self.beta[j].abs();
+        }
+        s
+    }
+}
+
+#[inline]
+fn design_weighted_sq_norm<D: Design + ?Sized>(design: &D, j: usize, w: &[f64]) -> f64 {
+    design.gram_weighted(j, j, Some(w))
+}
+
+/// v ← v + alpha · (w ⊙ xⱼ). Implemented via a temporary-free pass using
+/// the design's column access; for dense designs this costs one extra
+/// O(n) loop, which the prox-Newton structure amortizes.
+#[inline]
+fn design_col_axpy_weighted<D: Design + ?Sized>(
+    design: &D,
+    j: usize,
+    alpha: f64,
+    w: &[f64],
+    v: &mut [f64],
+) {
+    // Express w ⊙ xⱼ via two axpys is impossible generically; instead use
+    // col_dot-style traversal: reuse col_axpy on a scratch? Simplest
+    // correct approach: axpy into a zero scratch then fold. To avoid the
+    // allocation we exploit that col_axpy visits only the column's
+    // non-zeros: run it on `v` with a callback-free trick — materialize
+    // through a thread-local scratch.
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<Vec<f64>> = const { std::cell::RefCell::new(Vec::new()) };
+    }
+    SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        if s.len() < v.len() {
+            s.resize(v.len(), 0.0);
+        }
+        let scratch = &mut s[..v.len()];
+        scratch.iter_mut().for_each(|x| *x = 0.0);
+        design.col_axpy(j, alpha, scratch);
+        for i in 0..v.len() {
+            // scratch is sparse for CSC columns, but we cannot see the
+            // pattern here; the dense pass is the price of genericity.
+            v[i] += w[i] * scratch[i];
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DesignMatrix, SyntheticSpec};
+    use crate::linalg::DenseMatrix;
+
+    fn dense_problem(
+        n: usize,
+        p: usize,
+        s: usize,
+        loss: Loss,
+        seed: u64,
+    ) -> (DesignMatrix, Vec<f64>) {
+        let mut spec = SyntheticSpec::new(n, p, s).seed(seed).snr(3.0).loss(loss);
+        if matches!(loss, Loss::Poisson) {
+            spec = spec.signal_scale(0.3);
+        }
+        let d = spec.generate();
+        (d.design, d.response)
+    }
+
+    fn lambda_max<D: Design + ?Sized>(design: &D, y: &[f64], loss: Loss) -> f64 {
+        let mut resid = vec![0.0; y.len()];
+        let eta = vec![0.0; y.len()];
+        loss.pseudo_residual_into(y, &eta, &mut resid);
+        let mut m = 0.0f64;
+        for j in 0..design.ncols() {
+            m = m.max(design.col_dot(j, &resid).abs());
+        }
+        m
+    }
+
+    fn col_norms<D: Design + ?Sized>(design: &D) -> Vec<f64> {
+        (0..design.ncols()).map(|j| design.col_sq_norm(j)).collect()
+    }
+
+    /// Max KKT violation over all predictors: for active j,
+    /// |c_j − λ sign(β_j)|; for inactive, max(|c_j| − λ, 0).
+    fn kkt_violation<D: Design + ?Sized>(
+        design: &D,
+        state: &SolveState,
+        lambda: f64,
+    ) -> f64 {
+        let mut worst = 0.0f64;
+        for j in 0..design.ncols() {
+            let c = design.col_dot(j, &state.resid);
+            if state.beta[j] != 0.0 {
+                worst = worst.max((c - lambda * state.beta[j].signum()).abs());
+            } else {
+                worst = worst.max((c.abs() - lambda).max(0.0));
+            }
+        }
+        worst
+    }
+
+    #[test]
+    fn gaussian_full_working_set_satisfies_kkt() {
+        let (x, y) = dense_problem(60, 30, 4, Loss::Gaussian, 1);
+        let lmax = lambda_max(&x, &y, Loss::Gaussian);
+        let lambda = 0.3 * lmax;
+        let working: Vec<usize> = (0..30).collect();
+        let mut state = SolveState::new(60, 30);
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let norms = col_norms(&x);
+        let settings = CdSettings {
+            eps: 1e-8,
+            ..Default::default()
+        };
+        let zeta = Loss::Gaussian.zeta(&y);
+        let res = solve_subproblem(
+            &x, &y, Loss::Gaussian, lambda, &working, &mut state, &norms, zeta, &settings,
+            &mut rng,
+        );
+        assert!(res.converged, "gap {}", res.gap);
+        assert!(
+            kkt_violation(&x, &state, lambda) < 1e-3 * lambda,
+            "kkt {}",
+            kkt_violation(&x, &state, lambda)
+        );
+    }
+
+    #[test]
+    fn gaussian_lambda_max_gives_null_model() {
+        let (x, y) = dense_problem(40, 20, 3, Loss::Gaussian, 2);
+        let lmax = lambda_max(&x, &y, Loss::Gaussian);
+        let working: Vec<usize> = (0..20).collect();
+        let mut state = SolveState::new(40, 20);
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let norms = col_norms(&x);
+        let res = solve_subproblem(
+            &x,
+            &y,
+            Loss::Gaussian,
+            lmax * 1.0001,
+            &working,
+            &mut state,
+            &norms,
+            Loss::Gaussian.zeta(&y),
+            &CdSettings::default(),
+            &mut rng,
+        );
+        assert!(res.converged);
+        assert!(state.beta.iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn gaussian_matches_cholesky_solution_on_active_set() {
+        // With a fixed (correct) active set and sign vector, the lasso
+        // solution is (XᵀX)⁻¹(Xᵀy − λ sign) — Theorem 3.1's basis.
+        let (x, y) = dense_problem(80, 10, 2, Loss::Gaussian, 3);
+        let lambda = 0.1 * lambda_max(&x, &y, Loss::Gaussian);
+        let working: Vec<usize> = (0..10).collect();
+        let mut state = SolveState::new(80, 10);
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let norms = col_norms(&x);
+        let settings = CdSettings {
+            eps: 1e-10,
+            ..Default::default()
+        };
+        let res = solve_subproblem(
+            &x,
+            &y,
+            Loss::Gaussian,
+            lambda,
+            &working,
+            &mut state,
+            &norms,
+            Loss::Gaussian.zeta(&y),
+            &settings,
+            &mut rng,
+        );
+        assert!(res.converged);
+        let active = state.active_set();
+        assert!(!active.is_empty());
+        // closed form on the active set
+        let xd = match &x {
+            DesignMatrix::Dense(m) => m,
+            _ => unreachable!(),
+        };
+        let xa = xd.select_cols(&active);
+        let h = xa.t_gemm(&xa);
+        let mut rhs = vec![0.0; active.len()];
+        xa.t_gemv_dense(&y, &mut rhs);
+        for (k, &j) in active.iter().enumerate() {
+            rhs[k] -= lambda * state.beta[j].signum();
+        }
+        let sol = crate::linalg::cholesky::Cholesky::factor(&h).unwrap().solve(&rhs);
+        for (k, &j) in active.iter().enumerate() {
+            assert!(
+                (state.beta[j] - sol[k]).abs() < 1e-5,
+                "beta[{j}]={} vs {}",
+                state.beta[j],
+                sol[k]
+            );
+        }
+    }
+
+    #[test]
+    fn logistic_converges_and_satisfies_kkt() {
+        let (x, y) = dense_problem(100, 25, 4, Loss::Logistic, 4);
+        let lmax = lambda_max(&x, &y, Loss::Logistic);
+        let lambda = 0.2 * lmax;
+        let working: Vec<usize> = (0..25).collect();
+        let mut state = SolveState::new(100, 25);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let norms = col_norms(&x);
+        let settings = CdSettings {
+            eps: 1e-7,
+            ..Default::default()
+        };
+        let res = solve_subproblem(
+            &x,
+            &y,
+            Loss::Logistic,
+            lambda,
+            &working,
+            &mut state,
+            &norms,
+            Loss::Logistic.zeta(&y),
+            &settings,
+            &mut rng,
+        );
+        assert!(res.converged, "gap {}", res.gap);
+        assert!(
+            kkt_violation(&x, &state, lambda) < 1e-2 * lambda,
+            "kkt {}",
+            kkt_violation(&x, &state, lambda)
+        );
+    }
+
+    #[test]
+    fn poisson_converges() {
+        let (x, y) = dense_problem(120, 15, 3, Loss::Poisson, 5);
+        let lmax = lambda_max(&x, &y, Loss::Poisson);
+        let lambda = 0.3 * lmax;
+        let working: Vec<usize> = (0..15).collect();
+        let mut state = SolveState::new(120, 15);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let norms = col_norms(&x);
+        let settings = CdSettings {
+            eps: 1e-6,
+            ..Default::default()
+        };
+        let res = solve_subproblem(
+            &x,
+            &y,
+            Loss::Poisson,
+            lambda,
+            &working,
+            &mut state,
+            &norms,
+            Loss::Poisson.zeta(&y),
+            &settings,
+            &mut rng,
+        );
+        assert!(res.converged, "gap {}", res.gap);
+    }
+
+    #[test]
+    fn restricted_working_set_leaves_others_zero() {
+        let (x, y) = dense_problem(50, 20, 5, Loss::Gaussian, 6);
+        let lambda = 0.1 * lambda_max(&x, &y, Loss::Gaussian);
+        let working = vec![2, 7, 11];
+        let mut state = SolveState::new(50, 20);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let norms = col_norms(&x);
+        solve_subproblem(
+            &x,
+            &y,
+            Loss::Gaussian,
+            lambda,
+            &working,
+            &mut state,
+            &norms,
+            Loss::Gaussian.zeta(&y),
+            &CdSettings::default(),
+            &mut rng,
+        );
+        for j in 0..20 {
+            if !working.contains(&j) {
+                assert_eq!(state.beta[j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_needs_fewer_passes() {
+        let (x, y) = dense_problem(100, 40, 5, Loss::Gaussian, 7);
+        let lmax = lambda_max(&x, &y, Loss::Gaussian);
+        let working: Vec<usize> = (0..40).collect();
+        let norms = col_norms(&x);
+        let zeta = Loss::Gaussian.zeta(&y);
+        let settings = CdSettings::default();
+        // Cold solve at 0.5 λmax.
+        let mut cold = SolveState::new(100, 40);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let r1 = solve_subproblem(
+            &x, &y, Loss::Gaussian, 0.5 * lmax, &working, &mut cold, &norms, zeta, &settings,
+            &mut rng,
+        );
+        // Re-solve at the *same* λ warm: should take ~1 pass.
+        let r2 = solve_subproblem(
+            &x, &y, Loss::Gaussian, 0.5 * lmax, &working, &mut cold, &norms, zeta, &settings,
+            &mut rng,
+        );
+        assert!(r2.passes <= 2, "warm restart passes {}", r2.passes);
+        assert!(r1.passes >= r2.passes);
+    }
+
+    #[test]
+    fn sparse_design_solves_too() {
+        let d = SyntheticSpec::new(80, 60, 5)
+            .density(0.1)
+            .seed(8)
+            .generate();
+        let lambda = 0.3 * lambda_max(&d.design, &d.response, Loss::Gaussian);
+        let working: Vec<usize> = (0..60).collect();
+        let mut state = SolveState::new(80, 60);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let norms = col_norms(&d.design);
+        let res = solve_subproblem(
+            &d.design,
+            &d.response,
+            Loss::Gaussian,
+            lambda,
+            &working,
+            &mut state,
+            &norms,
+            Loss::Gaussian.zeta(&d.response),
+            &CdSettings::default(),
+            &mut rng,
+        );
+        assert!(res.converged);
+        assert!(kkt_violation(&d.design, &state, lambda) < 1e-2 * lambda);
+    }
+
+    #[test]
+    fn elastic_net_shrinks_more() {
+        let (x, y) = dense_problem(60, 20, 4, Loss::Gaussian, 9);
+        let lambda = 0.2 * lambda_max(&x, &y, Loss::Gaussian);
+        let working: Vec<usize> = (0..20).collect();
+        let norms = col_norms(&x);
+        let zeta = Loss::Gaussian.zeta(&y);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut lasso = SolveState::new(60, 20);
+        solve_subproblem(
+            &x, &y, Loss::Gaussian, lambda, &working, &mut lasso, &norms, zeta,
+            &CdSettings::default(), &mut rng,
+        );
+        let mut enet = SolveState::new(60, 20);
+        let settings = CdSettings {
+            phi: 50.0,
+            ..Default::default()
+        };
+        // Elastic-net KKT differs; we only check the shrinkage effect.
+        solve_subproblem(
+            &x, &y, Loss::Gaussian, lambda, &working, &mut enet, &norms, zeta, &settings,
+            &mut rng,
+        );
+        assert!(enet.l1_norm() < lasso.l1_norm());
+    }
+
+    #[test]
+    fn refresh_consistency() {
+        let m = DenseMatrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 2.0]]);
+        let x = DesignMatrix::Dense(m);
+        let y = vec![3.0, 4.0];
+        let mut st = SolveState::new(2, 2);
+        st.beta = vec![1.0, 0.5];
+        st.refresh(&x, &y, Loss::Gaussian);
+        assert_eq!(st.eta, vec![1.0, 1.0]);
+        assert_eq!(st.resid, vec![2.0, 3.0]);
+        assert_eq!(st.active_set(), vec![0, 1]);
+    }
+}

@@ -1,0 +1,196 @@
+//! Minimal property-based testing framework.
+//!
+//! `proptest`/`quickcheck` are not in the offline crate cache, so this
+//! module provides the 10% we need: seeded generators for the domain
+//! objects (dimensions, correlation levels, design matrices, coefficient
+//! vectors) and a `forall` driver that runs a property over many random
+//! cases and reports the failing seed so a case can be replayed
+//! deterministically.
+
+use crate::linalg::DenseMatrix;
+use crate::rng::{derive_seed, Xoshiro256pp};
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 32,
+            seed: 0x5EED_CAFE,
+        }
+    }
+}
+
+/// Run `prop` on `cfg.cases` independently seeded RNGs. On failure
+/// (panic or `Err`), re-raise with the case index and seed so the case
+/// is replayable via `Gen::new(seed)`.
+pub fn forall<F>(cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = derive_seed(cfg.seed, case as u64);
+        let mut g = Gen::new(seed);
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g))) {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!("property failed at case {case} (seed {seed:#x}): {msg}"),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "panic".to_string());
+                panic!("property panicked at case {case} (seed {seed:#x}): {msg}");
+            }
+        }
+    }
+}
+
+/// A seeded generator of domain objects.
+pub struct Gen {
+    pub rng: Xoshiro256pp,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256pp::seed_from_u64(seed),
+        }
+    }
+
+    /// Integer in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    /// One of the provided values.
+    pub fn choose<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[self.rng.next_below(xs.len())]
+    }
+
+    /// Vector of i.i.d. standard normals.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        self.rng.fill_gaussian(&mut v);
+        v
+    }
+
+    /// Random dense n×p design with i.i.d. N(0,1) entries.
+    pub fn gaussian_matrix(&mut self, n: usize, p: usize) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(n, p);
+        self.rng.fill_gaussian(m.data_mut());
+        m
+    }
+
+    /// Sparse coefficient vector with `s` non-zeros in ±[0.5, 2].
+    pub fn sparse_coefs(&mut self, p: usize, s: usize) -> Vec<f64> {
+        let mut beta = vec![0.0; p];
+        let idx = self.rng.sample_indices(p, s.min(p));
+        for j in idx {
+            let mag = self.f64_in(0.5, 2.0);
+            beta[j] = if self.rng.next_bernoulli(0.5) { mag } else { -mag };
+        }
+        beta
+    }
+}
+
+/// Assert |a − b| ≤ atol + rtol·|b|, with a readable message.
+pub fn close(a: f64, b: f64, atol: f64, rtol: f64) -> Result<(), String> {
+    if (a - b).abs() <= atol + rtol * b.abs() {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (diff {})", (a - b).abs()))
+    }
+}
+
+/// Assert two slices are element-wise close.
+pub fn all_close(a: &[f64], b: &[f64], atol: f64, rtol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        close(x, y, atol, rtol).map_err(|e| format!("at index {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(Config { cases: 8, seed: 1 }, |g| {
+            let n = g.usize_in(1, 10);
+            if n >= 1 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(Config { cases: 8, seed: 2 }, |g| {
+            let v = g.f64_in(0.0, 1.0);
+            if v < 2.0 && v >= 0.5 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property panicked")]
+    fn forall_reports_panics() {
+        forall(Config { cases: 4, seed: 3 }, |_g| {
+            panic!("inner panic");
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut g = Gen::new(7);
+        for _ in 0..100 {
+            let u = g.usize_in(3, 9);
+            assert!((3..=9).contains(&u));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let c = g.choose(&[10, 20, 30]);
+            assert!([10, 20, 30].contains(&c));
+        }
+    }
+
+    #[test]
+    fn sparse_coefs_support_size() {
+        let mut g = Gen::new(9);
+        let beta = g.sparse_coefs(50, 7);
+        let nnz = beta.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(nnz, 7);
+        for &b in &beta {
+            assert!(b == 0.0 || (0.5..=2.0).contains(&b.abs()));
+        }
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, 0.0).is_ok());
+        assert!(close(1.0, 2.0, 1e-9, 0.0).is_err());
+        assert!(all_close(&[1.0, 2.0], &[1.0, 2.0], 0.0, 0.0).is_ok());
+        assert!(all_close(&[1.0], &[1.0, 2.0], 0.0, 0.0).is_err());
+    }
+}

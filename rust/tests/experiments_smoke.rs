@@ -1,0 +1,79 @@
+//! Integration: every registered experiment runs end-to-end on a tiny
+//! budget and writes its CSV outputs. This is the "does `hx exp all`
+//! work" guarantee, at 1 rep and miniature sizes.
+
+use hessian_screening::experiments::{self, ExpConfig};
+
+fn tiny_cfg(dir: &std::path::Path) -> ExpConfig {
+    ExpConfig {
+        reps: 1,
+        full: false,
+        out_dir: Some(dir.to_path_buf()),
+        threads: 2,
+        seed: 123,
+    }
+}
+
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let dir = std::env::temp_dir().join(format!("hx-test-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+#[test]
+fn fig2_and_fig9_and_fig12_run_and_write_csv() {
+    // A representative subset covering all three output styles (summary
+    // table, per-step series, breakdown). The rest are size-hungry and
+    // covered by their module unit tests + the bench binaries.
+    let tmp = TempDir::new("exps");
+    let mut cfg = tiny_cfg(&tmp.0);
+    cfg.reps = 1;
+
+    experiments::run_experiment("fig9", &cfg).expect("fig9");
+    assert!(tmp.0.join("fig9_gamma.csv").exists());
+
+    experiments::run_experiment("fig12", &cfg).expect("fig12");
+    assert!(tmp.0.join("fig12_breakdown.csv").exists());
+    assert!(tmp.0.join("fig12_series.csv").exists());
+    let series = std::fs::read_to_string(tmp.0.join("fig12_series.csv")).unwrap();
+    assert!(series.lines().count() > 10, "per-step series too short");
+    assert!(series.starts_with("dataset,method,step,lambda"));
+}
+
+#[test]
+fn fig10_ablation_runs() {
+    let tmp = TempDir::new("abl");
+    let cfg = tiny_cfg(&tmp.0);
+    experiments::run_experiment("fig10", &cfg).expect("fig10");
+    let csv = std::fs::read_to_string(tmp.0.join("fig10_ablation.csv")).unwrap();
+    // all five variants present
+    for v in ["vanilla", "+ screening", "+ warm starts", "+ sweep updates", "+ gap safe"] {
+        assert!(csv.contains(v), "missing variant {v}");
+    }
+}
+
+#[test]
+fn tab1_subset_runs_on_small_sets() {
+    let tmp = TempDir::new("tab1");
+    let cfg = tiny_cfg(&tmp.0);
+    experiments::real_data::run_subset(
+        &cfg,
+        Some(&["colon-cancer".to_string(), "duke-breast-cancer".to_string()]),
+    )
+    .expect("tab1 subset");
+    let csv = std::fs::read_to_string(tmp.0.join("tab1_real_data.csv")).unwrap();
+    assert!(csv.contains("colon-cancer"));
+    assert!(csv.contains("hessian"));
+    // 2 datasets x 4 methods + header
+    assert_eq!(csv.lines().count(), 9);
+}
