@@ -1,0 +1,57 @@
+# Build/test entry points referenced throughout the docs and the
+# integration tests (rust/tests/runtime_roundtrip.rs).
+#
+#   make artifacts   lower the L2 graphs to HLO text (needs jax)
+#   make build       release build, default features (pure Rust)
+#   make test        build artifacts when possible, then cargo test
+#   make bench       run the experiment benches (quick presets)
+#   make ci          mirror the CI workflow locally
+#   make clean       remove build products
+
+CARGO ?= cargo
+PYTHON ?= python3
+ARTIFACTS_DIR := artifacts
+
+.PHONY: all build test test-rust artifacts bench ci fmt clippy clean
+
+all: build
+
+build:
+	$(CARGO) build --release
+
+# AOT artifacts for the PJRT backend. Requires a Python with jax
+# installed; skipped gracefully by `make test` when unavailable.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+
+# Full test entry point: build artifacts when the Python toolchain is
+# present (the PJRT tests skip politely otherwise), then run the crate
+# tests.
+test:
+	-$(MAKE) artifacts
+	$(CARGO) test -q
+
+# Crate tests only — what tier-1 CI runs on a fresh checkout.
+test-rust:
+	$(CARGO) test -q
+
+bench:
+	$(CARGO) bench
+
+fmt:
+	$(CARGO) fmt --all -- --check
+
+clippy:
+	$(CARGO) clippy --workspace -- -D warnings
+
+# Mirror .github/workflows/ci.yml locally.
+ci: fmt clippy
+	$(CARGO) build --release --workspace
+	$(CARGO) test -q
+	$(CARGO) bench --no-run
+	$(CARGO) check --workspace --features pjrt
+
+clean:
+	$(CARGO) clean
+	rm -rf $(ARTIFACTS_DIR) results
+	find python -name __pycache__ -type d -exec rm -rf {} +

@@ -65,14 +65,20 @@ fn main() {
     let gflops = 2.0 * n as f64 * p as f64 / sweep.mean / 1e9;
     println!("  -> native sweep throughput: {gflops:.2} GFLOP/s");
 
-    if let Ok(engine) = RuntimeEngine::load_default() {
-        let reg = engine.register_design(dense.data(), n, p).unwrap();
-        bench("PJRT xt_r artifact (200x20000)", 20, || {
-            let _ = engine.correlation(&reg, &v).unwrap();
-        });
-    } else {
-        println!("(PJRT artifacts not built; run `make artifacts`)");
-    }
+    // Backend sweep: PJRT artifacts when built with `--features pjrt`
+    // and `make artifacts`, the pure-Rust NativeBackend otherwise.
+    let engine = match RuntimeEngine::load_default() {
+        Ok(e) => e,
+        Err(_) => {
+            println!("(PJRT artifacts not built; benching the native backend)");
+            RuntimeEngine::native()
+        }
+    };
+    let reg = engine.register_design(dense.data(), n, p).unwrap();
+    let label = format!("{} xt_r backend sweep (200x20000)", engine.backend_name());
+    bench(&label, 20, || {
+        let _ = engine.correlation(&reg, &v).unwrap();
+    });
 
     // CD epoch over a 100-predictor working set.
     let working: Vec<usize> = (0..100).collect();

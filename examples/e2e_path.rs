@@ -27,15 +27,22 @@ fn main() {
         .generate();
     println!("workload: n={n} p={p} s=20 rho=0.4 (paper's appendix design)\n");
 
-    // --- Layer composition: PJRT-compiled sweep in the L3 hot path ---
+    // --- Layer composition: a compute backend in the L3 hot path ---
+    // PJRT artifacts when available (see `make artifacts` + the `pjrt`
+    // feature); the pure-Rust NativeBackend otherwise, so this example
+    // exercises the Backend → EngineSweep → driver chain either way.
     let engine = match RuntimeEngine::load_default() {
         Ok(e) => {
-            println!("runtime: loaded {} AOT artifacts via PJRT CPU", e.num_ops());
-            Some(e)
+            println!(
+                "runtime: loaded {} AOT artifacts ({} backend)",
+                e.num_ops(),
+                e.backend_name()
+            );
+            e
         }
         Err(e) => {
-            println!("runtime: artifacts unavailable ({e}); native sweeps only");
-            None
+            println!("runtime: artifacts unavailable ({e}); using the native backend");
+            RuntimeEngine::native()
         }
     };
 
@@ -46,10 +53,10 @@ fn main() {
 
     let fitter = PathFitter::new(Loss::Gaussian, ScreeningKind::Hessian);
     let fit_native = fitter.fit(&data.design, &data.response);
-    let fit_engine = engine.as_ref().and_then(|eng| {
-        let sweep = EngineSweep::new(eng, dense, Loss::Gaussian).ok().flatten()?;
-        Some(fitter.fit_with_engine(&data.design, &data.response, Some(&sweep)))
-    });
+    let fit_engine = EngineSweep::new(&engine, dense, Loss::Gaussian)
+        .ok()
+        .flatten()
+        .map(|sweep| fitter.fit_with_engine(&data.design, &data.response, Some(&sweep)));
     if let Some(fe) = &fit_engine {
         let m = fe.lambdas.len().min(fit_native.lambdas.len());
         let mut max_diff = 0.0f64;
@@ -61,7 +68,8 @@ fn main() {
             }
         }
         println!(
-            "PJRT-swept vs native path: {} steps, max |Δβ| = {max_diff:.2e}  (f32 artifact, f64 borderline recheck)",
+            "{}-swept vs native path: {} steps, max |Δβ| = {max_diff:.2e}  (borderline band rechecked in f64)",
+            engine.backend_name(),
             m
         );
         println!(

@@ -1,0 +1,3 @@
+"""Layer-2 compile package: JAX model graphs (`model`), Pallas kernels
+(`kernels`), and the AOT lowering driver (`aot`) that turns them into
+HLO-text artifacts for the rust PJRT backend."""

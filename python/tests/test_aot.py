@@ -4,10 +4,13 @@ rust integration test executes them for real numerics)."""
 
 import os
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", reason="jax not installed (advisory oracle suite)")
+
+import jax
+import jax.numpy as jnp
 
 from compile import aot, model
 

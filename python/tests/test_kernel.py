@@ -6,10 +6,14 @@ runtime executes exactly what these kernels lower to, so kernel == ref
 substitution. Hypothesis drives the shape/dtype sweep.
 """
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", reason="jax not installed (advisory oracle suite)")
+pytest.importorskip("hypothesis", reason="hypothesis not installed (advisory oracle suite)")
+
+import jax
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import gram_block, xt_r

@@ -1,10 +1,14 @@
 """Layer-2 graph tests: the fused model functions and their
 shape/layout contracts with the rust runtime."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", reason="jax not installed (advisory oracle suite)")
+pytest.importorskip("hypothesis", reason="hypothesis not installed (advisory oracle suite)")
+
+import jax
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from compile import model

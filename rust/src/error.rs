@@ -1,0 +1,107 @@
+//! Minimal error substrate.
+//!
+//! The offline image has no crate registry, so the crate is
+//! zero-dependency; this module provides the 5% of `anyhow` the
+//! runtime layer needs: a string-carrying [`Error`], a defaulted
+//! [`Result`] alias, a [`Context`] extension trait, and the [`err!`]
+//! format macro.
+
+use std::fmt;
+
+/// A boxed, message-carrying error.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Self {
+        Self { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Self {
+        Self { msg: msg.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias (error type defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style message chaining.
+pub trait Context<T> {
+    /// Attach a fixed message, keeping the original error as a suffix.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+
+    /// Attach a lazily built message.
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", msg.into())))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Build an [`Error`] from a format string, like `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_macro() {
+        let e = crate::err!("op {} failed", 3);
+        assert_eq!(e.to_string(), "op 3 failed");
+        let e2: Error = "plain".into();
+        assert_eq!(e2.to_string(), "plain");
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let base: std::result::Result<(), Error> = Err(Error::msg("inner"));
+        let wrapped = base.context("outer");
+        assert_eq!(wrapped.unwrap_err().to_string(), "outer: inner");
+        let lazy: std::result::Result<(), Error> = Err(Error::msg("x"));
+        let wrapped = lazy.with_context(|| "lazy ctx".to_string());
+        assert_eq!(wrapped.unwrap_err().to_string(), "lazy ctx: x");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::fs::read_to_string("/nonexistent-file-xyz");
+        let err: Result<String> = io.map_err(Error::from);
+        assert!(err.is_err());
+    }
+}

@@ -19,8 +19,12 @@
 //! * **L1 (python/compile/kernels/)** — Pallas kernels backing L2,
 //!   validated against a pure-jnp oracle.
 //!
-//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) so the solve path never touches Python.
+//! The [`runtime`] module hides the execution substrate behind a
+//! [`runtime::Backend`]: the default build ships the pure-Rust
+//! [`runtime::NativeBackend`] (zero dependencies, f64-exact), and the
+//! non-default `pjrt` cargo feature compiles the AOT/PJRT engine that
+//! loads the L2 artifacts so the solve path never touches Python. See
+//! the README's feature matrix.
 //!
 //! ## Quickstart
 //!
@@ -44,6 +48,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod cv;
 pub mod data;
+pub mod error;
 pub mod experiments;
 pub mod hessian;
 pub mod linalg;

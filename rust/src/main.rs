@@ -38,7 +38,8 @@ USAGE:
   hx cv  [--dataset NAME | --n N --p P --s S] [--folds K] [--method M]
          [--loss L] [--path-length M] [--seed K]
   hx homotopy [--n N --p P --s S] [--rho R] [--min-ratio X]
-  hx runtime-check [--artifacts DIR]
+  hx runtime-check [--artifacts DIR]   (native backend when artifacts or
+                                        the `pjrt` feature are absent)
   hx list
 ";
 
@@ -124,9 +125,16 @@ fn cmd_fit(args: &Args) -> Result<(), String> {
     let settings = path_settings_from(args)?;
     let fitter = PathFitter::new(loss, kind).with_settings(settings);
 
-    // Optional AOT/PJRT sweep engine.
+    // Optional sweep engine: PJRT artifacts when built with the `pjrt`
+    // feature and compiled, the pure-Rust NativeBackend otherwise.
     let engine = if args.flag("engine") {
-        Some(RuntimeEngine::load_default().map_err(|e| e.to_string())?)
+        Some(match RuntimeEngine::load_default() {
+            Ok(e) => e,
+            Err(err) => {
+                eprintln!("(artifacts unavailable: {err}; using the native backend)");
+                RuntimeEngine::native()
+            }
+        })
     } else {
         None
     };
@@ -135,11 +143,11 @@ fn cmd_fit(args: &Args) -> Result<(), String> {
         (Some(eng), hessian_screening::data::DesignMatrix::Dense(m)) => {
             match EngineSweep::new(eng, m, loss).map_err(|e| e.to_string())? {
                 Some(sweep) => {
-                    eprintln!("(full KKT sweeps via PJRT artifact)");
+                    eprintln!("(full KKT sweeps via the {} backend)", eng.backend_name());
                     fitter.fit_with_engine(&data.design, &data.response, Some(&sweep))
                 }
                 None => {
-                    eprintln!("(no artifact for this shape; native sweeps)");
+                    eprintln!("(no sweep kernel for this shape; native sweeps)");
                     fitter.fit(&data.design, &data.response)
                 }
             }
@@ -223,9 +231,11 @@ fn cmd_cv(args: &Args) -> Result<(), String> {
         )
     };
     let loss = data.loss;
-    let mut settings = CvSettings::default();
-    settings.n_folds = args.get_usize("folds")?.unwrap_or(10);
-    settings.path = path_settings_from(args)?;
+    let settings = CvSettings {
+        n_folds: args.get_usize("folds")?.unwrap_or(10),
+        path: path_settings_from(args)?,
+        ..Default::default()
+    };
     let t = std::time::Instant::now();
     let cv = cross_validate(&data.design, &data.response, loss, kind, &settings);
     let secs = t.elapsed().as_secs_f64();
@@ -294,9 +304,29 @@ fn cmd_homotopy(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_runtime_check(args: &Args) -> Result<(), String> {
-    let dir = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
-    let engine = RuntimeEngine::load_dir(&dir).map_err(|e| e.to_string())?;
-    println!("loaded {} compiled artifacts from {}", engine.num_ops(), dir.display());
+    let explicit_dir = args.get("artifacts");
+    let dir = std::path::PathBuf::from(explicit_dir.unwrap_or("artifacts"));
+    let engine = match RuntimeEngine::load_dir(&dir) {
+        Ok(e) => {
+            println!(
+                "loaded {} compiled artifacts from {} ({} backend)",
+                e.num_ops(),
+                dir.display(),
+                e.backend_name()
+            );
+            e
+        }
+        Err(err) if explicit_dir.is_some() => {
+            // The user named a directory: a load failure is a real
+            // failure, not an occasion to silently pass on the
+            // native backend.
+            return Err(format!("loading artifacts from {}: {err}", dir.display()));
+        }
+        Err(err) => {
+            println!("artifacts unavailable ({err}); checking the native backend");
+            RuntimeEngine::native()
+        }
+    };
 
     // Cross-check the 200x2000 sweep against the native path.
     let (n, p) = (200usize, 2_000usize);
@@ -312,7 +342,7 @@ fn cmd_runtime_check(args: &Args) -> Result<(), String> {
     let (c_pjrt, secs) = hessian_screening::metrics::timed(|| {
         engine.correlation(&reg, &r).map_err(|e| e.to_string())
     });
-    let c_pjrt = c_pjrt?.ok_or("no xt_r artifact for 200x2000")?;
+    let c_pjrt = c_pjrt?.ok_or("no xt_r kernel for 200x2000")?;
     let mut c_native = vec![0.0; p];
     let (_, native_secs) = hessian_screening::metrics::timed(|| {
         for (j, c) in c_native.iter_mut().enumerate() {
@@ -326,14 +356,21 @@ fn cmd_runtime_check(args: &Args) -> Result<(), String> {
         .fold(0.0f64, f64::max);
     let scale = c_native.iter().fold(0.0f64, |m, v| m.max(v.abs()));
     println!(
-        "xt_r 200x2000: pjrt={}s native={}s max|Δ|={max_diff:.3e} (scale {scale:.3e})",
+        "xt_r 200x2000: {}={}s native={}s max|Δ|={max_diff:.3e} (scale {scale:.3e})",
+        engine.backend_name(),
         fmt_secs(secs),
         fmt_secs(native_secs)
     );
     if max_diff > 1e-3 * scale.max(1.0) {
-        return Err(format!("PJRT/native mismatch: {max_diff}"));
+        return Err(format!(
+            "{}/native mismatch: {max_diff}",
+            engine.backend_name()
+        ));
     }
-    println!("runtime-check OK (f32 artifact agrees with native f64)");
+    println!(
+        "runtime-check OK ({} backend agrees with the native f64 reference)",
+        engine.backend_name()
+    );
     Ok(())
 }
 

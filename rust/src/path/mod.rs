@@ -231,10 +231,11 @@ impl PathFitter {
         self.fit_with_engine(design, y, None)
     }
 
-    /// Fit the path, running full KKT sweeps through an AOT PJRT engine
-    /// when one is provided and has a matching artifact (the L1/L2
-    /// compiled hot path; see `crate::runtime`). Falls back to the
-    /// native f64 sweep per call when the artifact path is unavailable.
+    /// Fit the path, running full KKT sweeps through a compute backend
+    /// ([`crate::runtime::Backend`] — the pure-Rust `NativeBackend`, or
+    /// the AOT/PJRT engine under the `pjrt` feature) when one is
+    /// provided and has a matching kernel. Falls back to the native f64
+    /// sweep per call when the backend path is unavailable.
     pub fn fit_with_engine<D: Design + ?Sized>(
         &self,
         design: &D,

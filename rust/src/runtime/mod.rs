@@ -1,73 +1,151 @@
-//! PJRT runtime: loads the AOT artifacts produced by
-//! `python/compile/aot.py` (HLO text) and executes them on the PJRT CPU
-//! client via the `xla` crate — the bridge that keeps Python off the
-//! solve path entirely.
+//! Compute-backend runtime for the solve path's full KKT sweeps.
 //!
-//! The [`RuntimeEngine`] compiles every artifact in `artifacts/` at
-//! startup (`HloModuleProto::from_text_file` → `XlaComputation` →
-//! `PjRtClient::compile`), keyed by (op, shape). Designs are *registered*
-//! once — converted to f32 and uploaded as device buffers — so a KKT
-//! sweep at solve time moves only the O(n) residual across the FFI.
+//! The path driver ([`crate::path::PathFitter::fit_with_engine`]) can
+//! route its hot full-set operations — the correlation sweep c = Xᵀr,
+//! the fused KKT sweep, and the weighted Gram panels of Algorithm 1 —
+//! through a [`Backend`]:
 //!
-//! Precision note: artifacts run in f32 while the native solver is f64.
-//! [`EngineSweep::full_sweep`] therefore re-verifies every *borderline*
-//! correlation (within 0.1% of the screening threshold) with the native
-//! f64 path, so KKT decisions never depend on f32 rounding.
+//! * [`NativeBackend`] (always available, the default): pure-Rust f64
+//!   kernels on top of [`crate::linalg`]. Zero dependencies, exact —
+//!   the reference implementation every other backend is checked
+//!   against.
+//! * `PjrtBackend` (behind the **`pjrt`** cargo feature): executes the
+//!   AOT artifacts produced by `python/compile/aot.py` (HLO text) on a
+//!   PJRT client. The engine code type-checks against the in-tree
+//!   `xla_stub` shim, so no XLA toolchain is needed to *build*;
+//!   wiring a real `xla`-crate client in is a linking concern, not an
+//!   API one (see README "Feature matrix").
+//!
+//! Precision contract: backends may compute in f32 (the AOT artifacts
+//! do). [`EngineSweep::full_sweep`] therefore re-verifies every
+//! *borderline* correlation (within `recheck_band` of the screening
+//! threshold) with the native f64 path, so KKT decisions never depend
+//! on reduced-precision rounding.
 
+use crate::error::Result;
 use crate::linalg::Design;
 use crate::loss::Loss;
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
 use std::path::Path;
 
-/// One compiled artifact.
-struct CompiledOp {
-    exe: xla::PjRtLoadedExecutable,
-}
+mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub mod xla_stub;
 
-/// A design uploaded to the PJRT device (f32, shape (p, n) row-major —
-/// byte-identical to the coordinator's column-major (n, p) storage).
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+/// A design registered with (uploaded to) a backend. Holds the
+/// backend-specific representation plus the logical shape.
 pub struct RegisteredDesign {
-    buffer: xla::PjRtBuffer,
     pub n: usize,
     pub p: usize,
+    pub(crate) repr: DesignRepr,
 }
 
-/// The PJRT execution engine.
+pub(crate) enum DesignRepr {
+    /// Column-major (n, p) f64 copy owned by the native backend.
+    Native(Vec<f64>),
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla_stub::PjRtBuffer),
+}
+
+/// The operations a compute backend provides to the path driver.
+///
+/// Every method that depends on a compiled artifact returns
+/// `Ok(None)` when the backend has nothing for the requested
+/// (op, shape); the caller then falls back to the native sweep.
+pub trait Backend: Send + Sync {
+    /// Short backend identifier ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Number of ops this backend can serve (compiled artifacts for
+    /// PJRT; the fixed native op set otherwise).
+    fn num_ops(&self) -> usize;
+
+    /// Whether a fused KKT sweep is available for this loss and shape.
+    fn supports_sweep(&self, loss: Loss, n: usize, p: usize) -> bool;
+
+    /// Whether this backend computes in exact f64. Exact backends skip
+    /// the borderline re-verification in [`EngineSweep::full_sweep`];
+    /// reduced-precision backends (f32 artifacts) must leave this
+    /// false.
+    fn is_exact(&self) -> bool {
+        false
+    }
+
+    /// Register a design from its raw column-major f64 buffer.
+    /// O(np), once per dataset.
+    fn register_design(&self, col_major: &[f64], n: usize, p: usize) -> Result<RegisteredDesign>;
+
+    /// c = Xᵀr. `None` when the backend has no kernel for this shape.
+    fn correlation(&self, design: &RegisteredDesign, r: &[f64]) -> Result<Option<Vec<f64>>>;
+
+    /// Fused KKT sweep: returns (c, pseudo-residual) at the given
+    /// linear predictor, or `None` when unavailable for this
+    /// (loss, shape).
+    fn kkt_sweep(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambda: f64,
+    ) -> Result<Option<(Vec<f64>, Vec<f64>)>>;
+
+    /// Weighted Gram panel X_E D(w) X_Dᵀ (row-major (e, d)), the
+    /// Algorithm-1 augmentation block. `xe_t`/`xd_t` are (e, n)/(d, n)
+    /// row-major f64 slices.
+    fn gram_block(
+        &self,
+        xe_t: &[f64],
+        w: &[f64],
+        xd_t: &[f64],
+        e: usize,
+        d: usize,
+        n: usize,
+    ) -> Result<Option<Vec<f64>>>;
+}
+
+/// The runtime engine: a [`Backend`] behind a stable, object-safe
+/// front the rest of the crate (path driver, CLI, benches) talks to.
 pub struct RuntimeEngine {
-    client: xla::PjRtClient,
-    ops: HashMap<(String, String), CompiledOp>,
+    backend: Box<dyn Backend>,
 }
 
 impl RuntimeEngine {
-    /// Load and compile every artifact listed in `dir`/manifest.tsv.
+    /// The pure-Rust backend. Always available, needs no artifacts.
+    pub fn native() -> Self {
+        Self {
+            backend: Box::new(NativeBackend),
+        }
+    }
+
+    /// Wrap an arbitrary backend implementation.
+    pub fn from_backend(backend: Box<dyn Backend>) -> Self {
+        Self { backend }
+    }
+
+    /// Load and compile every AOT artifact listed in `dir`/manifest.tsv
+    /// (PJRT). Without the `pjrt` feature this always errors: the
+    /// default build ships no artifact executor, only [`Self::native`].
+    #[cfg(feature = "pjrt")]
     pub fn load_dir(dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let manifest = dir.join("manifest.tsv");
-        let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("reading {}", manifest.display()))?;
-        let mut ops = HashMap::new();
-        for line in text.lines() {
-            let parts: Vec<&str> = line.trim().split('\t').collect();
-            if parts.len() != 4 {
-                continue;
-            }
-            let (op, key, _dtype, fname) = (parts[0], parts[1], parts[2], parts[3]);
-            let path = dir.join(fname);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {fname}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {fname}: {e:?}"))?;
-            ops.insert((op.to_string(), key.to_string()), CompiledOp { exe });
-        }
-        if ops.is_empty() {
-            return Err(anyhow!("no artifacts found in {}", dir.display()));
-        }
-        Ok(Self { client, ops })
+        Ok(Self {
+            backend: Box::new(pjrt::PjrtBackend::load_dir(dir)?),
+        })
+    }
+
+    /// See the `pjrt`-enabled variant; this build has no PJRT engine.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        Err(crate::err!(
+            "built without the `pjrt` feature: cannot load artifacts from {} \
+             (use RuntimeEngine::native(), or rebuild with --features pjrt)",
+            dir.display()
+        ))
     }
 
     /// Default artifact location relative to the repo root.
@@ -75,73 +153,40 @@ impl RuntimeEngine {
         Self::load_dir(Path::new("artifacts"))
     }
 
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
     pub fn num_ops(&self) -> usize {
-        self.ops.len()
+        self.backend.num_ops()
     }
 
-    pub fn has(&self, op: &str, key: &str) -> bool {
-        self.ops.contains_key(&(op.to_string(), key.to_string()))
-    }
-
-    fn shape_key(n: usize, p: usize) -> String {
-        format!("{n}x{p}")
-    }
-
-    /// Whether a KKT sweep artifact exists for this loss and shape.
+    /// Whether a KKT sweep is available for this loss and shape.
     pub fn supports_sweep(&self, loss: Loss, n: usize, p: usize) -> bool {
-        let op = match loss {
-            Loss::Gaussian => "lasso_kkt",
-            Loss::Logistic => "logistic_kkt",
-            Loss::Poisson => return false,
-        };
-        self.has(op, &Self::shape_key(n, p))
+        self.backend.supports_sweep(loss, n, p)
     }
 
-    /// Upload a design (as its raw column-major f64 buffer) to the
-    /// device, converting to f32. O(np), once per dataset.
+    /// Whether the backend computes in exact f64.
+    pub fn is_exact(&self) -> bool {
+        self.backend.is_exact()
+    }
+
+    /// Upload a design (as its raw column-major f64 buffer).
     pub fn register_design(
         &self,
         col_major: &[f64],
         n: usize,
         p: usize,
     ) -> Result<RegisteredDesign> {
-        assert_eq!(col_major.len(), n * p);
-        let f32data: Vec<f32> = col_major.iter().map(|&v| v as f32).collect();
-        // Column-major (n, p) == row-major (p, n): upload with dims (p, n).
-        let buffer = self
-            .client
-            .buffer_from_host_buffer(&f32data, &[p, n], None)
-            .map_err(|e| anyhow!("uploading design: {e:?}"))?;
-        Ok(RegisteredDesign { buffer, n, p })
+        self.backend.register_design(col_major, n, p)
     }
 
-    /// c = Xᵀr through the `xt_r` artifact. Returns None when no
-    /// artifact matches the shape.
+    /// c = Xᵀr; `None` when no kernel matches the shape.
     pub fn correlation(&self, design: &RegisteredDesign, r: &[f64]) -> Result<Option<Vec<f64>>> {
-        let key = Self::shape_key(design.n, design.p);
-        let Some(op) = self.ops.get(&("xt_r".to_string(), key)) else {
-            return Ok(None);
-        };
-        let rf: Vec<f32> = r.iter().map(|&v| v as f32).collect();
-        let rbuf = self
-            .client
-            .buffer_from_host_buffer(&rf, &[design.n, 1], None)
-            .map_err(|e| anyhow!("uploading r: {e:?}"))?;
-        let out = op
-            .exe
-            .execute_b(&[&design.buffer, &rbuf])
-            .map_err(|e| anyhow!("execute xt_r: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?
-            .to_tuple1()
-            .map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-        Ok(Some(v.into_iter().map(|x| x as f64).collect()))
+        self.backend.correlation(design, r)
     }
 
-    /// Fused KKT sweep via `lasso_kkt`/`logistic_kkt`. Returns
-    /// (c, resid) in f64, or None when no artifact matches.
+    /// Fused KKT sweep; `None` when unavailable for (loss, shape).
     pub fn kkt_sweep(
         &self,
         loss: Loss,
@@ -150,47 +195,10 @@ impl RuntimeEngine {
         eta: &[f64],
         lambda: f64,
     ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
-        let opname = match loss {
-            Loss::Gaussian => "lasso_kkt",
-            Loss::Logistic => "logistic_kkt",
-            Loss::Poisson => return Ok(None),
-        };
-        let key = Self::shape_key(design.n, design.p);
-        let Some(op) = self.ops.get(&(opname.to_string(), key)) else {
-            return Ok(None);
-        };
-        let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
-        let ef: Vec<f32> = eta.iter().map(|&v| v as f32).collect();
-        let ybuf = self
-            .client
-            .buffer_from_host_buffer(&yf, &[design.n, 1], None)
-            .map_err(|e| anyhow!("uploading y: {e:?}"))?;
-        let ebuf = self
-            .client
-            .buffer_from_host_buffer(&ef, &[design.n, 1], None)
-            .map_err(|e| anyhow!("uploading eta: {e:?}"))?;
-        let lbuf = self
-            .client
-            .buffer_from_host_buffer(&[lambda as f32], &[], None)
-            .map_err(|e| anyhow!("uploading lambda: {e:?}"))?;
-        let out = op
-            .exe
-            .execute_b(&[&design.buffer, &ybuf, &ebuf, &lbuf])
-            .map_err(|e| anyhow!("execute {opname}: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let (c_l, r_l, _viol) = lit.to_tuple3().map_err(|e| anyhow!("untuple3: {e:?}"))?;
-        let c: Vec<f32> = c_l.to_vec().map_err(|e| anyhow!("c to_vec: {e:?}"))?;
-        let r: Vec<f32> = r_l.to_vec().map_err(|e| anyhow!("r to_vec: {e:?}"))?;
-        Ok(Some((
-            c.into_iter().map(|x| x as f64).collect(),
-            r.into_iter().map(|x| x as f64).collect(),
-        )))
+        self.backend.kkt_sweep(loss, design, y, eta, lambda)
     }
 
-    /// Weighted Gram panel via `gram_block` (Algorithm-1 augmentation).
-    /// `xe_t`/`xd_t` are (e, n)/(d, n) row-major f64 slices.
+    /// Weighted Gram panel (Algorithm-1 augmentation).
     pub fn gram_block(
         &self,
         xe_t: &[f64],
@@ -200,34 +208,7 @@ impl RuntimeEngine {
         d: usize,
         n: usize,
     ) -> Result<Option<Vec<f64>>> {
-        let key = format!("{e}x{d}x{n}");
-        let Some(op) = self.ops.get(&("gram_block".to_string(), key)) else {
-            return Ok(None);
-        };
-        let to32 = |s: &[f64]| s.iter().map(|&v| v as f32).collect::<Vec<f32>>();
-        let eb = self
-            .client
-            .buffer_from_host_buffer(&to32(xe_t), &[e, n], None)
-            .map_err(|er| anyhow!("upload xe: {er:?}"))?;
-        let wb = self
-            .client
-            .buffer_from_host_buffer(&to32(w), &[n, 1], None)
-            .map_err(|er| anyhow!("upload w: {er:?}"))?;
-        let db = self
-            .client
-            .buffer_from_host_buffer(&to32(xd_t), &[d, n], None)
-            .map_err(|er| anyhow!("upload xd: {er:?}"))?;
-        let out = op
-            .exe
-            .execute_b(&[&eb, &wb, &db])
-            .map_err(|er| anyhow!("execute gram_block: {er:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|er| anyhow!("fetch: {er:?}"))?
-            .to_tuple1()
-            .map_err(|er| anyhow!("untuple: {er:?}"))?;
-        let v: Vec<f32> = lit.to_vec().map_err(|er| anyhow!("to_vec: {er:?}"))?;
-        Ok(Some(v.into_iter().map(|x| x as f64).collect()))
+        self.backend.gram_block(xe_t, w, xd_t, e, d, n)
     }
 }
 
@@ -237,13 +218,14 @@ pub struct EngineSweep<'a> {
     pub engine: &'a RuntimeEngine,
     pub design: RegisteredDesign,
     pub loss: Loss,
-    /// Borderline band re-verified in f64 (fraction of λ).
+    /// Borderline band re-verified in f64 (fraction of λ). Irrelevant
+    /// for exact-f64 backends, load-bearing for f32 artifact backends.
     pub recheck_band: f64,
 }
 
 impl<'a> EngineSweep<'a> {
     /// Bind `engine` to a dense design; returns None when the engine
-    /// has no sweep artifact for this (loss, n, p).
+    /// has no sweep kernel for this (loss, n, p).
     pub fn new(
         engine: &'a RuntimeEngine,
         design: &crate::linalg::DenseMatrix,
@@ -262,9 +244,9 @@ impl<'a> EngineSweep<'a> {
         }))
     }
 
-    /// Full correlation sweep through the artifact, with native f64
+    /// Full correlation sweep through the backend, with native f64
     /// re-verification of the borderline band around λ. Returns false
-    /// (leaving `c` untouched) when the artifact path is unavailable,
+    /// (leaving `c` untouched) when the backend path is unavailable,
     /// in which case the caller falls back to the native sweep.
     pub fn full_sweep<D: Design + ?Sized>(
         &self,
@@ -276,14 +258,20 @@ impl<'a> EngineSweep<'a> {
         c: &mut [f64],
     ) -> bool {
         match self.engine.kkt_sweep(self.loss, &self.design, y, eta, lambda) {
-            Ok(Some((c32, _resid32))) => {
-                debug_assert_eq!(c32.len(), c.len());
+            Ok(Some((c_backend, _resid_backend))) => {
+                debug_assert_eq!(c_backend.len(), c.len());
+                if self.engine.is_exact() {
+                    // Exact f64 backend: nothing to re-verify.
+                    c.copy_from_slice(&c_backend);
+                    return true;
+                }
                 let lo = lambda * (1.0 - self.recheck_band);
                 let hi = lambda * (1.0 + self.recheck_band);
-                for (j, cv) in c32.into_iter().enumerate() {
+                for (j, cv) in c_backend.into_iter().enumerate() {
                     let a = cv.abs();
                     c[j] = if a >= lo && a <= hi {
-                        // f32 can't be trusted at the threshold: f64 it.
+                        // Reduced precision can't be trusted at the
+                        // threshold: recompute in f64.
                         native.col_dot(j, resid)
                     } else {
                         cv
@@ -299,17 +287,70 @@ impl<'a> EngineSweep<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::{DesignMatrix, SyntheticSpec};
 
-    // Full engine integration tests live in rust/tests/ (they need
-    // `make artifacts`). Here: pure logic.
+    fn dense_problem(n: usize, p: usize) -> (crate::linalg::DenseMatrix, Vec<f64>) {
+        let data = SyntheticSpec::new(n, p, 3).rho(0.2).seed(11).generate();
+        let dense = match data.design {
+            DesignMatrix::Dense(m) => m,
+            _ => unreachable!(),
+        };
+        (dense, data.response)
+    }
 
     #[test]
-    fn shape_key_format() {
-        assert_eq!(RuntimeEngine::shape_key(200, 2000), "200x2000");
+    fn native_engine_reports_backend() {
+        let e = RuntimeEngine::native();
+        assert_eq!(e.backend_name(), "native");
+        assert!(e.num_ops() > 0);
+    }
+
+    #[test]
+    fn native_correlation_matches_direct() {
+        let (dense, y) = dense_problem(30, 12);
+        let e = RuntimeEngine::native();
+        let reg = e.register_design(dense.data(), 30, 12).unwrap();
+        let c = e.correlation(&reg, &y).unwrap().expect("native kernel");
+        for j in 0..12 {
+            assert!((c[j] - dense.col_dot(j, &y)).abs() < 1e-12, "col {j}");
+        }
+    }
+
+    #[test]
+    fn native_supports_all_shapes_except_poisson() {
+        let e = RuntimeEngine::native();
+        assert!(e.supports_sweep(Loss::Gaussian, 123, 456));
+        assert!(e.supports_sweep(Loss::Logistic, 7, 9));
+        assert!(!e.supports_sweep(Loss::Poisson, 200, 2_000));
+    }
+
+    #[test]
+    fn engine_sweep_binds_and_sweeps() {
+        let (dense, y) = dense_problem(40, 15);
+        let e = RuntimeEngine::native();
+        let sweep = EngineSweep::new(&e, &dense, Loss::Gaussian)
+            .unwrap()
+            .expect("native always binds");
+        let eta = vec![0.0; 40];
+        let resid = y.clone();
+        let mut c = vec![0.0; 15];
+        assert!(sweep.full_sweep(&dense, &y, &eta, &resid, 0.5, &mut c));
+        for j in 0..15 {
+            assert!((c[j] - dense.col_dot(j, &y)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn poisson_binding_is_none() {
+        let (dense, _) = dense_problem(20, 8);
+        let e = RuntimeEngine::native();
+        assert!(EngineSweep::new(&e, &dense, Loss::Poisson).unwrap().is_none());
     }
 
     #[test]
     fn manifest_missing_is_error() {
+        // Without `pjrt`: feature-gate error. With `pjrt`: manifest
+        // read failure. Either way, a clean Err — never a panic.
         let err = RuntimeEngine::load_dir(Path::new("/nonexistent-dir-xyz"));
         assert!(err.is_err());
     }

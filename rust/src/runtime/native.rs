@@ -1,0 +1,211 @@
+//! The pure-Rust compute backend: exact f64 kernels on top of
+//! [`crate::linalg`]. This is the reference implementation of the
+//! [`Backend`] surface — always available, no artifacts, no FFI — and
+//! the baseline every accelerated backend is cross-checked against
+//! (`rust/tests/runtime_roundtrip.rs`).
+
+use super::{Backend, DesignRepr, RegisteredDesign};
+use crate::error::Result;
+use crate::linalg::blas;
+use crate::loss::Loss;
+
+/// Zero-state native backend.
+pub struct NativeBackend;
+
+/// The op kinds the native backend serves: xt_r, the fused KKT sweep
+/// (Gaussian + logistic), and the weighted Gram panel.
+const NATIVE_OPS: usize = 3;
+
+impl NativeBackend {
+    fn column(data: &[f64], n: usize, j: usize) -> &[f64] {
+        &data[j * n..(j + 1) * n]
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn design_data(design: &RegisteredDesign) -> Result<&[f64]> {
+        match &design.repr {
+            DesignRepr::Native(data) => Ok(data),
+            _ => Err(crate::err!(
+                "design was registered with a different backend"
+            )),
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn design_data(design: &RegisteredDesign) -> Result<&[f64]> {
+        let DesignRepr::Native(data) = &design.repr;
+        Ok(data)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn num_ops(&self) -> usize {
+        NATIVE_OPS
+    }
+
+    fn supports_sweep(&self, loss: Loss, _n: usize, _p: usize) -> bool {
+        // Shape-agnostic: the native kernels are not compiled per shape.
+        // Poisson is excluded to mirror the artifact surface (no
+        // Lipschitz gradient, no fused sweep — paper App. F.9).
+        !matches!(loss, Loss::Poisson)
+    }
+
+    fn is_exact(&self) -> bool {
+        true
+    }
+
+    fn register_design(&self, col_major: &[f64], n: usize, p: usize) -> Result<RegisteredDesign> {
+        if col_major.len() != n * p {
+            return Err(crate::err!(
+                "design buffer has {} entries, expected {}x{}",
+                col_major.len(),
+                n,
+                p
+            ));
+        }
+        Ok(RegisteredDesign {
+            n,
+            p,
+            repr: DesignRepr::Native(col_major.to_vec()),
+        })
+    }
+
+    fn correlation(&self, design: &RegisteredDesign, r: &[f64]) -> Result<Option<Vec<f64>>> {
+        let data = Self::design_data(design)?;
+        if r.len() != design.n {
+            return Err(crate::err!(
+                "residual has length {}, expected {}",
+                r.len(),
+                design.n
+            ));
+        }
+        let c = (0..design.p)
+            .map(|j| blas::dot(Self::column(data, design.n, j), r))
+            .collect();
+        Ok(Some(c))
+    }
+
+    fn kkt_sweep(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        _lambda: f64,
+    ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        if matches!(loss, Loss::Poisson) {
+            return Ok(None);
+        }
+        let data = Self::design_data(design)?;
+        if y.len() != design.n || eta.len() != design.n {
+            return Err(crate::err!(
+                "y/eta have lengths {}/{}, expected {}",
+                y.len(),
+                eta.len(),
+                design.n
+            ));
+        }
+        let mut resid = vec![0.0; design.n];
+        loss.pseudo_residual_into(y, eta, &mut resid);
+        let c: Vec<f64> = (0..design.p)
+            .map(|j| blas::dot(Self::column(data, design.n, j), &resid))
+            .collect();
+        Ok(Some((c, resid)))
+    }
+
+    fn gram_block(
+        &self,
+        xe_t: &[f64],
+        w: &[f64],
+        xd_t: &[f64],
+        e: usize,
+        d: usize,
+        n: usize,
+    ) -> Result<Option<Vec<f64>>> {
+        if xe_t.len() != e * n || xd_t.len() != d * n || w.len() != n {
+            return Err(crate::err!(
+                "gram_block shape mismatch: xe {}, xd {}, w {} for (e={e}, d={d}, n={n})",
+                xe_t.len(),
+                xd_t.len(),
+                w.len()
+            ));
+        }
+        // Row-major (e, d) panel: out[a*d + b] = Σ_i xe[a,i] w[i] xd[b,i].
+        let mut out = vec![0.0; e * d];
+        for a in 0..e {
+            let xa = &xe_t[a * n..(a + 1) * n];
+            for b in 0..d {
+                let xb = &xd_t[b * n..(b + 1) * n];
+                out[a * d + b] = blas::dot_w(xa, xb, w);
+            }
+        }
+        Ok(Some(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{DenseMatrix, Design};
+    use crate::testkit::Gen;
+
+    #[test]
+    fn register_rejects_bad_shape() {
+        let b = NativeBackend;
+        assert!(b.register_design(&[1.0, 2.0, 3.0], 2, 2).is_err());
+    }
+
+    #[test]
+    fn kkt_sweep_matches_pseudo_residual_path() {
+        let mut g = Gen::new(5);
+        let m = g.gaussian_matrix(25, 10);
+        let y = g.gaussian_vec(25);
+        let eta = g.gaussian_vec(25);
+        let b = NativeBackend;
+        let reg = b.register_design(m.data(), 25, 10).unwrap();
+        for loss in [Loss::Gaussian, Loss::Logistic] {
+            let (c, resid) = b.kkt_sweep(loss, &reg, &y, &eta, 0.7).unwrap().unwrap();
+            let mut resid_ref = vec![0.0; 25];
+            loss.pseudo_residual_into(&y, &eta, &mut resid_ref);
+            for i in 0..25 {
+                assert!((resid[i] - resid_ref[i]).abs() < 1e-14);
+            }
+            for j in 0..10 {
+                assert!((c[j] - m.col_dot(j, &resid_ref)).abs() < 1e-12);
+            }
+        }
+        assert!(b.kkt_sweep(Loss::Poisson, &reg, &y, &eta, 0.7).unwrap().is_none());
+    }
+
+    #[test]
+    fn gram_block_matches_weighted_gram() {
+        let (e, d, n) = (4, 3, 20);
+        let mut g = Gen::new(6);
+        let m: DenseMatrix = g.gaussian_matrix(n, e + d);
+        let w: Vec<f64> = (0..n).map(|i| 0.1 + (i % 3) as f64 * 0.4).collect();
+        let mut xe_t = Vec::with_capacity(e * n);
+        for j in 0..e {
+            xe_t.extend_from_slice(m.col(j));
+        }
+        let mut xd_t = Vec::with_capacity(d * n);
+        for j in e..e + d {
+            xd_t.extend_from_slice(m.col(j));
+        }
+        let b = NativeBackend;
+        let panel = b.gram_block(&xe_t, &w, &xd_t, e, d, n).unwrap().unwrap();
+        for a in 0..e {
+            for bb in 0..d {
+                let want = m.gram_weighted(a, e + bb, Some(&w));
+                assert!(
+                    (panel[a * d + bb] - want).abs() < 1e-12,
+                    "panel ({a},{bb})"
+                );
+            }
+        }
+        assert!(b.gram_block(&xe_t, &w, &xd_t, e, d, n + 1).is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! PJRT artifact backend (behind the `pjrt` cargo feature).
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py` (HLO
+//! text) and executes them on a PJRT CPU client. Ops are compiled at
+//! startup (`HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile`), keyed by (op, shape). Designs are
+//! *registered* once — converted to f32 and uploaded as device buffers
+//! — so a KKT sweep at solve time moves only the O(n) residual across
+//! the FFI.
+//!
+//! This module type-checks against [`super::xla_stub`]; substituting
+//! the real `xla` crate is a one-line import swap (see the stub's
+//! module docs).
+
+use super::xla_stub as xla;
+use super::{Backend, DesignRepr, RegisteredDesign};
+use crate::error::{Context, Result};
+use crate::loss::Loss;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One compiled artifact.
+struct CompiledOp {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT execution backend.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    ops: HashMap<(String, String), CompiledOp>,
+}
+
+// NOTE: the stub handles are plain data, so `PjrtBackend` is
+// auto-Send/Sync. When the real `xla` crate is swapped in, the
+// compiler will demand an explicit (and deliberate) answer to the
+// thread-safety question via the `Backend: Send + Sync` bound —
+// do NOT paper over it with a blanket `unsafe impl`.
+
+impl PjrtBackend {
+    /// Load and compile every artifact listed in `dir`/manifest.tsv.
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| crate::err!("pjrt cpu client: {e}"))?;
+        let mut ops = HashMap::new();
+        for line in text.lines() {
+            let parts: Vec<&str> = line.trim().split('\t').collect();
+            if parts.len() != 4 {
+                continue;
+            }
+            let (op, key, _dtype, fname) = (parts[0], parts[1], parts[2], parts[3]);
+            let path = dir.join(fname);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| crate::err!("non-utf8 path"))?,
+            )
+            .map_err(|e| crate::err!("parsing {fname}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| crate::err!("compiling {fname}: {e}"))?;
+            ops.insert((op.to_string(), key.to_string()), CompiledOp { exe });
+        }
+        if ops.is_empty() {
+            return Err(crate::err!("no artifacts found in {}", dir.display()));
+        }
+        Ok(Self { client, ops })
+    }
+
+    pub fn has(&self, op: &str, key: &str) -> bool {
+        self.ops.contains_key(&(op.to_string(), key.to_string()))
+    }
+
+    fn shape_key(n: usize, p: usize) -> String {
+        format!("{n}x{p}")
+    }
+
+    fn buffer(design: &RegisteredDesign) -> Result<&xla::PjRtBuffer> {
+        match &design.repr {
+            DesignRepr::Pjrt(buf) => Ok(buf),
+            _ => Err(crate::err!(
+                "design was registered with a different backend"
+            )),
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    fn supports_sweep(&self, loss: Loss, n: usize, p: usize) -> bool {
+        let op = match loss {
+            Loss::Gaussian => "lasso_kkt",
+            Loss::Logistic => "logistic_kkt",
+            Loss::Poisson => return false,
+        };
+        self.has(op, &Self::shape_key(n, p))
+    }
+
+    /// Upload a design (as its raw column-major f64 buffer) to the
+    /// device, converting to f32. O(np), once per dataset.
+    fn register_design(&self, col_major: &[f64], n: usize, p: usize) -> Result<RegisteredDesign> {
+        if col_major.len() != n * p {
+            return Err(crate::err!(
+                "design buffer has {} entries, expected {}x{}",
+                col_major.len(),
+                n,
+                p
+            ));
+        }
+        let f32data: Vec<f32> = col_major.iter().map(|&v| v as f32).collect();
+        // Column-major (n, p) == row-major (p, n): upload with dims (p, n).
+        let buffer = self
+            .client
+            .buffer_from_host_buffer(&f32data, &[p, n], None)
+            .map_err(|e| crate::err!("uploading design: {e}"))?;
+        Ok(RegisteredDesign {
+            n,
+            p,
+            repr: DesignRepr::Pjrt(buffer),
+        })
+    }
+
+    /// c = Xᵀr through the `xt_r` artifact. Returns None when no
+    /// artifact matches the shape.
+    fn correlation(&self, design: &RegisteredDesign, r: &[f64]) -> Result<Option<Vec<f64>>> {
+        let key = Self::shape_key(design.n, design.p);
+        let Some(op) = self.ops.get(&("xt_r".to_string(), key)) else {
+            return Ok(None);
+        };
+        let design_buf = Self::buffer(design)?;
+        let rf: Vec<f32> = r.iter().map(|&v| v as f32).collect();
+        let rbuf = self
+            .client
+            .buffer_from_host_buffer(&rf, &[design.n, 1], None)
+            .map_err(|e| crate::err!("uploading r: {e}"))?;
+        let out = op
+            .exe
+            .execute_b(&[design_buf, &rbuf])
+            .map_err(|e| crate::err!("execute xt_r: {e}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| crate::err!("fetch result: {e}"))?
+            .to_tuple1()
+            .map_err(|e| crate::err!("untuple: {e}"))?;
+        let v: Vec<f32> = lit.to_vec().map_err(|e| crate::err!("to_vec: {e}"))?;
+        Ok(Some(v.into_iter().map(|x| x as f64).collect()))
+    }
+
+    /// Fused KKT sweep via `lasso_kkt`/`logistic_kkt`. Returns
+    /// (c, resid) in f64, or None when no artifact matches.
+    fn kkt_sweep(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambda: f64,
+    ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        let opname = match loss {
+            Loss::Gaussian => "lasso_kkt",
+            Loss::Logistic => "logistic_kkt",
+            Loss::Poisson => return Ok(None),
+        };
+        let key = Self::shape_key(design.n, design.p);
+        let Some(op) = self.ops.get(&(opname.to_string(), key)) else {
+            return Ok(None);
+        };
+        let design_buf = Self::buffer(design)?;
+        let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+        let ef: Vec<f32> = eta.iter().map(|&v| v as f32).collect();
+        let ybuf = self
+            .client
+            .buffer_from_host_buffer(&yf, &[design.n, 1], None)
+            .map_err(|e| crate::err!("uploading y: {e}"))?;
+        let ebuf = self
+            .client
+            .buffer_from_host_buffer(&ef, &[design.n, 1], None)
+            .map_err(|e| crate::err!("uploading eta: {e}"))?;
+        let lbuf = self
+            .client
+            .buffer_from_host_buffer(&[lambda as f32], &[], None)
+            .map_err(|e| crate::err!("uploading lambda: {e}"))?;
+        let out = op
+            .exe
+            .execute_b(&[design_buf, &ybuf, &ebuf, &lbuf])
+            .map_err(|e| crate::err!("execute {opname}: {e}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| crate::err!("fetch result: {e}"))?;
+        let (c_l, r_l, _viol) = lit.to_tuple3().map_err(|e| crate::err!("untuple3: {e}"))?;
+        let c: Vec<f32> = c_l.to_vec().map_err(|e| crate::err!("c to_vec: {e}"))?;
+        let r: Vec<f32> = r_l.to_vec().map_err(|e| crate::err!("r to_vec: {e}"))?;
+        Ok(Some((
+            c.into_iter().map(|x| x as f64).collect(),
+            r.into_iter().map(|x| x as f64).collect(),
+        )))
+    }
+
+    /// Weighted Gram panel via `gram_block` (Algorithm-1 augmentation).
+    fn gram_block(
+        &self,
+        xe_t: &[f64],
+        w: &[f64],
+        xd_t: &[f64],
+        e: usize,
+        d: usize,
+        n: usize,
+    ) -> Result<Option<Vec<f64>>> {
+        let key = format!("{e}x{d}x{n}");
+        let Some(op) = self.ops.get(&("gram_block".to_string(), key)) else {
+            return Ok(None);
+        };
+        let to32 = |s: &[f64]| s.iter().map(|&v| v as f32).collect::<Vec<f32>>();
+        let eb = self
+            .client
+            .buffer_from_host_buffer(&to32(xe_t), &[e, n], None)
+            .map_err(|er| crate::err!("upload xe: {er}"))?;
+        let wb = self
+            .client
+            .buffer_from_host_buffer(&to32(w), &[n, 1], None)
+            .map_err(|er| crate::err!("upload w: {er}"))?;
+        let db = self
+            .client
+            .buffer_from_host_buffer(&to32(xd_t), &[d, n], None)
+            .map_err(|er| crate::err!("upload xd: {er}"))?;
+        let out = op
+            .exe
+            .execute_b(&[&eb, &wb, &db])
+            .map_err(|er| crate::err!("execute gram_block: {er}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|er| crate::err!("fetch: {er}"))?
+            .to_tuple1()
+            .map_err(|er| crate::err!("untuple: {er}"))?;
+        let v: Vec<f32> = lit.to_vec().map_err(|er| crate::err!("to_vec: {er}"))?;
+        Ok(Some(v.into_iter().map(|x| x as f64).collect()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_key_format() {
+        assert_eq!(PjrtBackend::shape_key(200, 2000), "200x2000");
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        assert!(PjrtBackend::load_dir(Path::new("/nonexistent-dir-xyz")).is_err());
+    }
+}
