@@ -1,11 +1,23 @@
-//! Bench: micro-kernels on the L3 hot path — dot, axpy, the full
-//! correlation sweep (native and through the PJRT artifact when
-//! available), a coordinate-descent epoch, and the Algorithm-1 sweep
-//! update. This is the §Perf instrumentation (EXPERIMENTS.md).
+//! Bench: micro-kernels on the L3 hot path — dot, axpy, a
+//! coordinate-descent epoch, the Algorithm-1 panel update (scalar vs.
+//! engine-routed) — plus the sweep suite: the full correlation sweep
+//! and fused/batched KKT sweeps through the runtime backend at 1 and T
+//! threads. This is the §Perf instrumentation (EXPERIMENTS.md).
+//!
+//! Flags (after `--`):
+//!   --quick            tiny shape for CI smoke runs (200 x 4000)
+//!   --n N --p P        sweep-suite shape override (default 400 x 40000)
+//!   --threads T        threaded-kernel worker count (0 = all cores)
+//!   --reps R           timed repetitions per kernel
+//!   --json OUT         write the sweep-suite records to OUT
+//!                      (machine-readable perf trajectory — see
+//!                      BENCH_sweeps.json at the repo root)
 
+use hessian_screening::cli::Args;
 use hessian_screening::data::{DesignMatrix, SyntheticSpec};
 use hessian_screening::hessian::HessianTracker;
 use hessian_screening::linalg::{blas, Design};
+use hessian_screening::loss::Loss;
 use hessian_screening::metrics::Summary;
 use hessian_screening::rng::Xoshiro256pp;
 use hessian_screening::runtime::RuntimeEngine;
@@ -22,16 +34,71 @@ fn bench<F: FnMut()>(name: &str, reps: usize, mut f: F) -> Summary {
     }
     let s = Summary::of(&times);
     println!(
-        "{name:<42} {:>12.3} µs  ± {:>8.3}",
+        "{name:<52} {:>12.3} µs  ± {:>8.3}",
         s.mean * 1e6,
         s.ci_half * 1e6
     );
     s
 }
 
+/// One machine-readable sweep-suite record.
+struct Record {
+    name: &'static str,
+    n: usize,
+    p: usize,
+    backend: &'static str,
+    threads: usize,
+    batch: usize,
+    wall_seconds: f64,
+    ci_half: f64,
+}
+
+fn write_json(path: &str, records: &[Record]) {
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"n\": {}, \"p\": {}, \"backend\": \"{}\", \
+             \"threads\": {}, \"batch\": {}, \"wall_seconds\": {:.9}, \"ci_half\": {:.9}}}{}\n",
+            r.name,
+            r.n,
+            r.p,
+            r.backend,
+            r.threads,
+            r.batch,
+            r.wall_seconds,
+            r.ci_half,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    match std::fs::write(path, &s) {
+        Ok(()) => println!("\nwrote {} sweep records to {path}", records.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// Typed flag lookup that refuses to run on a malformed value — a
+/// silently-defaulted typo would poison the recorded perf trajectory.
+fn usize_flag(args: &Args, key: &str) -> Option<usize> {
+    match args.get_usize(key) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn main() {
-    let n = 200;
-    let p = 20_000;
+    let args = Args::parse(std::env::args().skip(1));
+    let quick = args.flag("quick");
+    // The quick shape still clears the native backend's parallel
+    // cutoff so the threaded records are real.
+    let n = usize_flag(&args, "n").unwrap_or(if quick { 200 } else { 400 });
+    let p = usize_flag(&args, "p").unwrap_or(if quick { 4_000 } else { 40_000 });
+    let reps = usize_flag(&args, "reps").unwrap_or(if quick { 5 } else { 15 });
+    let threads = usize_flag(&args, "threads").unwrap_or(0);
+
     let data = SyntheticSpec::new(n, p, 20).rho(0.4).seed(1).generate();
     let dense = match &data.design {
         DesignMatrix::Dense(m) => m.clone(),
@@ -45,47 +112,21 @@ fn main() {
     println!("micro-kernels (n={n}, p={p})");
     let col = dense.col(17).to_vec();
     let mut acc = 0.0;
-    bench("blas::dot (n=200)", 2_000, || {
+    bench("blas::dot", 2_000, || {
         acc += blas::dot(&col, std::hint::black_box(&v));
     });
     let mut out = vec![0.0; n];
-    bench("blas::axpy (n=200)", 2_000, || {
+    bench("blas::axpy", 2_000, || {
         blas::axpy(1.0001, &col, &mut out);
         std::hint::black_box(&out);
     });
 
-    let mut c = vec![0.0; p];
-    let sweep = bench("native full sweep X^T r (200x20000)", 50, || {
-        for j in 0..p {
-            c[j] = dense.col_dot(j, &v);
-        }
-        std::hint::black_box(&c);
-    });
-    // FLOP accounting: 2·n·p flops per sweep.
-    let gflops = 2.0 * n as f64 * p as f64 / sweep.mean / 1e9;
-    println!("  -> native sweep throughput: {gflops:.2} GFLOP/s");
-
-    // Backend sweep: PJRT artifacts when built with `--features pjrt`
-    // and `make artifacts`, the pure-Rust NativeBackend otherwise.
-    let engine = match RuntimeEngine::load_default() {
-        Ok(e) => e,
-        Err(_) => {
-            println!("(PJRT artifacts not built; benching the native backend)");
-            RuntimeEngine::native()
-        }
-    };
-    let reg = engine.register_design(dense.data(), n, p).unwrap();
-    let label = format!("{} xt_r backend sweep (200x20000)", engine.backend_name());
-    bench(&label, 20, || {
-        let _ = engine.correlation(&reg, &v).unwrap();
-    });
-
     // CD epoch over a 100-predictor working set.
-    let working: Vec<usize> = (0..100).collect();
+    let working: Vec<usize> = (0..100.min(p)).collect();
     let mut beta = vec![0.0; p];
     let mut resid = y.clone();
     let norms: Vec<f64> = working.iter().map(|&j| dense.col_sq_norm(j)).collect();
-    bench("CD epoch (|W|=100, n=200)", 500, || {
+    bench("CD epoch (|W|=100)", 200, || {
         for (k, &j) in working.iter().enumerate() {
             let g = dense.col_dot(j, &resid);
             let u = g + norms[k] * beta[j];
@@ -98,19 +139,147 @@ fn main() {
         std::hint::black_box(&resid);
     });
 
-    // Algorithm-1 sweep update: enter 10 predictors into a 90-strong set.
-    let base: Vec<usize> = (0..90).collect();
-    let next: Vec<usize> = (0..100).collect();
-    bench("Alg-1 sweep update (+10 into 90)", 50, || {
-        let mut t = HessianTracker::new(n as f64 * 1e-4);
-        t.rebuild(&dense, &base, None);
-        t.update(&dense, &next, None);
-    });
-    let mut tr = HessianTracker::new(n as f64 * 1e-4);
-    tr.rebuild(&dense, &base, None);
-    bench("Alg-1 rebuild from scratch (|A|=100)", 50, || {
-        let mut t = HessianTracker::new(n as f64 * 1e-4);
-        t.rebuild(&dense, &next, None);
-    });
+    // ---------------- sweep suite (JSON-recorded) ----------------
+    // The threaded engine at 1 thread is the sequential baseline; the
+    // per-column kernels are identical, so any delta is pure
+    // parallelism, not numerics.
+    let mut records: Vec<Record> = Vec::new();
+    let eta = vec![0.0; n];
+    let lookahead = 4usize;
+    let mut thread_counts = vec![1usize];
+    let t_engine = RuntimeEngine::native_threaded(threads);
+    if t_engine.threads() > 1 {
+        thread_counts.push(t_engine.threads());
+    }
+    println!("\nsweep suite (n={n}, p={p}, backends at threads {thread_counts:?})");
+    let mut per_thread_mean = Vec::new();
+    for &t in &thread_counts {
+        let engine = RuntimeEngine::native_threaded(t);
+        let reg = engine.register_design(dense.data(), n, p).unwrap();
+
+        let s = bench(&format!("correlation X^T r (threads={t})"), reps, || {
+            let _ = std::hint::black_box(engine.correlation(&reg, &v).unwrap());
+        });
+        records.push(Record {
+            name: "correlation",
+            n,
+            p,
+            backend: engine.backend_name(),
+            threads: t,
+            batch: 1,
+            wall_seconds: s.mean,
+            ci_half: s.ci_half,
+        });
+
+        let s = bench(&format!("fused kkt_sweep (threads={t})"), reps, || {
+            let _ = std::hint::black_box(
+                engine.kkt_sweep(Loss::Gaussian, &reg, &y, &eta, 0.5).unwrap(),
+            );
+        });
+        records.push(Record {
+            name: "kkt_sweep",
+            n,
+            p,
+            backend: engine.backend_name(),
+            threads: t,
+            batch: 1,
+            wall_seconds: s.mean,
+            ci_half: s.ci_half,
+        });
+        per_thread_mean.push(s.mean);
+        let gflops = 2.0 * n as f64 * p as f64 / s.mean / 1e9;
+        println!("  -> kkt_sweep throughput: {gflops:.2} GFLOP/s");
+
+        // Batched look-ahead: one sweep + B mask passes vs. B sweeps.
+        let lambdas: Vec<f64> = (0..lookahead).map(|i| 0.9 - 0.1 * i as f64).collect();
+        let s = bench(
+            &format!("kkt_sweep_batch B={lookahead} (threads={t})"),
+            reps,
+            || {
+                let _ = std::hint::black_box(
+                    engine
+                        .kkt_sweep_batch(Loss::Gaussian, &reg, &y, &eta, &lambdas, 0.0)
+                        .unwrap(),
+                );
+            },
+        );
+        records.push(Record {
+            name: "kkt_sweep_batch",
+            n,
+            p,
+            backend: engine.backend_name(),
+            threads: t,
+            batch: lookahead,
+            wall_seconds: s.mean,
+            ci_half: s.ci_half,
+        });
+        println!(
+            "  -> amortized per-λ: {:.3} µs ({}x over per-λ sweeps)",
+            s.mean / lookahead as f64 * 1e6,
+            lookahead
+        );
+
+        // Algorithm-1 augmentation panel through the backend.
+        let e_sz = 90.min(p.saturating_sub(10));
+        let base: Vec<usize> = (0..e_sz).collect();
+        let next: Vec<usize> = (0..e_sz + 10).collect();
+        let s = bench(&format!("Alg-1 panel update (threads={t})"), reps.min(20), || {
+            let mut tr = HessianTracker::new(n as f64 * 1e-4).with_engine(&engine);
+            tr.rebuild(&dense, &base, None);
+            tr.update(&dense, &next, None);
+            std::hint::black_box(tr.dim());
+        });
+        records.push(Record {
+            name: "alg1_panel_update",
+            n,
+            p,
+            backend: engine.backend_name(),
+            threads: t,
+            batch: 1,
+            wall_seconds: s.mean,
+            ci_half: s.ci_half,
+        });
+    }
+    if per_thread_mean.len() == 2 {
+        println!(
+            "\nkkt_sweep speedup at {} threads: {:.2}x",
+            thread_counts[1],
+            per_thread_mean[0] / per_thread_mean[1]
+        );
+    }
+
+    // Artifact backend (pjrt feature + `make artifacts`): add a record
+    // so the perf trajectory also tracks the artifact-served sweep.
+    match RuntimeEngine::load_default() {
+        Ok(engine) => {
+            let reg = engine.register_design(dense.data(), n, p).unwrap();
+            if engine.correlation(&reg, &v).unwrap().is_some() {
+                let s = bench(
+                    &format!("{} artifact correlation sweep", engine.backend_name()),
+                    reps,
+                    || {
+                        let _ = std::hint::black_box(engine.correlation(&reg, &v).unwrap());
+                    },
+                );
+                records.push(Record {
+                    name: "correlation",
+                    n,
+                    p,
+                    backend: engine.backend_name(),
+                    threads: engine.threads(),
+                    batch: 1,
+                    wall_seconds: s.mean,
+                    ci_half: s.ci_half,
+                });
+            } else {
+                println!("(artifact backend has no kernel for {n}x{p}; not benched)");
+            }
+        }
+        Err(_) => println!("(no AOT artifacts / pjrt feature; artifact sweep not benched)"),
+    }
+
+    if let Some(path) = args.get("json") {
+        write_json(path, &records);
+    }
     std::hint::black_box(acc);
 }

@@ -11,11 +11,24 @@
 use crate::linalg::cholesky::Cholesky;
 use crate::linalg::eigen::SymEigen;
 use crate::linalg::{DenseMatrix, Design};
+use crate::runtime::RuntimeEngine;
+
+/// Materialize `cols` of the design as a row-major (|cols|, n) panel
+/// (each row one dense column of X) — the layout
+/// [`crate::runtime::Backend::gram_block`] consumes.
+fn gather_columns<D: Design + ?Sized>(design: &D, cols: &[usize]) -> Vec<f64> {
+    let n = design.nrows();
+    let mut out = vec![0.0; cols.len() * n];
+    for (i, &j) in cols.iter().enumerate() {
+        design.col_axpy(j, 1.0, &mut out[i * n..(i + 1) * n]);
+    }
+    out
+}
 
 /// Tracks H and H⁻¹ for the current active set, in a fixed column order
 /// (`active[k]` ↔ row/column k of `h`/`q`).
 #[derive(Clone, Debug)]
-pub struct HessianTracker {
+pub struct HessianTracker<'e> {
     active: Vec<usize>,
     /// H = X_AᵀD(w)X_A (possibly already including the preconditioner α
     /// on the diagonal — see `precondition`).
@@ -24,12 +37,20 @@ pub struct HessianTracker {
     q: DenseMatrix,
     /// Appendix-C ridge α = n·10⁻⁴.
     alpha: f64,
+    /// Optional compute engine: when set, the Algorithm-1 Gram panels
+    /// (augmentation blocks and rebuilds — the §3.3.1 cost drivers)
+    /// are formed by blocked [`crate::runtime::Backend::gram_block`]
+    /// calls instead of per-entry `gram_weighted` loops. Falls back to
+    /// the scalar loops whenever the backend has no panel kernel.
+    engine: Option<&'e RuntimeEngine>,
     /// Count of sweep updates / rebuilds, for the experiment breakdowns.
     pub n_sweep_updates: usize,
     pub n_rebuilds: usize,
+    /// Panels served by the engine (vs. scalar fallback loops).
+    pub n_engine_panels: usize,
 }
 
-impl HessianTracker {
+impl<'e> HessianTracker<'e> {
     /// `alpha` is the preconditioning constant (paper: n·10⁻⁴).
     pub fn new(alpha: f64) -> Self {
         Self {
@@ -37,9 +58,35 @@ impl HessianTracker {
             h: DenseMatrix::zeros(0, 0),
             q: DenseMatrix::zeros(0, 0),
             alpha,
+            engine: None,
             n_sweep_updates: 0,
             n_rebuilds: 0,
+            n_engine_panels: 0,
         }
+    }
+
+    /// Route Gram-panel formation through a compute backend.
+    pub fn with_engine(mut self, engine: &'e RuntimeEngine) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Symmetric blocked panel X_Aᵀ D(w) X_A through the engine, or
+    /// `None` when no engine/kernel is available (callers keep their
+    /// scalar loop). Gathers the columns once.
+    fn engine_sym_panel<D: Design + ?Sized>(
+        &self,
+        design: &D,
+        cols: &[usize],
+        w: Option<&[f64]>,
+    ) -> Option<Vec<f64>> {
+        let engine = self.engine?;
+        let k = cols.len();
+        let xa_t = gather_columns(design, cols);
+        engine
+            .gram_block(&xa_t, w, &xa_t, k, k, design.nrows())
+            .ok()
+            .flatten()
     }
 
     pub fn active(&self) -> &[usize] {
@@ -77,11 +124,40 @@ impl HessianTracker {
     ) {
         let k = new_active.len();
         let mut h = DenseMatrix::zeros(k, k);
-        for a in 0..k {
-            for b in 0..=a {
-                let v = design.gram_weighted(new_active[a], new_active[b], w);
-                *h.at_mut(a, b) = v;
-                *h.at_mut(b, a) = v;
+        // Blocked panel through the engine when available (one
+        // gram_block call instead of k(k+1)/2 scalar gram_weighted
+        // calls); per-entry values are identical, so the scalar loop
+        // below stays the reference fallback.
+        let panel = if k > 0 {
+            self.engine_sym_panel(design, new_active, w)
+        } else {
+            None
+        };
+        if panel.is_some() {
+            self.n_engine_panels += 1;
+        }
+        match panel {
+            Some(panel) => {
+                // Mirror the lower triangle: dot_w(x, y, w) and
+                // dot_w(y, x, w) can differ in the last bit (float
+                // multiplication is not associative), and H must stay
+                // exactly symmetric — matching the scalar loop below.
+                for a in 0..k {
+                    for b in 0..=a {
+                        let v = panel[a * k + b];
+                        *h.at_mut(a, b) = v;
+                        *h.at_mut(b, a) = v;
+                    }
+                }
+            }
+            None => {
+                for a in 0..k {
+                    for b in 0..=a {
+                        let v = design.gram_weighted(new_active[a], new_active[b], w);
+                        *h.at_mut(a, b) = v;
+                        *h.at_mut(b, a) = v;
+                    }
+                }
             }
         }
         self.active = new_active.to_vec();
@@ -178,17 +254,52 @@ impl HessianTracker {
         if !entering.is_empty() {
             let e = self.active.len();
             let d = entering.len();
-            // Gram panels against X (the O(n|D||E|) + O(n|D|²) cost).
+            // Gram panels against X (the O(n|D||E|) + O(n|D|²) cost) —
+            // the §3.3.1 hot spot. Routed through the engine as two
+            // blocked gram_block panels when available; otherwise the
+            // per-entry scalar loops below.
             let mut g_ed = DenseMatrix::zeros(e, d);
             let mut g_dd = DenseMatrix::zeros(d, d);
-            for (b, &jd) in entering.iter().enumerate() {
-                for (a, &je) in self.active.iter().enumerate() {
-                    *g_ed.at_mut(a, b) = design.gram_weighted(je, jd, w);
+            let n = design.nrows();
+            // Each column set is gathered exactly once; the counter is
+            // bumped only when both panels are actually consumed.
+            let panels = self.engine.and_then(|engine| {
+                let xd_t = gather_columns(design, &entering);
+                let dd = engine.gram_block(&xd_t, w, &xd_t, d, d, n).ok().flatten()?;
+                let xe_t = gather_columns(design, &self.active);
+                let ed = engine.gram_block(&xe_t, w, &xd_t, e, d, n).ok().flatten()?;
+                Some((dd, ed))
+            });
+            if panels.is_some() {
+                self.n_engine_panels += 2;
+            }
+            match panels {
+                Some((dd, ed)) => {
+                    // Both panels row-major: dd is (d, d), ed is (e, d).
+                    // G_DD is mirrored from one triangle for exact
+                    // symmetry (see the rebuild comment).
+                    for b in 0..d {
+                        for a in 0..e {
+                            *g_ed.at_mut(a, b) = ed[a * d + b];
+                        }
+                        for a in 0..=b {
+                            let v = dd[a * d + b];
+                            *g_dd.at_mut(a, b) = v;
+                            *g_dd.at_mut(b, a) = v;
+                        }
+                    }
                 }
-                for (a, &ja) in entering.iter().enumerate().take(b + 1) {
-                    let v = design.gram_weighted(ja, jd, w);
-                    *g_dd.at_mut(a, b) = v;
-                    *g_dd.at_mut(b, a) = v;
+                None => {
+                    for (b, &jd) in entering.iter().enumerate() {
+                        for (a, &je) in self.active.iter().enumerate() {
+                            *g_ed.at_mut(a, b) = design.gram_weighted(je, jd, w);
+                        }
+                        for (a, &ja) in entering.iter().enumerate().take(b + 1) {
+                            let v = design.gram_weighted(ja, jd, w);
+                            *g_dd.at_mut(a, b) = v;
+                            *g_dd.at_mut(b, a) = v;
+                        }
+                    }
                 }
             }
             // T = Q·G_ED ; S = G_DD − G_EDᵀ·T (Schur complement).
@@ -457,6 +568,33 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn engine_routed_panels_match_scalar_bitwise() {
+        // Routing Algorithm-1 panels through Backend::gram_block must
+        // not change a single bit: the blocked kernel runs the same
+        // per-entry dot products as the scalar gram_weighted loop.
+        let mut g = Gen::new(12);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(40, 14));
+        let engine = crate::runtime::RuntimeEngine::native_threaded(2);
+        let mut scalar = HessianTracker::new(1e-8);
+        let mut routed = HessianTracker::new(1e-8).with_engine(&engine);
+        scalar.rebuild(&x, &[0, 3, 7], None);
+        routed.rebuild(&x, &[0, 3, 7], None);
+        assert_eq!(routed.n_engine_panels, 1, "rebuild must use the engine");
+        assert_eq!(scalar.h().max_abs_diff(routed.h()), 0.0);
+        assert_eq!(scalar.q().max_abs_diff(routed.q()), 0.0);
+        scalar.update(&x, &[0, 7, 9, 12], None);
+        routed.update(&x, &[0, 7, 9, 12], None);
+        assert_eq!(routed.n_engine_panels, 3, "augmentation must use the engine");
+        assert_eq!(scalar.h().max_abs_diff(routed.h()), 0.0);
+        assert_eq!(scalar.q().max_abs_diff(routed.q()), 0.0);
+        // Weighted (GLM full-Hessian) panels too.
+        let w: Vec<f64> = (0..40).map(|i| 0.1 + 0.15 * ((i % 5) as f64)).collect();
+        scalar.rebuild(&x, &[1, 2, 5], Some(&w));
+        routed.rebuild(&x, &[1, 2, 5], Some(&w));
+        assert_eq!(scalar.h().max_abs_diff(routed.h()), 0.0);
     }
 
     #[test]

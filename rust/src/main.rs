@@ -31,7 +31,7 @@ USAGE:
   hx fit [--dataset NAME | --n N --p P --s S] [--rho R] [--snr S]
          [--loss gaussian|logistic|poisson] [--method hessian|strong|working|
           celer|blitz|gap_safe|edpp|sasvi|none] [--path-length M] [--eps E]
-         [--gamma G] [--seed K] [--engine]
+         [--gamma G] [--seed K] [--engine] [--threads T] [--lookahead B]
   hx exp <fig1|fig2|fig3|tab1|fig4|fig5|fig6|tab3|fig8|fig9|fig10|fig11|fig12|all>
          [--reps R] [--full] [--out DIR] [--threads T] [--seed K]
          [--datasets a,b,c]   (tab1 only)
@@ -127,13 +127,22 @@ fn cmd_fit(args: &Args) -> Result<(), String> {
 
     // Optional sweep engine: PJRT artifacts when built with the `pjrt`
     // feature and compiled, the pure-Rust NativeBackend otherwise.
-    let engine = if args.flag("engine") {
-        Some(match RuntimeEngine::load_default() {
-            Ok(e) => e,
-            Err(err) => {
-                eprintln!("(artifacts unavailable: {err}; using the native backend)");
-                RuntimeEngine::native()
+    // `--threads T` enables the engine with T-way chunked
+    // column-parallel native kernels (0 = all cores); `--lookahead B`
+    // sets the batched look-ahead width (default 4, 0 disables).
+    let threads = args.get_usize("threads")?;
+    let engine = if args.flag("engine") || threads.is_some() {
+        let native = || RuntimeEngine::native_threaded(threads.unwrap_or(1));
+        Some(if args.flag("engine") {
+            match RuntimeEngine::load_default() {
+                Ok(e) => e,
+                Err(err) => {
+                    eprintln!("(artifacts unavailable: {err}; using the native backend)");
+                    native()
+                }
             }
+        } else {
+            native()
         })
     } else {
         None
@@ -142,8 +151,16 @@ fn cmd_fit(args: &Args) -> Result<(), String> {
     let fit = match (&engine, &data.design) {
         (Some(eng), hessian_screening::data::DesignMatrix::Dense(m)) => {
             match EngineSweep::new(eng, m, loss).map_err(|e| e.to_string())? {
-                Some(sweep) => {
-                    eprintln!("(full KKT sweeps via the {} backend)", eng.backend_name());
+                Some(mut sweep) => {
+                    if let Some(b) = args.get_usize("lookahead")? {
+                        sweep = sweep.with_lookahead(b);
+                    }
+                    eprintln!(
+                        "(full KKT sweeps via the {} backend, {} thread(s), look-ahead {})",
+                        eng.backend_name(),
+                        eng.threads(),
+                        sweep.lookahead
+                    );
                     fitter.fit_with_engine(&data.design, &data.response, Some(&sweep))
                 }
                 None => {

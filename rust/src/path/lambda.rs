@@ -15,7 +15,10 @@ pub fn default_lambda_min_ratio(n: usize, p: usize) -> f64 {
 /// `ratio·lambda_max` inclusive, strictly decreasing.
 pub fn lambda_grid(lambda_max: f64, ratio: f64, m: usize) -> Vec<f64> {
     assert!(lambda_max > 0.0, "lambda_max must be positive");
-    assert!((0.0..1.0).contains(&ratio), "ratio must be in (0,1)");
+    // Both bounds exclusive: ratio = 0 would put λ = 0 at the end of
+    // the grid, and every downstream `…/λ` (Gap-Safe radius, dual
+    // scaling) would blow up to ±inf/NaN.
+    assert!(ratio > 0.0 && ratio < 1.0, "ratio must be in (0,1)");
     assert!(m >= 1);
     if m == 1 {
         return vec![lambda_max];
@@ -64,5 +67,19 @@ mod tests {
     #[test]
     fn single_point_grid() {
         assert_eq!(lambda_grid(3.0, 0.5, 1), vec![3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ratio must be in (0,1)")]
+    fn zero_ratio_is_rejected() {
+        // Regression: ratio = 0 used to be accepted, producing a grid
+        // ending in λ = 0 and ±inf/NaN in every downstream `…/λ`.
+        let _ = lambda_grid(1.0, 0.0, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "ratio must be in (0,1)")]
+    fn unit_ratio_is_rejected() {
+        let _ = lambda_grid(1.0, 1.0, 10);
     }
 }

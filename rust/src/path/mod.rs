@@ -51,7 +51,9 @@ pub struct PathSettings {
     pub dev_ratio_max: f64,
     /// Stop when the fractional deviance decrease drops below this.
     pub dev_change_min: f64,
-    /// §3.3.4 Gap-Safe augmentation of the KKT loop (Hessian/working+).
+    /// §3.3.4 Gap-Safe augmentation of the KKT loop. Honored by every
+    /// screening strategy (App. F.3 ablation), and it also gates the
+    /// batched look-ahead masks (they are Gap-Safe certificates).
     pub use_gap_safe_aug: bool,
     /// Ablation toggles (App. F.8): eq.-(7) warm starts, Algorithm-1
     /// sweep updates (false → rebuild each step), Hessian screening
@@ -104,8 +106,14 @@ pub struct StepStats {
     pub passes: usize,
     /// Predictors the rule discarded that turned out KKT-violating.
     pub violations: usize,
-    /// Full-set correlation sweeps performed.
+    /// Full-set correlation sweeps performed (a batched look-ahead
+    /// sweep counts once, on the step that issued it).
     pub full_sweeps: usize,
+    /// Whether a look-ahead certificate let this step skip its full
+    /// sweep (the first KKT check ran on the pre-shrunk G only).
+    pub lookahead_skip: bool,
+    /// Candidates removed from G by Gap-Safe shrinks during this step.
+    pub g_shrunk: usize,
     pub dev_ratio: f64,
     /// Wall-clock split (seconds) for the F.10 breakdowns.
     pub t_cd: f64,
@@ -212,6 +220,42 @@ impl IndexSet {
     }
 }
 
+/// Gap-Safe shrink of the candidate set G (§3.3.4), shared by every
+/// screening branch of the KKT loop so the call sites cannot drift:
+/// keep j iff the sphere test passes at the current iterate or βⱼ ≠ 0.
+/// Reuses the correlations already in `c_full` — marginal cost, no
+/// extra sweeps. `gap` carries an already-computed duality gap at the
+/// same iterate (`None` = compute it here). Returns how many
+/// candidates were discarded.
+#[allow(clippy::too_many_arguments)]
+fn gap_safe_shrink(
+    loss: Loss,
+    y: &[f64],
+    eta: &[f64],
+    resid: &[f64],
+    beta: &[f64],
+    c_full: &[f64],
+    col_norms: &[f64],
+    xt_inf: f64,
+    lambda: f64,
+    l1_norm: f64,
+    gap: Option<f64>,
+    g_set: &mut IndexSet,
+) -> usize {
+    let scale = lambda.max(xt_inf);
+    let gap = gap.unwrap_or_else(|| loss.duality_gap(y, eta, resid, xt_inf, lambda, l1_norm));
+    let radius = (2.0 * gap.max(0.0)).sqrt() / lambda;
+    let before = g_set.len();
+    let kept: Vec<usize> = g_set
+        .items
+        .iter()
+        .copied()
+        .filter(|&j| c_full[j].abs() / scale >= 1.0 - col_norms[j] * radius || beta[j] != 0.0)
+        .collect();
+    g_set.assign(&kept);
+    before - g_set.len()
+}
+
 impl PathFitter {
     pub fn new(loss: Loss, kind: ScreeningKind) -> Self {
         Self {
@@ -296,6 +340,19 @@ impl PathFitter {
         };
         let needs_hessian = self.kind == ScreeningKind::Hessian;
         let mut tracker = HessianTracker::new(n as f64 * 1e-4);
+        if let Some(es) = engine {
+            // Algorithm-1 Gram panels through the backend (blocked,
+            // threaded) instead of per-entry gram_weighted loops —
+            // only for exact-f64 backends (panels, unlike sweeps, have
+            // no borderline recheck path — H/H⁻¹ must never be built
+            // from f32 values) and only when the backend actually
+            // parallelizes: the blocked symmetric panel computes the
+            // full square, so on a serial backend it would do ~2x the
+            // scalar triangle's work.
+            if es.engine.is_exact() && es.engine.threads() > 1 {
+                tracker = tracker.with_engine(es.engine);
+            }
+        }
         let mut weights = vec![0.0; n];
 
         let mut rng = Xoshiro256pp::seed_from_u64(s.seed);
@@ -328,6 +385,13 @@ impl PathFitter {
         let mut prev_active: Vec<usize> = Vec::new();
         let mut prev_dev_ratio = 0.0;
         let mut scratch_u = vec![0.0; n];
+
+        // Batched look-ahead screening (Larsson 2021; see
+        // `crate::screening::lookahead_keep`): keep-masks for upcoming
+        // λ steps from the last batched sweep. `la_masks[i]` covers
+        // step `la_start + i`.
+        let mut la_masks: Vec<Vec<bool>> = Vec::new();
+        let mut la_start = 0usize;
 
         for k in 1..lambdas.len() {
             let lp = lambdas[k - 1];
@@ -476,14 +540,42 @@ impl PathFitter {
             st.screened = w_set.len();
             let w_init_member = w_set.member.clone();
 
-            // Reset the Gap-Safe candidate set (Alg. 2 line 14).
+            // Reset the Gap-Safe candidate set (Alg. 2 line 14) — or,
+            // when a look-ahead certificate covers this λ, pre-shrink
+            // it: predictors outside the mask are provably inactive at
+            // ln, so the first KKT check can run on G alone and the
+            // full sweep is skipped entirely. Celer/Blitz are excluded:
+            // their termination is gap-driven, and without a full sweep
+            // the dual scale ‖Xᵀr‖∞ is only known over G, which could
+            // understate the gap and stop them early.
             g_set.clear();
-            for j in 0..p {
-                g_set.insert(j);
-            }
+            let la_eligible = use_gs_aug
+                && !matches!(self.kind, ScreeningKind::Celer | ScreeningKind::Blitz);
+            let la_mask = if la_eligible && k >= la_start {
+                la_masks.get(k - la_start)
+            } else {
+                None
+            };
+            let lookahead_hit = match la_mask {
+                Some(mask) => {
+                    for j in 0..p {
+                        if mask[j] || w_set.contains(j) || ever_active.contains(j) {
+                            g_set.insert(j);
+                        }
+                    }
+                    true
+                }
+                None => {
+                    for j in 0..p {
+                        g_set.insert(j);
+                    }
+                    false
+                }
+            };
+            st.lookahead_skip = lookahead_hit;
 
             // ---------------- inner solve/check loop ----------------
-            let mut first_full_done = false;
+            let mut first_full_done = lookahead_hit;
             let mut ws_growth = (2 * w_set.len()).max(20);
             // Stall guard: when the subproblem cannot reach the duality
             // gap tolerance (numerically unreachable ε) and no KKT
@@ -580,29 +672,28 @@ impl PathFitter {
                             st.t_kkt += t_kkt.elapsed().as_secs_f64();
                             break;
                         }
-                        if use_gs_aug {
-                            // Gap-Safe shrink of G at marginal cost
-                            // (reuses the correlations just computed).
-                            let scale = ln.max(xt_inf);
-                            let gap = loss.duality_gap(
+                        // Skipped on look-ahead-covered steps: without a
+                        // full sweep this step, xt_inf is known over G
+                        // only, so θ = r/max(λ, xt_inf) is not provably
+                        // dual-feasible and the sphere radius could
+                        // over-shrink. The mask itself was built from a
+                        // *global* sup-norm at the batch point, so G is
+                        // already soundly shrunk.
+                        if use_gs_aug && !lookahead_hit {
+                            st.g_shrunk += gap_safe_shrink(
+                                loss,
                                 y,
                                 &state.eta,
                                 &state.resid,
+                                &state.beta,
+                                &c_full,
+                                &col_norms,
                                 xt_inf,
                                 ln,
                                 state.l1_norm(),
+                                None,
+                                &mut g_set,
                             );
-                            let radius = (2.0 * gap.max(0.0)).sqrt() / ln;
-                            let kept: Vec<usize> = g_set
-                                .items
-                                .iter()
-                                .copied()
-                                .filter(|&j| {
-                                    c_full[j].abs() / scale >= 1.0 - col_norms[j] * radius
-                                        || state.beta[j] != 0.0
-                                })
-                                .collect();
-                            g_set.assign(&kept);
                         }
                         if violations.is_empty() {
                             // KKT-clean but gap not under tol: retry CD a
@@ -684,27 +775,26 @@ impl PathFitter {
                         } else {
                             stalls = 0;
                         }
-                        if gap_safe_ok {
-                            let scale = ln.max(xt_inf);
-                            let gap = loss.duality_gap(
+                        // §3.3.4 augmentation — honors the App. F.3
+                        // ablation toggle, not just loss support
+                        // (`use_gs_aug`, not `gap_safe_ok`). Skipped on
+                        // look-ahead-covered steps (restricted xt_inf —
+                        // see the Hessian/Working branch).
+                        if use_gs_aug && !lookahead_hit {
+                            st.g_shrunk += gap_safe_shrink(
+                                loss,
                                 y,
                                 &state.eta,
                                 &state.resid,
+                                &state.beta,
+                                &c_full,
+                                &col_norms,
                                 xt_inf,
                                 ln,
                                 state.l1_norm(),
+                                None,
+                                &mut g_set,
                             );
-                            let radius = (2.0 * gap.max(0.0)).sqrt() / ln;
-                            let kept: Vec<usize> = g_set
-                                .items
-                                .iter()
-                                .copied()
-                                .filter(|&j| {
-                                    c_full[j].abs() / scale >= 1.0 - col_norms[j] * radius
-                                        || state.beta[j] != 0.0
-                                })
-                                .collect();
-                            g_set.assign(&kept);
                         }
                         for j in violations {
                             if !w_init_member[j] {
@@ -774,18 +864,23 @@ impl PathFitter {
                             }
                         }
                         let scale = ln.max(xt_inf);
-                        if gap_safe_ok {
-                            let radius = (2.0 * gap.max(0.0)).sqrt() / ln;
-                            let kept: Vec<usize> = g_set
-                                .items
-                                .iter()
-                                .copied()
-                                .filter(|&j| {
-                                    c_full[j].abs() / scale >= 1.0 - col_norms[j] * radius
-                                        || state.beta[j] != 0.0
-                                })
-                                .collect();
-                            g_set.assign(&kept);
+                        // Same ablation-toggle fix as above: honor
+                        // `use_gap_safe_aug` for Celer/Blitz too.
+                        if use_gs_aug {
+                            st.g_shrunk += gap_safe_shrink(
+                                loss,
+                                y,
+                                &state.eta,
+                                &state.resid,
+                                &state.beta,
+                                &c_full,
+                                &col_norms,
+                                xt_inf,
+                                ln,
+                                state.l1_norm(),
+                                Some(gap),
+                                &mut g_set,
+                            );
                         }
                         // New working set: active ∪ top-priority from G.
                         let active_now: Vec<usize> = state.active_set();
@@ -840,6 +935,47 @@ impl PathFitter {
             let dev = loss.deviance(y, &state.eta);
             let dev_ratio = 1.0 - dev / null_dev.max(1e-300);
             st.dev_ratio = dev_ratio;
+
+            // Mirrors the stopping rules evaluated below, so the final
+            // step does not waste a batched sweep whose masks would be
+            // discarded immediately.
+            let will_stop = dev_ratio >= s.dev_ratio_max
+                || (k > 1
+                    && (dev_ratio - prev_dev_ratio)
+                        < s.dev_change_min * dev_ratio.abs().max(1e-12))
+                || ever_active.len() > max_ever;
+
+            // Batched look-ahead refresh: when the mask window is
+            // exhausted, one batched sweep at this step's solution
+            // serves the KKT checks of the next `lookahead` steps and
+            // refreshes the whole correlation vector (it *is* a full
+            // sweep — counted as such here).
+            if la_eligible
+                && self.kind != ScreeningKind::None
+                && k + 1 < lambdas.len()
+                && !will_stop
+            {
+                if let Some(es) = engine {
+                    if es.lookahead > 0 && k + 1 >= la_start + la_masks.len() {
+                        let t_b = Instant::now();
+                        let hi = (k + 1 + es.lookahead).min(lambdas.len());
+                        if let Some(masks) = es.look_ahead(
+                            design,
+                            y,
+                            &state.eta,
+                            &state.resid,
+                            state.l1_norm(),
+                            &lambdas[k + 1..hi],
+                            &mut c_full,
+                        ) {
+                            la_masks = masks;
+                            la_start = k + 1;
+                            st.full_sweeps += 1;
+                        }
+                        st.t_kkt += t_b.elapsed().as_secs_f64();
+                    }
+                }
+            }
 
             fit.lambdas.push(ln);
             fit.betas
@@ -1020,8 +1156,50 @@ mod tests {
         // λs are on the standardized scale; rescale by the data's λmax.
         let fitter = PathFitter::new(Loss::Gaussian, ScreeningKind::Hessian).with_settings(settings);
         let fit = fitter.fit(&data.design, &data.response);
-        assert_eq!(fit.lambdas.len().min(3), fit.lambdas.len().min(3));
-        assert!((fit.lambdas[0] - 1.0).abs() < 1e-12);
+        // The fitted grid must be exactly the explicit path (a prefix
+        // only if a stopping rule fires early).
+        let expected = [1.0, 0.5, 0.25];
+        assert!(
+            (2..=3).contains(&fit.lambdas.len()),
+            "unexpected path length {}",
+            fit.lambdas.len()
+        );
+        for (k, &l) in fit.lambdas.iter().enumerate() {
+            assert_eq!(l, expected[k], "step {k}");
+        }
+    }
+
+    #[test]
+    fn gap_safe_aug_toggle_honored_by_all_strategies() {
+        // Regression: `use_gap_safe_aug = false` used to be ignored
+        // outside the Hessian/Working branch (the shrink was gated on
+        // loss support only). With the toggle off, no strategy may
+        // shrink G; with it on, Strong on a correlated design must.
+        let data = SyntheticSpec::new(50, 300, 5).rho(0.6).snr(2.0).seed(7).generate();
+        for kind in [
+            ScreeningKind::Strong,
+            ScreeningKind::GapSafe,
+            ScreeningKind::Celer,
+            ScreeningKind::Hessian,
+        ] {
+            let mut off = PathSettings::default();
+            off.path_length = 25;
+            off.use_gap_safe_aug = false;
+            let fit = PathFitter::new(Loss::Gaussian, kind)
+                .with_settings(off)
+                .fit(&data.design, &data.response);
+            let shrunk: usize = fit.steps.iter().map(|s| s.g_shrunk).sum();
+            assert_eq!(shrunk, 0, "{kind}: G was shrunk with the ablation off");
+        }
+        let mut on = PathSettings::default();
+        on.path_length = 25;
+        // Celer iterates its KKT loop every step (working set grows
+        // from small), so with the toggle on it must shrink G.
+        let fit = PathFitter::new(Loss::Gaussian, ScreeningKind::Celer)
+            .with_settings(on)
+            .fit(&data.design, &data.response);
+        let shrunk: usize = fit.steps.iter().map(|s| s.g_shrunk).sum();
+        assert!(shrunk > 0, "Celer with aug on never shrank G");
     }
 
     #[test]

@@ -2,13 +2,15 @@
 //!
 //! The path driver ([`crate::path::PathFitter::fit_with_engine`]) can
 //! route its hot full-set operations — the correlation sweep c = Xᵀr,
-//! the fused KKT sweep, and the weighted Gram panels of Algorithm 1 —
+//! the fused KKT sweep, the *batched look-ahead* sweep across several
+//! upcoming λ values, and the weighted Gram panels of Algorithm 1 —
 //! through a [`Backend`]:
 //!
 //! * [`NativeBackend`] (always available, the default): pure-Rust f64
-//!   kernels on top of [`crate::linalg`]. Zero dependencies, exact —
-//!   the reference implementation every other backend is checked
-//!   against.
+//!   kernels on top of [`crate::linalg`], with chunked column-parallel
+//!   execution (`std::thread::scope`, zero dependencies) behind a
+//!   `threads` knob. Exact — the reference implementation every other
+//!   backend is checked against.
 //! * `PjrtBackend` (behind the **`pjrt`** cargo feature): executes the
 //!   AOT artifacts produced by `python/compile/aot.py` (HLO text) on a
 //!   PJRT client. The engine code type-checks against the in-tree
@@ -20,7 +22,9 @@
 //! do). [`EngineSweep::full_sweep`] therefore re-verifies every
 //! *borderline* correlation (within `recheck_band` of the screening
 //! threshold) with the native f64 path, so KKT decisions never depend
-//! on reduced-precision rounding.
+//! on reduced-precision rounding. [`EngineSweep::look_ahead`] applies
+//! the same policy across the whole λ batch and rebuilds the keep
+//! masks from the corrected correlations.
 
 use crate::error::Result;
 use crate::linalg::Design;
@@ -42,6 +46,9 @@ pub use pjrt::PjrtBackend;
 pub struct RegisteredDesign {
     pub n: usize,
     pub p: usize,
+    /// ‖xⱼ‖₂ per column, cached at registration in f64 (the look-ahead
+    /// sphere tests need them on every batched sweep).
+    pub(crate) col_norms: Vec<f64>,
     pub(crate) repr: DesignRepr,
 }
 
@@ -50,6 +57,18 @@ pub(crate) enum DesignRepr {
     Native(Vec<f64>),
     #[cfg(feature = "pjrt")]
     Pjrt(xla_stub::PjRtBuffer),
+}
+
+/// Result of a batched look-ahead KKT sweep: the correlation vector
+/// and pseudo-residual at the evaluation point, plus one keep-mask per
+/// requested λ. `keep[l][j] == false` certifies predictor j inactive
+/// at `lambdas[l]` (Gap-Safe sphere test from this iterate's dual
+/// point — see [`crate::screening::lookahead_keep`]), so the path
+/// driver may skip it in that step's KKT check.
+pub struct KktBatch {
+    pub c: Vec<f64>,
+    pub resid: Vec<f64>,
+    pub keep: Vec<Vec<bool>>,
 }
 
 /// The operations a compute backend provides to the path driver.
@@ -64,6 +83,11 @@ pub trait Backend: Send + Sync {
     /// Number of ops this backend can serve (compiled artifacts for
     /// PJRT; the fixed native op set otherwise).
     fn num_ops(&self) -> usize;
+
+    /// Number of worker threads the backend's kernels use (1 = serial).
+    fn threads(&self) -> usize {
+        1
+    }
 
     /// Whether a fused KKT sweep is available for this loss and shape.
     fn supports_sweep(&self, loss: Loss, n: usize, p: usize) -> bool;
@@ -95,13 +119,31 @@ pub trait Backend: Send + Sync {
         lambda: f64,
     ) -> Result<Option<(Vec<f64>, Vec<f64>)>>;
 
+    /// Batched look-ahead KKT sweep (Larsson, "Look-Ahead Screening
+    /// Rules for the Lasso", 2021): one correlation sweep at the
+    /// current iterate serves screening tests at several upcoming λ
+    /// values at once. `l1_norm` is ‖β‖₁ at the iterate (needed for
+    /// the per-λ duality gaps). Default: unavailable — callers fall
+    /// back to per-λ sequential sweeps.
+    fn kkt_sweep_batch(
+        &self,
+        _loss: Loss,
+        _design: &RegisteredDesign,
+        _y: &[f64],
+        _eta: &[f64],
+        _lambdas: &[f64],
+        _l1_norm: f64,
+    ) -> Result<Option<KktBatch>> {
+        Ok(None)
+    }
+
     /// Weighted Gram panel X_E D(w) X_Dᵀ (row-major (e, d)), the
     /// Algorithm-1 augmentation block. `xe_t`/`xd_t` are (e, n)/(d, n)
-    /// row-major f64 slices.
+    /// row-major f64 slices; `w = None` means unit weights.
     fn gram_block(
         &self,
         xe_t: &[f64],
-        w: &[f64],
+        w: Option<&[f64]>,
         xd_t: &[f64],
         e: usize,
         d: usize,
@@ -115,11 +157,32 @@ pub struct RuntimeEngine {
     backend: Box<dyn Backend>,
 }
 
+impl std::fmt::Debug for RuntimeEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RuntimeEngine")
+            .field("backend", &self.backend_name())
+            .field("threads", &self.threads())
+            .finish()
+    }
+}
+
 impl RuntimeEngine {
     /// The pure-Rust backend. Always available, needs no artifacts.
+    /// Serial kernels; see [`Self::native_threaded`] for the parallel
+    /// variant.
     pub fn native() -> Self {
         Self {
-            backend: Box::new(NativeBackend),
+            backend: Box::new(NativeBackend::default()),
+        }
+    }
+
+    /// The pure-Rust backend with chunked column-parallel kernels.
+    /// `threads == 0` selects the machine's available parallelism.
+    /// Results are bit-identical at any thread count (parallelism is
+    /// over whole columns / panel rows).
+    pub fn native_threaded(threads: usize) -> Self {
+        Self {
+            backend: Box::new(NativeBackend::new(threads)),
         }
     }
 
@@ -161,6 +224,11 @@ impl RuntimeEngine {
         self.backend.num_ops()
     }
 
+    /// Worker threads the backend's kernels use (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.backend.threads()
+    }
+
     /// Whether a KKT sweep is available for this loss and shape.
     pub fn supports_sweep(&self, loss: Loss, n: usize, p: usize) -> bool {
         self.backend.supports_sweep(loss, n, p)
@@ -198,11 +266,27 @@ impl RuntimeEngine {
         self.backend.kkt_sweep(loss, design, y, eta, lambda)
     }
 
-    /// Weighted Gram panel (Algorithm-1 augmentation).
+    /// Batched look-ahead KKT sweep; `None` when the backend has no
+    /// batched kernel for (loss, shape).
+    pub fn kkt_sweep_batch(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambdas: &[f64],
+        l1_norm: f64,
+    ) -> Result<Option<KktBatch>> {
+        self.backend
+            .kkt_sweep_batch(loss, design, y, eta, lambdas, l1_norm)
+    }
+
+    /// Weighted Gram panel (Algorithm-1 augmentation); `w = None`
+    /// means unit weights.
     pub fn gram_block(
         &self,
         xe_t: &[f64],
-        w: &[f64],
+        w: Option<&[f64]>,
         xd_t: &[f64],
         e: usize,
         d: usize,
@@ -221,6 +305,10 @@ pub struct EngineSweep<'a> {
     /// Borderline band re-verified in f64 (fraction of λ). Irrelevant
     /// for exact-f64 backends, load-bearing for f32 artifact backends.
     pub recheck_band: f64,
+    /// Look-ahead batch width B: one batched sweep serves the KKT
+    /// checks of the next B λ steps (Larsson 2021). 0 disables
+    /// batching (per-λ sequential sweeps only).
+    pub lookahead: usize,
 }
 
 impl<'a> EngineSweep<'a> {
@@ -241,7 +329,14 @@ impl<'a> EngineSweep<'a> {
             design: reg,
             loss,
             recheck_band: 1e-3,
+            lookahead: 4,
         }))
+    }
+
+    /// Set the look-ahead batch width (0 = per-λ sequential sweeps).
+    pub fn with_lookahead(mut self, lookahead: usize) -> Self {
+        self.lookahead = lookahead;
+        self
     }
 
     /// Full correlation sweep through the backend, with native f64
@@ -281,6 +376,79 @@ impl<'a> EngineSweep<'a> {
             }
             _ => false,
         }
+    }
+
+    /// Batched look-ahead sweep (Larsson 2021): one correlation sweep
+    /// at the current iterate yields Gap-Safe keep-masks for several
+    /// upcoming λ values. On success `c` is refreshed with the
+    /// f64-verified correlation vector and the per-λ masks are
+    /// returned; `None` means the backend has no batched kernel and
+    /// the caller falls back to per-λ sweeps.
+    ///
+    /// Precision contract: for reduced-precision backends every entry
+    /// within `recheck_band` of *any* requested λ is recomputed in f64,
+    /// and the masks are rebuilt from the corrected correlations with
+    /// an extra `recheck_band` of slack on the sphere threshold — the
+    /// sphere test's per-column cutoff sits *below* the λ band, so
+    /// uncorrected entries (trusted to within `recheck_band·λ`, the
+    /// same trust model as [`Self::full_sweep`]) can only be
+    /// conservatively kept, never wrongly discarded.
+    #[allow(clippy::too_many_arguments)]
+    pub fn look_ahead<D: Design + ?Sized>(
+        &self,
+        native: &D,
+        y: &[f64],
+        eta: &[f64],
+        resid: &[f64],
+        l1_norm: f64,
+        lambdas: &[f64],
+        c: &mut [f64],
+    ) -> Option<Vec<Vec<bool>>> {
+        if self.lookahead == 0 || lambdas.is_empty() {
+            return None;
+        }
+        let batch = match self
+            .engine
+            .kkt_sweep_batch(self.loss, &self.design, y, eta, lambdas, l1_norm)
+        {
+            Ok(Some(b)) => b,
+            _ => return None,
+        };
+        debug_assert_eq!(batch.c.len(), c.len());
+        if self.engine.is_exact() {
+            c.copy_from_slice(&batch.c);
+            return Some(batch.keep);
+        }
+        let lo_l = lambdas.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi_l = lambdas.iter().cloned().fold(0.0f64, f64::max);
+        let (lo, hi) = (
+            lo_l * (1.0 - self.recheck_band),
+            hi_l * (1.0 + self.recheck_band),
+        );
+        for (j, cv) in batch.c.into_iter().enumerate() {
+            let a = cv.abs();
+            c[j] = if a >= lo && a <= hi {
+                native.col_dot(j, resid)
+            } else {
+                cv
+            };
+        }
+        let xt_inf = crate::linalg::blas::amax(c);
+        let keep = lambdas
+            .iter()
+            .map(|&l| {
+                let gap = self.loss.duality_gap(y, eta, resid, xt_inf, l, l1_norm);
+                crate::screening::lookahead_keep(
+                    c,
+                    &self.design.col_norms,
+                    xt_inf,
+                    gap,
+                    l,
+                    self.recheck_band,
+                )
+            })
+            .collect();
+        Some(keep)
     }
 }
 

@@ -3,20 +3,58 @@
 //! [`Backend`] surface — always available, no artifacts, no FFI — and
 //! the baseline every accelerated backend is cross-checked against
 //! (`rust/tests/runtime_roundtrip.rs`).
+//!
+//! Parallelism: the sweep and panel kernels are chunked
+//! column-parallel over `std::thread::scope` (zero dependencies).
+//! Each output entry is produced by the same per-column scalar kernel
+//! regardless of thread count, so results are **bit-identical** to the
+//! serial loop — threading is a pure wall-clock knob, never a
+//! numerics knob.
 
-use super::{Backend, DesignRepr, RegisteredDesign};
+use super::{Backend, DesignRepr, KktBatch, RegisteredDesign};
 use crate::error::Result;
 use crate::linalg::blas;
 use crate::loss::Loss;
 
-/// Zero-state native backend.
-pub struct NativeBackend;
+/// Minimum multiply-add count before spawning threads pays for itself
+/// (scope + spawn overhead is on the order of tens of microseconds).
+const PAR_FLOP_CUTOFF: usize = 1 << 18;
+
+/// ⌈a/b⌉ (usize::div_ceil needs Rust 1.73; MSRV is 1.70).
+fn div_ceil(a: usize, b: usize) -> usize {
+    a / b + usize::from(a % b != 0)
+}
+
+/// The pure-Rust backend. `threads` controls chunked column-parallel
+/// execution of the sweep/panel kernels; 1 = serial.
+pub struct NativeBackend {
+    threads: usize,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self { threads: 1 }
+    }
+}
 
 /// The op kinds the native backend serves: xt_r, the fused KKT sweep
-/// (Gaussian + logistic), and the weighted Gram panel.
-const NATIVE_OPS: usize = 3;
+/// (Gaussian + logistic), the batched look-ahead sweep, and the
+/// weighted Gram panel.
+const NATIVE_OPS: usize = 4;
 
 impl NativeBackend {
+    /// `threads == 0` selects the machine's available parallelism.
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|v| v.get())
+                .unwrap_or(1)
+        } else {
+            threads
+        };
+        Self { threads }
+    }
+
     fn column(data: &[f64], n: usize, j: usize) -> &[f64] {
         &data[j * n..(j + 1) * n]
     }
@@ -36,6 +74,89 @@ impl NativeBackend {
         let DesignRepr::Native(data) = &design.repr;
         Ok(data)
     }
+
+    /// Worker count for `items` outputs of `flops_per_item` work each.
+    fn pool_size(&self, items: usize, flops_per_item: usize) -> usize {
+        if self.threads <= 1 || items.saturating_mul(flops_per_item) < PAR_FLOP_CUTOFF {
+            1
+        } else {
+            self.threads.min(items.max(1))
+        }
+    }
+
+    /// out[i] = f(i), contiguous chunks per thread. Bit-identical to
+    /// the serial loop at any thread count.
+    fn par_map(&self, out: &mut [f64], flops_per_item: usize, f: impl Fn(usize) -> f64 + Sync) {
+        let t = self.pool_size(out.len(), flops_per_item);
+        if t <= 1 {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = f(i);
+            }
+            return;
+        }
+        let chunk = div_ceil(out.len(), t);
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (ci, co) in out.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                handles.push(s.spawn(move || {
+                    for (i, o) in co.iter_mut().enumerate() {
+                        *o = f(ci * chunk + i);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("sweep worker panicked");
+            }
+        });
+    }
+
+    /// Row-blocked variant for row-major (rows, row_len) panels:
+    /// `f(a, row)` fills row a. Bit-identical to the serial loop.
+    fn par_map_rows(
+        &self,
+        rows: usize,
+        row_len: usize,
+        out: &mut [f64],
+        flops_per_row: usize,
+        f: impl Fn(usize, &mut [f64]) + Sync,
+    ) {
+        debug_assert_eq!(out.len(), rows * row_len);
+        let t = self.pool_size(rows, flops_per_row);
+        if t <= 1 {
+            for (a, ro) in out.chunks_mut(row_len.max(1)).enumerate() {
+                f(a, ro);
+            }
+            return;
+        }
+        let rows_per = div_ceil(rows, t);
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (ci, co) in out.chunks_mut(rows_per * row_len).enumerate() {
+                let f = &f;
+                handles.push(s.spawn(move || {
+                    for (i, ro) in co.chunks_mut(row_len).enumerate() {
+                        f(ci * rows_per + i, ro);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("panel worker panicked");
+            }
+        });
+    }
+
+    fn check_vectors(design: &RegisteredDesign, y: &[f64], eta: &[f64]) -> Result<()> {
+        if y.len() != design.n || eta.len() != design.n {
+            return Err(crate::err!(
+                "y/eta have lengths {}/{}, expected {}",
+                y.len(),
+                eta.len(),
+                design.n
+            ));
+        }
+        Ok(())
+    }
 }
 
 impl Backend for NativeBackend {
@@ -45,6 +166,10 @@ impl Backend for NativeBackend {
 
     fn num_ops(&self) -> usize {
         NATIVE_OPS
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
     }
 
     fn supports_sweep(&self, loss: Loss, _n: usize, _p: usize) -> bool {
@@ -67,9 +192,13 @@ impl Backend for NativeBackend {
                 p
             ));
         }
+        let col_norms = (0..p)
+            .map(|j| blas::nrm2(Self::column(col_major, n, j)))
+            .collect();
         Ok(RegisteredDesign {
             n,
             p,
+            col_norms,
             repr: DesignRepr::Native(col_major.to_vec()),
         })
     }
@@ -83,9 +212,10 @@ impl Backend for NativeBackend {
                 design.n
             ));
         }
-        let c = (0..design.p)
-            .map(|j| blas::dot(Self::column(data, design.n, j), r))
-            .collect();
+        let mut c = vec![0.0; design.p];
+        self.par_map(&mut c, design.n, |j| {
+            blas::dot(Self::column(data, design.n, j), r)
+        });
         Ok(Some(c))
     }
 
@@ -101,48 +231,84 @@ impl Backend for NativeBackend {
             return Ok(None);
         }
         let data = Self::design_data(design)?;
-        if y.len() != design.n || eta.len() != design.n {
-            return Err(crate::err!(
-                "y/eta have lengths {}/{}, expected {}",
-                y.len(),
-                eta.len(),
-                design.n
-            ));
-        }
+        Self::check_vectors(design, y, eta)?;
         let mut resid = vec![0.0; design.n];
         loss.pseudo_residual_into(y, eta, &mut resid);
-        let c: Vec<f64> = (0..design.p)
-            .map(|j| blas::dot(Self::column(data, design.n, j), &resid))
-            .collect();
+        let mut c = vec![0.0; design.p];
+        let r = &resid;
+        self.par_map(&mut c, design.n, |j| {
+            blas::dot(Self::column(data, design.n, j), r)
+        });
         Ok(Some((c, resid)))
+    }
+
+    fn kkt_sweep_batch(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambdas: &[f64],
+        l1_norm: f64,
+    ) -> Result<Option<KktBatch>> {
+        if matches!(loss, Loss::Poisson) || lambdas.is_empty() {
+            return Ok(None);
+        }
+        let data = Self::design_data(design)?;
+        Self::check_vectors(design, y, eta)?;
+        let mut resid = vec![0.0; design.n];
+        loss.pseudo_residual_into(y, eta, &mut resid);
+        let mut c = vec![0.0; design.p];
+        let r = &resid;
+        self.par_map(&mut c, design.n, |j| {
+            blas::dot(Self::column(data, design.n, j), r)
+        });
+        // One sweep, B masks: the per-λ sphere tests reuse c (Larsson
+        // 2021 — the O(pB) mask pass is marginal next to the O(np)
+        // sweep it amortizes).
+        let xt_inf = blas::amax(&c);
+        let keep = lambdas
+            .iter()
+            .map(|&l| {
+                let gap = loss.duality_gap(y, eta, &resid, xt_inf, l, l1_norm);
+                crate::screening::lookahead_keep(&c, &design.col_norms, xt_inf, gap, l, 0.0)
+            })
+            .collect();
+        Ok(Some(KktBatch { c, resid, keep }))
     }
 
     fn gram_block(
         &self,
         xe_t: &[f64],
-        w: &[f64],
+        w: Option<&[f64]>,
         xd_t: &[f64],
         e: usize,
         d: usize,
         n: usize,
     ) -> Result<Option<Vec<f64>>> {
-        if xe_t.len() != e * n || xd_t.len() != d * n || w.len() != n {
+        if xe_t.len() != e * n || xd_t.len() != d * n || w.is_some_and(|w| w.len() != n) {
             return Err(crate::err!(
                 "gram_block shape mismatch: xe {}, xd {}, w {} for (e={e}, d={d}, n={n})",
                 xe_t.len(),
                 xd_t.len(),
-                w.len()
+                w.map_or(n, <[f64]>::len)
             ));
+        }
+        if e * d == 0 {
+            return Ok(Some(Vec::new()));
         }
         // Row-major (e, d) panel: out[a*d + b] = Σ_i xe[a,i] w[i] xd[b,i].
         let mut out = vec![0.0; e * d];
-        for a in 0..e {
+        self.par_map_rows(e, d, &mut out, d * n, |a, row| {
             let xa = &xe_t[a * n..(a + 1) * n];
-            for b in 0..d {
+            for (b, o) in row.iter_mut().enumerate() {
                 let xb = &xd_t[b * n..(b + 1) * n];
-                out[a * d + b] = blas::dot_w(xa, xb, w);
+                *o = match w {
+                    None => blas::dot(xa, xb),
+                    Some(w) => blas::dot_w(xa, xb, w),
+                };
             }
-        }
+        });
         Ok(Some(out))
     }
 }
@@ -155,8 +321,19 @@ mod tests {
 
     #[test]
     fn register_rejects_bad_shape() {
-        let b = NativeBackend;
+        let b = NativeBackend::default();
         assert!(b.register_design(&[1.0, 2.0, 3.0], 2, 2).is_err());
+    }
+
+    #[test]
+    fn register_caches_column_norms() {
+        let mut g = Gen::new(4);
+        let m = g.gaussian_matrix(17, 6);
+        let b = NativeBackend::default();
+        let reg = b.register_design(m.data(), 17, 6).unwrap();
+        for j in 0..6 {
+            assert_eq!(reg.col_norms[j], m.col_sq_norm(j).sqrt(), "col {j}");
+        }
     }
 
     #[test]
@@ -165,7 +342,7 @@ mod tests {
         let m = g.gaussian_matrix(25, 10);
         let y = g.gaussian_vec(25);
         let eta = g.gaussian_vec(25);
-        let b = NativeBackend;
+        let b = NativeBackend::default();
         let reg = b.register_design(m.data(), 25, 10).unwrap();
         for loss in [Loss::Gaussian, Loss::Logistic] {
             let (c, resid) = b.kkt_sweep(loss, &reg, &y, &eta, 0.7).unwrap().unwrap();
@@ -182,6 +359,68 @@ mod tests {
     }
 
     #[test]
+    fn threaded_kernels_are_bit_identical() {
+        // Shape large enough to clear the flop cutoff so threads
+        // actually spawn.
+        let (n, p) = (64, 8_192);
+        let mut g = Gen::new(21);
+        let m = g.gaussian_matrix(n, p);
+        let y = g.gaussian_vec(n);
+        let eta = g.gaussian_vec(n);
+        let serial = NativeBackend::default();
+        let par = NativeBackend::new(4);
+        assert_eq!(par.threads(), 4);
+        let rs = serial.register_design(m.data(), n, p).unwrap();
+        let rp = par.register_design(m.data(), n, p).unwrap();
+        let cs = serial.correlation(&rs, &y).unwrap().unwrap();
+        let cp = par.correlation(&rp, &y).unwrap().unwrap();
+        assert_eq!(cs, cp, "threaded correlation must be bit-identical");
+        let (ks, _) = serial.kkt_sweep(Loss::Logistic, &rs, &y, &eta, 0.5).unwrap().unwrap();
+        let (kp, _) = par.kkt_sweep(Loss::Logistic, &rp, &y, &eta, 0.5).unwrap().unwrap();
+        assert_eq!(ks, kp, "threaded kkt_sweep must be bit-identical");
+    }
+
+    #[test]
+    fn batch_matches_per_lambda_sweeps() {
+        let (n, p) = (40, 120);
+        let mut g = Gen::new(9);
+        let m = g.gaussian_matrix(n, p);
+        let y = g.gaussian_vec(n);
+        let eta = vec![0.0; n];
+        let b = NativeBackend::default();
+        let reg = b.register_design(m.data(), n, p).unwrap();
+        let lambdas = [0.9, 0.7, 0.5];
+        let batch = b
+            .kkt_sweep_batch(Loss::Gaussian, &reg, &y, &eta, &lambdas, 0.0)
+            .unwrap()
+            .unwrap();
+        assert_eq!(batch.keep.len(), 3);
+        let (c_seq, resid_seq) = b
+            .kkt_sweep(Loss::Gaussian, &reg, &y, &eta, 0.9)
+            .unwrap()
+            .unwrap();
+        assert_eq!(batch.c, c_seq, "batched c must equal the per-λ sweep");
+        assert_eq!(batch.resid, resid_seq);
+        // Masks match a direct evaluation of the sphere test.
+        let xt_inf = blas::amax(&batch.c);
+        for (l, &lam) in lambdas.iter().enumerate() {
+            let gap = Loss::Gaussian.duality_gap(&y, &eta, &batch.resid, xt_inf, lam, 0.0);
+            let want =
+                crate::screening::lookahead_keep(&batch.c, &reg.col_norms, xt_inf, gap, lam, 0.0);
+            assert_eq!(batch.keep[l], want, "mask {l}");
+        }
+        // Poisson and empty batches are unavailable, not errors.
+        assert!(b
+            .kkt_sweep_batch(Loss::Poisson, &reg, &y, &eta, &lambdas, 0.0)
+            .unwrap()
+            .is_none());
+        assert!(b
+            .kkt_sweep_batch(Loss::Gaussian, &reg, &y, &eta, &[], 0.0)
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
     fn gram_block_matches_weighted_gram() {
         let (e, d, n) = (4, 3, 20);
         let mut g = Gen::new(6);
@@ -195,8 +434,8 @@ mod tests {
         for j in e..e + d {
             xd_t.extend_from_slice(m.col(j));
         }
-        let b = NativeBackend;
-        let panel = b.gram_block(&xe_t, &w, &xd_t, e, d, n).unwrap().unwrap();
+        let b = NativeBackend::default();
+        let panel = b.gram_block(&xe_t, Some(&w), &xd_t, e, d, n).unwrap().unwrap();
         for a in 0..e {
             for bb in 0..d {
                 let want = m.gram_weighted(a, e + bb, Some(&w));
@@ -206,6 +445,38 @@ mod tests {
                 );
             }
         }
-        assert!(b.gram_block(&xe_t, &w, &xd_t, e, d, n + 1).is_err());
+        // Unweighted panels use the plain dot kernel — bit-identical
+        // to Design::gram.
+        let unw = b.gram_block(&xe_t, None, &xd_t, e, d, n).unwrap().unwrap();
+        for a in 0..e {
+            for bb in 0..d {
+                assert_eq!(unw[a * d + bb], m.gram(a, e + bb), "unweighted ({a},{bb})");
+            }
+        }
+        assert!(b.gram_block(&xe_t, Some(&w), &xd_t, e, d, n + 1).is_err());
+        assert_eq!(
+            b.gram_block(&[], None, &xd_t, 0, d, n).unwrap().unwrap(),
+            Vec::<f64>::new()
+        );
+    }
+
+    #[test]
+    fn threaded_gram_block_is_bit_identical() {
+        let (e, d, n) = (96, 64, 50);
+        let mut g = Gen::new(13);
+        let m: DenseMatrix = g.gaussian_matrix(n, e + d);
+        let mut xe_t = Vec::with_capacity(e * n);
+        for j in 0..e {
+            xe_t.extend_from_slice(m.col(j));
+        }
+        let mut xd_t = Vec::with_capacity(d * n);
+        for j in e..e + d {
+            xd_t.extend_from_slice(m.col(j));
+        }
+        let serial = NativeBackend::default();
+        let par = NativeBackend::new(3);
+        let a = serial.gram_block(&xe_t, None, &xd_t, e, d, n).unwrap().unwrap();
+        let b = par.gram_block(&xe_t, None, &xd_t, e, d, n).unwrap().unwrap();
+        assert_eq!(a, b);
     }
 }

@@ -13,7 +13,7 @@
 //! module docs).
 
 use super::xla_stub as xla;
-use super::{Backend, DesignRepr, RegisteredDesign};
+use super::{Backend, DesignRepr, KktBatch, RegisteredDesign};
 use crate::error::{Context, Result};
 use crate::loss::Loss;
 use std::collections::HashMap;
@@ -116,6 +116,11 @@ impl Backend for PjrtBackend {
             ));
         }
         let f32data: Vec<f32> = col_major.iter().map(|&v| v as f32).collect();
+        // Column norms are cached host-side in f64: the look-ahead
+        // sphere tests must not depend on f32 rounding.
+        let col_norms = (0..p)
+            .map(|j| crate::linalg::blas::nrm2(&col_major[j * n..(j + 1) * n]))
+            .collect();
         // Column-major (n, p) == row-major (p, n): upload with dims (p, n).
         let buffer = self
             .client
@@ -124,6 +129,7 @@ impl Backend for PjrtBackend {
         Ok(RegisteredDesign {
             n,
             p,
+            col_norms,
             repr: DesignRepr::Pjrt(buffer),
         })
     }
@@ -204,11 +210,29 @@ impl Backend for PjrtBackend {
         )))
     }
 
+    /// Batched look-ahead sweep: **stubbed** until a dedicated
+    /// `lasso_kkt_batch` AOT artifact exists (the per-λ mask pass is
+    /// trivial to fuse device-side, but the op must be lowered by
+    /// `python/compile/aot.py` first). Returning `None` makes the
+    /// engine fall back to per-λ sequential artifact sweeps, so the
+    /// batching surface is wired end-to-end without new artifacts.
+    fn kkt_sweep_batch(
+        &self,
+        _loss: Loss,
+        _design: &RegisteredDesign,
+        _y: &[f64],
+        _eta: &[f64],
+        _lambdas: &[f64],
+        _l1_norm: f64,
+    ) -> Result<Option<KktBatch>> {
+        Ok(None)
+    }
+
     /// Weighted Gram panel via `gram_block` (Algorithm-1 augmentation).
     fn gram_block(
         &self,
         xe_t: &[f64],
-        w: &[f64],
+        w: Option<&[f64]>,
         xd_t: &[f64],
         e: usize,
         d: usize,
@@ -219,13 +243,19 @@ impl Backend for PjrtBackend {
             return Ok(None);
         };
         let to32 = |s: &[f64]| s.iter().map(|&v| v as f32).collect::<Vec<f32>>();
+        // The artifact always takes a weight vector; unit weights
+        // stand in for `None`.
+        let w32 = match w {
+            Some(w) => to32(w),
+            None => vec![1.0f32; n],
+        };
         let eb = self
             .client
             .buffer_from_host_buffer(&to32(xe_t), &[e, n], None)
             .map_err(|er| crate::err!("upload xe: {er}"))?;
         let wb = self
             .client
-            .buffer_from_host_buffer(&to32(w), &[n, 1], None)
+            .buffer_from_host_buffer(&w32, &[n, 1], None)
             .map_err(|er| crate::err!("upload w: {er}"))?;
         let db = self
             .client

@@ -10,6 +10,14 @@
 //! * [`hessian_screen`] — the Hessian Screening Rule (eq. 6 + the
 //!   strong-restriction and γ adjustments of §3.3);
 //! * [`gap_safe_keep`] — Gap Safe sphere test (§3.3.4 / Fercoq et al.);
+//! * [`lookahead_keep`] — *batched look-ahead* Gap-Safe masks: from a
+//!   single correlation sweep at the λ_k solution, the sphere test is
+//!   evaluated at several upcoming values λ_{k+1..k+B} at once, so the
+//!   path driver can pre-screen those steps and skip their full-set
+//!   KKT sweeps entirely (Larsson, *Look-Ahead Screening Rules for the
+//!   Lasso*, 2021, arXiv:2105.05648). The batched kernel behind it is
+//!   [`crate::runtime::Backend::kkt_sweep_batch`], consumed through
+//!   [`crate::runtime::EngineSweep::look_ahead`];
 //! * [`edpp_keep`] — Enhanced Dual Polytope Projection (lasso only);
 //! * [`sasvi_keep`] — (Dynamic) Sasvi ball test;
 //! * working sets / Celer / Blitz are *strategies* layered on these
@@ -167,6 +175,34 @@ pub fn gap_safe_keep(
         .zip(xt_theta)
         .filter(|(&j, &xt)| xt.abs() >= 1.0 - col_norms[j] * radius)
         .map(|(&j, _)| j)
+        .collect()
+}
+
+/// Look-ahead Gap-Safe mask (Larsson 2021, arXiv:2105.05648): given
+/// the correlation vector c = Xᵀresid and its sup-norm at the current
+/// iterate, plus the duality gap evaluated at a *future* λ, returns
+/// `keep[j] = |xⱼᵀθ| ≥ 1 − ‖xⱼ‖·√(2G(λ))/λ − slack` with
+/// θ = resid/max(λ, ‖c‖∞). `keep[j] == false` certifies β*ⱼ(λ) = 0 —
+/// the sphere is safe for any feasible dual point, so one sweep yields
+/// valid masks for a whole batch of upcoming λ values. `slack` (0 for
+/// exact-f64 correlations) loosens the threshold for reduced-precision
+/// backends: entries trusted only to within `slack·scale` can then be
+/// conservatively kept, never wrongly discarded
+/// ([`crate::runtime::EngineSweep::look_ahead`] passes its
+/// `recheck_band`).
+pub fn lookahead_keep(
+    c: &[f64],
+    col_norms: &[f64],
+    xt_inf: f64,
+    gap: f64,
+    lambda: f64,
+    slack: f64,
+) -> Vec<bool> {
+    let scale = lambda.max(xt_inf);
+    let radius = (2.0 * gap.max(0.0)).sqrt() / lambda;
+    c.iter()
+        .zip(col_norms)
+        .map(|(cj, nj)| cj.abs() / scale >= 1.0 - nj * radius - slack)
         .collect()
 }
 
@@ -358,6 +394,42 @@ mod tests {
         let norms = vec![1.0, 1.0];
         let keep = gap_safe_keep(&xt, &cols, &norms, 100.0, 0.5);
         assert_eq!(keep, vec![0, 1]);
+    }
+
+    #[test]
+    fn lookahead_mask_agrees_with_gap_safe_keep() {
+        // The look-ahead mask is the same sphere test, evaluated at a
+        // future λ from the current c: cross-check against
+        // gap_safe_keep on the scaled correlations.
+        let c = vec![0.95, 0.40, -0.99, 0.05];
+        let norms = vec![1.0, 0.8, 1.2, 1.0];
+        let (xt_inf, gap, lambda) = (0.99, 1e-4, 0.9);
+        let mask = lookahead_keep(&c, &norms, xt_inf, gap, lambda, 0.0);
+        let scale = lambda.max(xt_inf);
+        let xt_theta: Vec<f64> = c.iter().map(|v| v / scale).collect();
+        let cols: Vec<usize> = (0..c.len()).collect();
+        let kept = gap_safe_keep(&xt_theta, &cols, &norms, gap, lambda);
+        for j in 0..c.len() {
+            assert_eq!(mask[j], kept.contains(&j), "col {j}");
+        }
+    }
+
+    #[test]
+    fn lookahead_mask_widens_as_lambda_recedes() {
+        // Farther-ahead λ values have larger gaps at the frozen
+        // iterate, so their masks can only keep more predictors.
+        let mut g = Gen::new(8);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(30, 12));
+        let y = g.gaussian_vec(30);
+        use crate::linalg::Design;
+        let c: Vec<f64> = (0..12).map(|j| x.col_dot(j, &y)).collect();
+        let norms: Vec<f64> = (0..12).map(|j| x.col_sq_norm(j).sqrt()).collect();
+        let xt_inf = c.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let near = lookahead_keep(&c, &norms, xt_inf, 0.01, 0.9 * xt_inf, 0.0);
+        let far = lookahead_keep(&c, &norms, xt_inf, 0.5, 0.6 * xt_inf, 0.0);
+        let n_near = near.iter().filter(|&&k| k).count();
+        let n_far = far.iter().filter(|&&k| k).count();
+        assert!(n_far >= n_near, "far mask kept {n_far} < near {n_near}");
     }
 
     #[test]

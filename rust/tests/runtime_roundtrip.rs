@@ -10,11 +10,14 @@
 //! (`make test` always builds artifacts first).
 
 use hessian_screening::data::{DesignMatrix, SyntheticSpec};
+use hessian_screening::error::Result;
 use hessian_screening::linalg::Design;
 use hessian_screening::loss::Loss;
-use hessian_screening::path::PathFitter;
-use hessian_screening::runtime::{EngineSweep, RuntimeEngine};
-use hessian_screening::screening::ScreeningKind;
+use hessian_screening::path::{PathFitter, PathSettings};
+use hessian_screening::runtime::{
+    Backend, EngineSweep, KktBatch, NativeBackend, RegisteredDesign, RuntimeEngine,
+};
+use hessian_screening::screening::{lookahead_keep, ScreeningKind};
 
 fn dense_of(data: &hessian_screening::data::Dataset) -> &hessian_screening::linalg::DenseMatrix {
     match &data.design {
@@ -101,7 +104,7 @@ fn native_gram_block_matches_weighted_gram() {
     }
     let w = vec![0.25; n];
     let g = engine
-        .gram_block(&xe_t, &w, &xd_t, e, d, n)
+        .gram_block(&xe_t, Some(&w), &xd_t, e, d, n)
         .unwrap()
         .expect("native kernel");
     assert_eq!(g.len(), e * d);
@@ -123,9 +126,13 @@ fn native_engine_swept_path_equals_plain_path() {
     let (n, p) = (150, 600);
     let data = SyntheticSpec::new(n, p, 10).rho(0.4).seed(6).generate();
     let dense = dense_of(&data);
+    // Look-ahead off: this test isolates the per-λ full_sweep path
+    // against the no-engine driver (the batched path has its own
+    // equivalence tests below).
     let sweep = EngineSweep::new(&engine, dense, Loss::Gaussian)
         .unwrap()
-        .expect("native backend always binds");
+        .expect("native backend always binds")
+        .with_lookahead(0);
     let fitter = PathFitter::new(Loss::Gaussian, ScreeningKind::Hessian);
     let native = fitter.fit(&data.design, &data.response);
     let swept = fitter.fit_with_engine(&data.design, &data.response, Some(&sweep));
@@ -164,6 +171,353 @@ fn load_dir_without_artifacts_errors_cleanly() {
     // manifest. Either way an Err the CLI can print — never a panic.
     let err = RuntimeEngine::load_dir(std::path::Path::new("/nonexistent-dir-xyz"));
     assert!(err.is_err());
+}
+
+// ---------------------------------------------------------------------
+// Batched look-ahead sweeps + threaded kernels: equivalence tests.
+// ---------------------------------------------------------------------
+
+/// One batched sweep must return the *bit-identical* correlation
+/// vector the per-λ sequential f64 path computes, for every loss with
+/// a fused sweep — the batching only amortizes, never re-rounds.
+#[test]
+fn batched_sweep_bit_identical_to_sequential_gaussian_and_logistic() {
+    for threads in [1usize, 4] {
+        let engine = RuntimeEngine::native_threaded(threads);
+        let (n, p) = (120, 900);
+        for loss in [Loss::Gaussian, Loss::Logistic] {
+            let data = SyntheticSpec::new(n, p, 8)
+                .rho(0.3)
+                .loss(loss)
+                .seed(11)
+                .generate();
+            let dense = dense_of(&data);
+            let reg = engine.register_design(dense.data(), n, p).unwrap();
+            let eta = vec![0.05; n];
+            let lambdas = [0.8, 0.6, 0.45, 0.3];
+            let batch = engine
+                .kkt_sweep_batch(loss, &reg, &data.response, &eta, &lambdas, 1.5)
+                .unwrap()
+                .expect("native batch kernel");
+            assert_eq!(batch.keep.len(), lambdas.len());
+            for &lam in &lambdas {
+                let (c_seq, resid_seq) = engine
+                    .kkt_sweep(loss, &reg, &data.response, &eta, lam)
+                    .unwrap()
+                    .expect("native kernel");
+                assert_eq!(
+                    batch.c, c_seq,
+                    "{loss:?} t={threads}: batched c differs from per-λ sweep"
+                );
+                assert_eq!(batch.resid, resid_seq);
+            }
+            // Every mask equals the sphere test evaluated directly on
+            // the exact correlation vector (same f64 formula, same
+            // column norms — bit-identical decisions).
+            let norms: Vec<f64> = (0..p).map(|j| dense.col_sq_norm(j).sqrt()).collect();
+            let xt_inf = batch.c.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            for (l, &lam) in lambdas.iter().enumerate() {
+                let gap =
+                    loss.duality_gap(&data.response, &eta, &batch.resid, xt_inf, lam, 1.5);
+                let want = lookahead_keep(&batch.c, &norms, xt_inf, gap, lam, 0.0);
+                assert_eq!(batch.keep[l], want, "{loss:?} t={threads}: mask {l}");
+            }
+        }
+    }
+}
+
+/// Threads are a wall-clock knob, not a numerics knob: the whole fitted
+/// path must be bit-identical at any thread count (same look-ahead
+/// batching, same backend kernels per column).
+#[test]
+fn threaded_engine_path_bit_identical_to_serial_engine_path() {
+    // n·p clears the native backend's parallelism cutoff, so the
+    // 4-thread engine really does spawn workers.
+    let (n, p) = (150, 2_000);
+    for loss in [Loss::Gaussian, Loss::Logistic] {
+        let data = SyntheticSpec::new(n, p, 8)
+            .rho(0.35)
+            .loss(loss)
+            .seed(17)
+            .generate();
+        let dense = dense_of(&data);
+        let serial = RuntimeEngine::native_threaded(1);
+        let par = RuntimeEngine::native_threaded(4);
+        let sweep_s = EngineSweep::new(&serial, dense, loss).unwrap().unwrap();
+        let sweep_p = EngineSweep::new(&par, dense, loss).unwrap().unwrap();
+        let fitter = PathFitter::new(loss, ScreeningKind::Hessian);
+        let a = fitter.fit_with_engine(&data.design, &data.response, Some(&sweep_s));
+        let b = fitter.fit_with_engine(&data.design, &data.response, Some(&sweep_p));
+        assert_eq!(a.lambdas.len(), b.lambdas.len(), "{loss:?}: path lengths");
+        for k in 0..a.lambdas.len() {
+            let ba = a.beta_dense(k, p);
+            let bb = b.beta_dense(k, p);
+            for j in 0..p {
+                assert!(
+                    ba[j] == bb[j],
+                    "{loss:?} step {k} coef {j}: {} vs {} (threads must not change bits)",
+                    ba[j],
+                    bb[j]
+                );
+            }
+        }
+    }
+}
+
+/// The batched look-ahead path must (a) actually skip full sweeps and
+/// (b) agree with the per-λ sequential engine path to solver slack.
+#[test]
+fn lookahead_path_skips_sweeps_and_matches_sequential() {
+    let (n, p) = (110, 700);
+    for (loss, kind) in [
+        (Loss::Gaussian, ScreeningKind::Hessian),
+        (Loss::Logistic, ScreeningKind::Working),
+    ] {
+        let data = SyntheticSpec::new(n, p, 9)
+            .rho(0.3)
+            .snr(2.0)
+            .loss(loss)
+            .seed(23)
+            .generate();
+        let dense = dense_of(&data);
+        let engine = RuntimeEngine::native_threaded(2);
+        let batched = EngineSweep::new(&engine, dense, loss).unwrap().unwrap();
+        assert_eq!(batched.lookahead, 4, "default batch width");
+        let sequential = EngineSweep::new(&engine, dense, loss)
+            .unwrap()
+            .unwrap()
+            .with_lookahead(0);
+        let mut settings = PathSettings::default();
+        settings.path_length = 40;
+        settings.cd.eps = 1e-8;
+        let fitter = PathFitter::new(loss, kind).with_settings(settings);
+        let a = fitter.fit_with_engine(&data.design, &data.response, Some(&batched));
+        let b = fitter.fit_with_engine(&data.design, &data.response, Some(&sequential));
+
+        let skips = a.steps.iter().filter(|s| s.lookahead_skip).count();
+        assert!(skips > 0, "{loss:?}: look-ahead never skipped a sweep");
+        assert_eq!(
+            b.steps.iter().filter(|s| s.lookahead_skip).count(),
+            0,
+            "{loss:?}: sequential run must not use masks"
+        );
+        let sweeps_a: usize = a.steps.iter().map(|s| s.full_sweeps).sum();
+        let sweeps_b: usize = b.steps.iter().map(|s| s.full_sweeps).sum();
+        assert!(
+            sweeps_a < sweeps_b,
+            "{loss:?}: batching did not reduce sweeps ({sweeps_a} vs {sweeps_b})"
+        );
+
+        // Look-ahead only ever drops predictors that are provably zero
+        // at the optimum, so both runs converge to the same solution;
+        // transient working-set differences are bounded by the ε·ζ
+        // duality-gap slack (same bound the cross-method tests use).
+        let m = a.lambdas.len().min(b.lambdas.len());
+        assert!(m > 5, "{loss:?}: paths too short ({m})");
+        for k in 0..m {
+            let ba = a.beta_dense(k, p);
+            let bb = b.beta_dense(k, p);
+            for j in 0..p {
+                assert!(
+                    (ba[j] - bb[j]).abs() < 1e-3,
+                    "{loss:?} step {k} coef {j}: {} vs {}",
+                    ba[j],
+                    bb[j]
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reduced-precision backends: the f64 borderline re-verification.
+// ---------------------------------------------------------------------
+
+/// A deliberately-inexact mock backend: serves the native kernels but
+/// perturbs every correlation lying inside the recheck band around λ
+/// (flipping it across the threshold), the worst case for a reduced
+/// precision (f32) backend. `is_exact()` stays false, so
+/// `EngineSweep::full_sweep` must repair every decision in f64.
+struct PerturbingBackend {
+    inner: NativeBackend,
+    band: f64,
+}
+
+impl PerturbingBackend {
+    fn perturb(&self, c: &mut [f64], lambda: f64) {
+        let (lo, hi) = (lambda * (1.0 - self.band), lambda * (1.0 + self.band));
+        for cv in c.iter_mut() {
+            let a = cv.abs();
+            if a >= lo && a <= hi {
+                // Flip across the threshold: violations become
+                // passes and vice versa — maximally misleading.
+                let flipped = if a > lambda {
+                    lambda * (1.0 - 0.5 * self.band)
+                } else {
+                    lambda * (1.0 + 0.5 * self.band)
+                };
+                *cv = cv.signum() * flipped;
+            }
+        }
+    }
+}
+
+impl Backend for PerturbingBackend {
+    fn name(&self) -> &'static str {
+        "perturbed"
+    }
+
+    fn num_ops(&self) -> usize {
+        self.inner.num_ops()
+    }
+
+    fn supports_sweep(&self, loss: Loss, n: usize, p: usize) -> bool {
+        self.inner.supports_sweep(loss, n, p)
+    }
+
+    // is_exact() deliberately left at the default `false`.
+
+    fn register_design(&self, col_major: &[f64], n: usize, p: usize) -> Result<RegisteredDesign> {
+        self.inner.register_design(col_major, n, p)
+    }
+
+    fn correlation(&self, design: &RegisteredDesign, r: &[f64]) -> Result<Option<Vec<f64>>> {
+        self.inner.correlation(design, r)
+    }
+
+    fn kkt_sweep(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambda: f64,
+    ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        let Some((mut c, resid)) = self.inner.kkt_sweep(loss, design, y, eta, lambda)? else {
+            return Ok(None);
+        };
+        self.perturb(&mut c, lambda);
+        Ok(Some((c, resid)))
+    }
+
+    fn kkt_sweep_batch(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambdas: &[f64],
+        l1_norm: f64,
+    ) -> Result<Option<KktBatch>> {
+        let Some(mut batch) =
+            self.inner
+                .kkt_sweep_batch(loss, design, y, eta, lambdas, l1_norm)?
+        else {
+            return Ok(None);
+        };
+        for &lam in lambdas {
+            self.perturb(&mut batch.c, lam);
+        }
+        Ok(Some(batch))
+    }
+
+    fn gram_block(
+        &self,
+        xe_t: &[f64],
+        w: Option<&[f64]>,
+        xd_t: &[f64],
+        e: usize,
+        d: usize,
+        n: usize,
+    ) -> Result<Option<Vec<f64>>> {
+        self.inner.gram_block(xe_t, w, xd_t, e, d, n)
+    }
+}
+
+#[test]
+fn f64_recheck_repairs_inexact_backend_decisions() {
+    let (n, p) = (90, 400);
+    let data = SyntheticSpec::new(n, p, 6).rho(0.4).seed(31).generate();
+    let dense = dense_of(&data);
+    let y = &data.response;
+    let eta = vec![0.0; n];
+    let resid = y.clone();
+    // Pick λ so that several correlations sit inside the band.
+    let mut mags: Vec<f64> = (0..p).map(|j| dense.col_dot(j, &resid).abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let lambda = mags[6];
+
+    let band = 5e-4; // inside EngineSweep's default recheck_band = 1e-3
+    let engine = RuntimeEngine::from_backend(Box::new(PerturbingBackend {
+        inner: NativeBackend::default(),
+        band,
+    }));
+    assert!(!engine.is_exact());
+    let sweep = EngineSweep::new(&engine, dense, Loss::Gaussian)
+        .unwrap()
+        .expect("mock binds");
+
+    // The raw backend really is wrong: at least one KKT decision flips.
+    let reg = engine.register_design(dense.data(), n, p).unwrap();
+    let (c_raw, _) = engine
+        .kkt_sweep(Loss::Gaussian, &reg, y, &eta, lambda)
+        .unwrap()
+        .unwrap();
+    let mut raw_flips = 0;
+    for j in 0..p {
+        let exact = dense.col_dot(j, &resid);
+        if (c_raw[j].abs() > lambda) != (exact.abs() > lambda) {
+            raw_flips += 1;
+        }
+    }
+    assert!(raw_flips > 0, "mock backend failed to flip any decision");
+
+    // Through full_sweep, the f64 recheck restores every decision —
+    // and every borderline value exactly.
+    let mut c = vec![0.0; p];
+    assert!(sweep.full_sweep(dense, y, &eta, &resid, lambda, &mut c));
+    for j in 0..p {
+        let exact = dense.col_dot(j, &resid);
+        assert_eq!(
+            c[j].abs() > lambda,
+            exact.abs() > lambda,
+            "col {j}: KKT decision depends on f32-style rounding"
+        );
+        let a = exact.abs();
+        if a >= lambda * (1.0 - band) && a <= lambda * (1.0 + band) {
+            assert_eq!(c[j], exact, "borderline col {j} not restored to f64");
+        }
+    }
+
+    // Same policy on the batched path: the mock's perturbations all
+    // lie inside the recheck band, so the corrected correlations are
+    // exactly the f64 values and the rebuilt masks must equal the
+    // sphere test on them.
+    let lambdas = [lambda, 0.9 * lambda];
+    let mut c2 = vec![0.0; p];
+    let masks = sweep
+        .look_ahead(dense, y, &eta, &resid, 0.0, &lambdas, &mut c2)
+        .expect("mock batch");
+    for j in 0..p {
+        assert_eq!(c2[j], dense.col_dot(j, &resid), "col {j} not repaired");
+    }
+    let norms: Vec<f64> = (0..p).map(|j| dense.col_sq_norm(j).sqrt()).collect();
+    let xt_inf = c2.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    for (l, &lam) in lambdas.iter().enumerate() {
+        let gap = Loss::Gaussian.duality_gap(y, &eta, &resid, xt_inf, lam, 0.0);
+        // Inexact backends rebuild masks with `recheck_band` of slack
+        // on the sphere threshold (conservative keeps only).
+        let want = lookahead_keep(&c2, &norms, xt_inf, gap, lam, sweep.recheck_band);
+        assert_eq!(masks[l], want, "rebuilt mask {l} wrong");
+        let exact_keep = lookahead_keep(&c2, &norms, xt_inf, gap, lam, 0.0);
+        for j in 0..p {
+            // Slack can only widen the mask, never drop a keeper.
+            assert!(
+                masks[l][j] || !exact_keep[j],
+                "mask {l} col {j}: slack dropped an exact keeper"
+            );
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
