@@ -1,23 +1,37 @@
 # Build/test entry points referenced throughout the docs and the
-# integration tests (rust/tests/runtime_roundtrip.rs).
+# integration tests (rust/tests/runtime_roundtrip.rs). The CI workflow
+# (.github/workflows/ci.yml) calls these same targets, so a local
+# `make ci` runs exactly what CI runs — no drift.
 #
-#   make artifacts   lower the L2 graphs to HLO text (needs jax)
-#   make build       release build, default features (pure Rust)
-#   make test        build artifacts when possible, then cargo test
-#   make bench       run the experiment benches (quick presets)
-#   make ci          mirror the CI workflow locally
-#   make clean       remove build products
+#   make artifacts       lower the L2 graphs to HLO text (needs jax)
+#   make build           release build, default features (pure Rust)
+#   make test            build artifacts when possible, then cargo test
+#   make test-rust       crate tests only (the tier-1 gate)
+#   make bench           run the experiment benches (quick presets)
+#   make bench-compile   compile benches without running them
+#   make bench-ci        quick sweep bench -> $(BENCH_JSON) (guarded:
+#                        a failed bench publishes no JSON)
+#   make perf-gate       diff $(BENCH_JSON) against $(BENCH_BASELINE)
+#   make check-features  cargo check the feature powerset (pjrt, none)
+#   make ci              mirror the CI workflow locally
+#   make clean           remove build products
 
 CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR := artifacts
+BENCH_JSON ?= BENCH_sweeps.json
+BENCH_BASELINE ?= BENCH_baseline.json
+# The CI bench configuration: quick shape, 2 threads, 2 shards — keep
+# in sync with the records committed to $(BENCH_BASELINE).
+BENCH_FLAGS ?= --quick --threads 2 --shards 2
 
-.PHONY: all build test test-rust artifacts bench ci fmt clippy clean
+.PHONY: all build test test-rust artifacts bench bench-compile bench-ci \
+        perf-gate check-features ci fmt clippy clean
 
 all: build
 
 build:
-	$(CARGO) build --release
+	$(CARGO) build --release --workspace
 
 # AOT artifacts for the PJRT backend. Requires a Python with jax
 # installed; skipped gracefully by `make test` when unavailable.
@@ -38,20 +52,44 @@ test-rust:
 bench:
 	$(CARGO) bench
 
+bench-compile:
+	$(CARGO) bench --no-run
+
+# Quick sweep bench with a machine-readable record. Written to a temp
+# file first: a bench that exits nonzero (e.g. malformed flags) must
+# never publish a partial or stale $(BENCH_JSON).
+bench-ci:
+	rm -f $(BENCH_JSON) $(BENCH_JSON).tmp
+	$(CARGO) bench --bench micro_kernels -- $(BENCH_FLAGS) --json $(BENCH_JSON).tmp \
+	    || { echo "bench failed; $(BENCH_JSON) not produced" >&2; \
+	         rm -f $(BENCH_JSON).tmp; exit 1; }
+	mv $(BENCH_JSON).tmp $(BENCH_JSON)
+
+# Perf-trajectory gate: compare the fresh bench record against the
+# committed baseline (warn > 1.25x, fail > 1.5x). Refresh ritual:
+# download a trusted CI run's BENCH_sweeps artifact and commit it as
+# $(BENCH_BASELINE) — see README "Perf trajectory".
+perf-gate:
+	$(PYTHON) python/ci/bench_compare.py $(BENCH_JSON) $(BENCH_BASELINE)
+
+# Feature powerset: the crate must at least type-check with every
+# feature combination so cfg-gated code can't rot.
+check-features:
+	$(CARGO) check --workspace --no-default-features
+	$(CARGO) check --workspace --features pjrt
+	$(CARGO) check --workspace --no-default-features --features pjrt
+
 fmt:
 	$(CARGO) fmt --all -- --check
 
 clippy:
 	$(CARGO) clippy --workspace -- -D warnings
 
-# Mirror .github/workflows/ci.yml locally.
-ci: fmt clippy
-	$(CARGO) build --release --workspace
-	$(CARGO) test -q
-	$(CARGO) bench --no-run
-	$(CARGO) check --workspace --features pjrt
+# Mirror .github/workflows/ci.yml locally (same targets CI calls).
+ci: fmt clippy build test-rust bench-compile check-features
 
 clean:
 	$(CARGO) clean
 	rm -rf $(ARTIFACTS_DIR) results
+	rm -f $(BENCH_JSON) $(BENCH_JSON).tmp
 	find python -name __pycache__ -type d -exec rm -rf {} +

@@ -8,6 +8,8 @@
 //!   --quick            tiny shape for CI smoke runs (200 x 4000)
 //!   --n N --p P        sweep-suite shape override (default 400 x 40000)
 //!   --threads T        threaded-kernel worker count (0 = all cores)
+//!   --shards S         also bench the column-sharded backend at S
+//!                      shards (pipelined uploads; 0/absent = skip)
 //!   --reps R           timed repetitions per kernel
 //!   --json OUT         write the sweep-suite records to OUT
 //!                      (machine-readable perf trajectory — see
@@ -48,6 +50,8 @@ struct Record {
     p: usize,
     backend: &'static str,
     threads: usize,
+    /// Column shards the backend splits the design into (1 = unsharded).
+    shards: usize,
     batch: usize,
     wall_seconds: f64,
     ci_half: f64,
@@ -58,12 +62,14 @@ fn write_json(path: &str, records: &[Record]) {
     for (i, r) in records.iter().enumerate() {
         s.push_str(&format!(
             "  {{\"name\": \"{}\", \"n\": {}, \"p\": {}, \"backend\": \"{}\", \
-             \"threads\": {}, \"batch\": {}, \"wall_seconds\": {:.9}, \"ci_half\": {:.9}}}{}\n",
+             \"threads\": {}, \"shards\": {}, \"batch\": {}, \
+             \"wall_seconds\": {:.9}, \"ci_half\": {:.9}}}{}\n",
             r.name,
             r.n,
             r.p,
             r.backend,
             r.threads,
+            r.shards,
             r.batch,
             r.wall_seconds,
             r.ci_half,
@@ -98,6 +104,7 @@ fn main() {
     let p = usize_flag(&args, "p").unwrap_or(if quick { 4_000 } else { 40_000 });
     let reps = usize_flag(&args, "reps").unwrap_or(if quick { 5 } else { 15 });
     let threads = usize_flag(&args, "threads").unwrap_or(0);
+    let shards = usize_flag(&args, "shards").unwrap_or(0);
 
     let data = SyntheticSpec::new(n, p, 20).rho(0.4).seed(1).generate();
     let dense = match &data.design {
@@ -166,6 +173,7 @@ fn main() {
             p,
             backend: engine.backend_name(),
             threads: t,
+            shards: 1,
             batch: 1,
             wall_seconds: s.mean,
             ci_half: s.ci_half,
@@ -182,6 +190,7 @@ fn main() {
             p,
             backend: engine.backend_name(),
             threads: t,
+            shards: 1,
             batch: 1,
             wall_seconds: s.mean,
             ci_half: s.ci_half,
@@ -209,6 +218,7 @@ fn main() {
             p,
             backend: engine.backend_name(),
             threads: t,
+            shards: 1,
             batch: lookahead,
             wall_seconds: s.mean,
             ci_half: s.ci_half,
@@ -235,6 +245,7 @@ fn main() {
             p,
             backend: engine.backend_name(),
             threads: t,
+            shards: 1,
             batch: 1,
             wall_seconds: s.mean,
             ci_half: s.ci_half,
@@ -246,6 +257,73 @@ fn main() {
             thread_counts[1],
             per_thread_mean[0] / per_thread_mean[1]
         );
+    }
+
+    // ------------- sharded suite (--shards S, JSON-recorded) -------------
+    // One serial native engine per shard: the per-column kernels are
+    // identical to the unsharded backend, so any delta is sharding
+    // overhead + pipelined-upload overlap, never numerics.
+    if shards >= 1 {
+        let engine = RuntimeEngine::native_sharded(shards, 1);
+        let t = engine.threads();
+        println!("\nsharded suite (n={n}, p={p}, {shards} shard(s), {t} total thread(s))");
+        let mut push = |name: &'static str, batch: usize, s: &Summary| {
+            records.push(Record {
+                name,
+                n,
+                p,
+                backend: "sharded",
+                threads: t,
+                shards,
+                batch,
+                wall_seconds: s.mean,
+                ci_half: s.ci_half,
+            });
+        };
+        // register_design is the pipelined-upload path itself: staging
+        // shard k+1 overlaps uploading shard k (UploadStats proves it).
+        let s = bench(&format!("register_design ({shards} shards, pipelined)"), reps, || {
+            let reg = engine.register_design(dense.data(), n, p).unwrap();
+            // Wait for the pipeline so the timing covers the full upload.
+            let _ = std::hint::black_box(engine.correlation(&reg, &v).unwrap());
+        });
+        push("register_design", 1, &s);
+
+        let reg = engine.register_design(dense.data(), n, p).unwrap();
+        let s = bench(&format!("correlation X^T r ({shards} shards)"), reps, || {
+            let _ = std::hint::black_box(engine.correlation(&reg, &v).unwrap());
+        });
+        push("correlation", 1, &s);
+
+        let s = bench(&format!("fused kkt_sweep ({shards} shards)"), reps, || {
+            let _ = std::hint::black_box(
+                engine.kkt_sweep(Loss::Gaussian, &reg, &y, &eta, 0.5).unwrap(),
+            );
+        });
+        push("kkt_sweep", 1, &s);
+
+        let lambdas: Vec<f64> = (0..lookahead).map(|i| 0.9 - 0.1 * i as f64).collect();
+        let s = bench(&format!("kkt_sweep_batch B={lookahead} ({shards} shards)"), reps, || {
+            let _ = std::hint::black_box(
+                engine
+                    .kkt_sweep_batch(Loss::Gaussian, &reg, &y, &eta, &lambdas, 0.0)
+                    .unwrap(),
+            );
+        });
+        push("kkt_sweep_batch", lookahead, &s);
+
+        if let Some(u) = engine.upload_stats() {
+            println!(
+                "  -> uploads: {} staged, {} uploaded, {} overlapped \
+                 (stage {:.1} µs, upload {:.1} µs, stall {:.1} µs)",
+                u.staged,
+                u.uploaded,
+                u.overlapped,
+                u.stage_seconds * 1e6,
+                u.upload_seconds * 1e6,
+                u.stall_seconds * 1e6
+            );
+        }
     }
 
     // Artifact backend (pjrt feature + `make artifacts`): add a record
@@ -267,6 +345,7 @@ fn main() {
                     p,
                     backend: engine.backend_name(),
                     threads: engine.threads(),
+                    shards: engine.shards(),
                     batch: 1,
                     wall_seconds: s.mean,
                     ci_half: s.ci_half,

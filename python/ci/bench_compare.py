@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate: diff a fresh BENCH_sweeps.json against the
+committed baseline.
+
+Records are keyed on (name, backend, threads, shards, batch) — the
+same identity the bench writes — and compared on mean wall-seconds:
+
+  ratio = fresh / baseline
+  ratio > --warn  (default 1.25x)  ->  warning, exit 0
+  ratio > --fail  (default 1.50x)  ->  regression, exit 1
+
+Entries faster than --min-seconds in the *baseline* never gate: at
+micro-second scale, shared-runner jitter swamps any real signal.
+Keys present on only one side are reported but never gate — they are
+a coverage change, not a regression.
+
+The gate is advisory in CI (the perf job is continue-on-error): it
+puts the verdict in the log and the trajectory in the artifact without
+blocking merges on noisy runners. Baseline refresh ritual: download a
+trusted CI run's BENCH_sweeps artifact and commit it as
+BENCH_baseline.json (see README "Perf trajectory").
+
+Exit codes: 0 ok/warn-only, 1 fail-level regression, 2 usage/IO error.
+
+stdlib only — runs on a bare python3, no pip installs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _die(msg):
+    """Usage/IO error: message on stderr, exit 2 (1 is reserved for a
+    real fail-level regression)."""
+    print(msg, file=sys.stderr)
+    raise SystemExit(2)
+
+
+def load_records(path):
+    """Read a bench JSON file into {key: record}. Duplicate keys keep
+    the last record (the bench never emits duplicates; a hand-edited
+    baseline might)."""
+    try:
+        with open(path) as fh:
+            records = json.load(fh)
+    except OSError as e:
+        _die(f"bench_compare: cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        _die(f"bench_compare: {path} is not valid JSON: {e}")
+    if not isinstance(records, list):
+        _die(f"bench_compare: {path}: expected a JSON array of records")
+    out = {}
+    for r in records:
+        try:
+            key = (
+                r["name"],
+                r["backend"],
+                int(r["threads"]),
+                # Baselines predating the sharded backend have no
+                # shards field: those records are unsharded.
+                int(r.get("shards", 1)),
+                int(r["batch"]),
+            )
+            out[key] = {"wall_seconds": float(r["wall_seconds"])}
+        except (KeyError, TypeError, ValueError) as e:
+            _die(f"bench_compare: {path}: malformed record {r!r}: {e}")
+    return out
+
+
+def fmt_key(key):
+    name, backend, threads, shards, batch = key
+    return f"{name} [{backend} t={threads} s={shards} B={batch}]"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="freshly produced BENCH_sweeps.json")
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument(
+        "--warn", type=float, default=1.25, help="warn ratio (default 1.25)"
+    )
+    ap.add_argument(
+        "--fail", type=float, default=1.5, help="fail ratio (default 1.5)"
+    )
+    ap.add_argument(
+        "--min-seconds",
+        type=float,
+        default=1e-4,
+        help="baseline entries faster than this never gate (noise floor)",
+    )
+    args = ap.parse_args(argv)
+    if args.fail < args.warn:
+        ap.error("--fail must be >= --warn")
+
+    fresh = load_records(args.fresh)
+    baseline = load_records(args.baseline)
+
+    worst = 0.0
+    warns, fails = [], []
+    compared = 0
+    for key in sorted(baseline):
+        if key not in fresh:
+            print(f"  missing in fresh run (not gated): {fmt_key(key)}")
+            continue
+        base_s = baseline[key]["wall_seconds"]
+        fresh_s = fresh[key]["wall_seconds"]
+        if base_s < args.min_seconds:
+            print(
+                f"  below noise floor ({base_s:.2e}s < {args.min_seconds:.0e}s), "
+                f"not gated: {fmt_key(key)}"
+            )
+            continue
+        compared += 1
+        ratio = fresh_s / base_s if base_s > 0 else float("inf")
+        worst = max(worst, ratio)
+        line = f"  {ratio:5.2f}x  {fresh_s:.3e}s vs {base_s:.3e}s  {fmt_key(key)}"
+        if ratio > args.fail:
+            fails.append(line)
+        elif ratio > args.warn:
+            warns.append(line)
+        else:
+            print(f"ok{line}")
+    for key in sorted(set(fresh) - set(baseline)):
+        print(f"  new since baseline (not gated): {fmt_key(key)}")
+
+    if warns:
+        print(f"\nWARN: {len(warns)} record(s) above {args.warn}x:")
+        for line in warns:
+            print(line)
+    if fails:
+        print(f"\nFAIL: {len(fails)} record(s) above {args.fail}x:")
+        for line in fails:
+            print(line)
+        print(
+            "\nIf this is expected (new hardware, intentional trade-off), refresh "
+            "the baseline from a trusted CI artifact — see README 'Perf trajectory'."
+        )
+        return 1
+    print(
+        f"\nperf-gate: {compared} record(s) compared, worst ratio "
+        f"{worst:.2f}x (warn {args.warn}x, fail {args.fail}x)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,110 @@
+"""Tests for the perf-trajectory gate (python/ci/bench_compare.py).
+
+Pure stdlib — exercised through the CLI surface (the exact invocation
+`make perf-gate` uses), no jax required.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = Path(__file__).resolve().parents[1] / "ci" / "bench_compare.py"
+
+
+def record(name="kkt_sweep", backend="native", threads=1, shards=1, batch=1, wall=1e-3):
+    return {
+        "name": name,
+        "n": 200,
+        "p": 4000,
+        "backend": backend,
+        "threads": threads,
+        "shards": shards,
+        "batch": batch,
+        "wall_seconds": wall,
+        "ci_half": wall / 20,
+    }
+
+
+def run_gate(tmp_path, fresh, baseline, *extra):
+    fresh_p = tmp_path / "fresh.json"
+    base_p = tmp_path / "baseline.json"
+    fresh_p.write_text(json.dumps(fresh))
+    base_p.write_text(json.dumps(baseline))
+    return subprocess.run(
+        [sys.executable, str(SCRIPT), str(fresh_p), str(base_p), *extra],
+        capture_output=True,
+        text=True,
+    )
+
+
+def test_within_threshold_passes(tmp_path):
+    base = [record(wall=1e-3), record(name="correlation", wall=2e-3)]
+    fresh = [record(wall=1.1e-3), record(name="correlation", wall=1.9e-3)]
+    r = run_gate(tmp_path, fresh, base)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "perf-gate: 2 record(s) compared" in r.stdout
+    assert "WARN" not in r.stdout
+
+
+def test_warn_band_does_not_fail(tmp_path):
+    r = run_gate(tmp_path, [record(wall=1.3e-3)], [record(wall=1e-3)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "WARN" in r.stdout
+
+
+def test_fail_level_regression_exits_nonzero(tmp_path):
+    r = run_gate(tmp_path, [record(wall=2e-3)], [record(wall=1e-3)])
+    assert r.returncode == 1
+    assert "FAIL" in r.stdout
+    assert "refresh" in r.stdout  # points at the baseline ritual
+
+
+def test_noise_floor_never_gates(tmp_path):
+    # 2 µs baseline: a 10x "regression" is runner jitter, not signal.
+    r = run_gate(tmp_path, [record(wall=2e-5)], [record(wall=2e-6)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "below noise floor" in r.stdout
+
+
+def test_missing_and_new_keys_are_reported_not_gated(tmp_path):
+    base = [record(), record(name="gone", wall=1e-3)]
+    fresh = [record(), record(name="brand_new", backend="sharded", shards=2, wall=9.0)]
+    r = run_gate(tmp_path, fresh, base)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "missing in fresh run" in r.stdout
+    assert "new since baseline" in r.stdout
+
+
+def test_legacy_baseline_without_shards_field_defaults_to_one(tmp_path):
+    legacy = record(wall=1e-3)
+    del legacy["shards"]  # baselines predating the sharded backend
+    r = run_gate(tmp_path, [record(wall=1.05e-3)], [legacy])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "perf-gate: 1 record(s) compared" in r.stdout
+
+
+def test_unreadable_input_is_a_usage_error(tmp_path):
+    base_p = tmp_path / "baseline.json"
+    base_p.write_text(json.dumps([record()]))
+    r = subprocess.run(
+        [sys.executable, str(SCRIPT), str(tmp_path / "nope.json"), str(base_p)],
+        capture_output=True,
+        text=True,
+    )
+    assert r.returncode != 0
+    assert "cannot read" in r.stderr
+
+
+def test_malformed_json_is_a_usage_error(tmp_path):
+    fresh_p = tmp_path / "fresh.json"
+    base_p = tmp_path / "baseline.json"
+    fresh_p.write_text("{not json")
+    base_p.write_text(json.dumps([record()]))
+    r = subprocess.run(
+        [sys.executable, str(SCRIPT), str(fresh_p), str(base_p)],
+        capture_output=True,
+        text=True,
+    )
+    assert r.returncode != 0
+    assert "not valid JSON" in r.stderr

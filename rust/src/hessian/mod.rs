@@ -598,6 +598,33 @@ mod tests {
     }
 
     #[test]
+    fn sharded_engine_panels_match_scalar_bitwise() {
+        // Same contract as the threaded-engine test, through the
+        // sharded backend: fanning panel rows across shard engines
+        // must not change a single bit (ragged row split: 3 engines,
+        // panels with e ∈ {3, 4}).
+        let mut g = Gen::new(17);
+        let x = DesignMatrix::Dense(g.gaussian_matrix(40, 14));
+        let engine = crate::runtime::RuntimeEngine::native_sharded(3, 1);
+        let mut scalar = HessianTracker::new(1e-8);
+        let mut routed = HessianTracker::new(1e-8).with_engine(&engine);
+        scalar.rebuild(&x, &[0, 3, 7], None);
+        routed.rebuild(&x, &[0, 3, 7], None);
+        assert_eq!(routed.n_engine_panels, 1, "rebuild must use the engine");
+        assert_eq!(scalar.h().max_abs_diff(routed.h()), 0.0);
+        assert_eq!(scalar.q().max_abs_diff(routed.q()), 0.0);
+        scalar.update(&x, &[0, 7, 9, 12], None);
+        routed.update(&x, &[0, 7, 9, 12], None);
+        assert_eq!(routed.n_engine_panels, 3, "augmentation must use the engine");
+        assert_eq!(scalar.h().max_abs_diff(routed.h()), 0.0);
+        assert_eq!(scalar.q().max_abs_diff(routed.q()), 0.0);
+        let w: Vec<f64> = (0..40).map(|i| 0.1 + 0.15 * ((i % 5) as f64)).collect();
+        scalar.rebuild(&x, &[1, 2, 5], Some(&w));
+        routed.rebuild(&x, &[1, 2, 5], Some(&w));
+        assert_eq!(scalar.h().max_abs_diff(routed.h()), 0.0);
+    }
+
+    #[test]
     fn sweep_counters_track_calls() {
         let mut g = Gen::new(11);
         let x = DesignMatrix::Dense(g.gaussian_matrix(20, 6));

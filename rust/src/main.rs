@@ -31,7 +31,8 @@ USAGE:
   hx fit [--dataset NAME | --n N --p P --s S] [--rho R] [--snr S]
          [--loss gaussian|logistic|poisson] [--method hessian|strong|working|
           celer|blitz|gap_safe|edpp|sasvi|none] [--path-length M] [--eps E]
-         [--gamma G] [--seed K] [--engine] [--threads T] [--lookahead B]
+         [--gamma G] [--seed K] [--engine] [--threads T] [--shards K]
+         [--lookahead B]
   hx exp <fig1|fig2|fig3|tab1|fig4|fig5|fig6|tab3|fig8|fig9|fig10|fig11|fig12|all>
          [--reps R] [--full] [--out DIR] [--threads T] [--seed K]
          [--datasets a,b,c]   (tab1 only)
@@ -128,11 +129,17 @@ fn cmd_fit(args: &Args) -> Result<(), String> {
     // Optional sweep engine: PJRT artifacts when built with the `pjrt`
     // feature and compiled, the pure-Rust NativeBackend otherwise.
     // `--threads T` enables the engine with T-way chunked
-    // column-parallel native kernels (0 = all cores); `--lookahead B`
+    // column-parallel native kernels (0 = all cores); `--shards K`
+    // splits the design into K column shards with pipelined uploads
+    // (each shard gets `--threads` workers, default 1); `--lookahead B`
     // sets the batched look-ahead width (default 4, 0 disables).
     let threads = args.get_usize("threads")?;
-    let engine = if args.flag("engine") || threads.is_some() {
-        let native = || RuntimeEngine::native_threaded(threads.unwrap_or(1));
+    let shards = args.get_usize("shards")?;
+    let engine = if args.flag("engine") || threads.is_some() || shards.is_some() {
+        let native = || match shards {
+            Some(k) => RuntimeEngine::native_sharded(k.max(1), threads.unwrap_or(1)),
+            None => RuntimeEngine::native_threaded(threads.unwrap_or(1)),
+        };
         Some(if args.flag("engine") {
             match RuntimeEngine::load_default() {
                 Ok(e) => e,
@@ -156,8 +163,9 @@ fn cmd_fit(args: &Args) -> Result<(), String> {
                         sweep = sweep.with_lookahead(b);
                     }
                     eprintln!(
-                        "(full KKT sweeps via the {} backend, {} thread(s), look-ahead {})",
+                        "(full KKT sweeps via the {} backend, {} shard(s), {} thread(s), look-ahead {})",
                         eng.backend_name(),
+                        eng.shards(),
                         eng.threads(),
                         sweep.lookahead
                     );
@@ -172,6 +180,18 @@ fn cmd_fit(args: &Args) -> Result<(), String> {
         _ => fitter.fit(&data.design, &data.response),
     };
     let secs = t.elapsed().as_secs_f64();
+    if let Some(u) = engine.as_ref().and_then(RuntimeEngine::upload_stats) {
+        eprintln!(
+            "(shard uploads: {} staged, {} uploaded, {} overlapped; \
+             stage {}s upload {}s stall {}s)",
+            u.staged,
+            u.uploaded,
+            u.overlapped,
+            fmt_secs(u.stage_seconds),
+            fmt_secs(u.upload_seconds),
+            fmt_secs(u.stall_seconds)
+        );
+    }
 
     println!(
         "dataset={} n={} p={} loss={loss:?} method={kind}",

@@ -115,6 +115,14 @@ pub struct StepStats {
     /// Candidates removed from G by Gap-Safe shrinks during this step.
     pub g_shrunk: usize,
     pub dev_ratio: f64,
+    /// Column shards the engine's backend splits the design into
+    /// (1 = unsharded engine, 0 = no engine on this fit).
+    pub shards: usize,
+    /// Cumulative shard uploads whose staging fully overlapped other
+    /// work, snapshotted from the engine's upload pipeline
+    /// ([`crate::runtime::UploadStats::overlapped`]; 0 when the
+    /// backend uploads synchronously).
+    pub upload_overlap: usize,
     /// Wall-clock split (seconds) for the F.10 breakdowns.
     pub t_cd: f64,
     pub t_kkt: f64,
@@ -375,12 +383,17 @@ impl PathFitter {
         fit.lambdas.push(lambdas[0]);
         fit.betas.push(Vec::new());
         fit.dev_ratios.push(0.0);
-        fit.steps.push(StepStats {
+        let mut st0 = StepStats {
             lambda: lambdas[0],
             dev_ratio: 0.0,
             passes: 0,
             ..Default::default()
-        });
+        };
+        if let Some(es) = engine {
+            st0.shards = es.engine.shards();
+            st0.upload_overlap = es.engine.upload_stats().map_or(0, |u| u.overlapped);
+        }
+        fit.steps.push(st0);
 
         let mut prev_active: Vec<usize> = Vec::new();
         let mut prev_dev_ratio = 0.0;
@@ -400,6 +413,10 @@ impl PathFitter {
                 lambda: ln,
                 ..Default::default()
             };
+            if let Some(es) = engine {
+                st.shards = es.engine.shards();
+                st.upload_overlap = es.engine.upload_stats().map_or(0, |u| u.overlapped);
+            }
 
             // ---------------- screening + warm start ----------------
             let t0 = Instant::now();

@@ -17,6 +17,11 @@
 //!   `xla_stub` shim, so no XLA toolchain is needed to *build*;
 //!   wiring a real `xla`-crate client in is a linking concern, not an
 //!   API one (see README "Feature matrix").
+//! * [`ShardedBackend`]: contiguous column shards, each owned by its
+//!   own inner backend (N native engines today, PJRT devices later),
+//!   with double-buffered pipelined shard uploads and a reduction
+//!   layer that merges per-shard results into bit-identical global
+//!   answers (see [`shard`]'s module docs for the contracts).
 //!
 //! Precision contract: backends may compute in f32 (the AOT artifacts
 //! do). [`EngineSweep::full_sweep`] therefore re-verifies every
@@ -34,12 +39,14 @@ use std::path::Path;
 mod native;
 #[cfg(feature = "pjrt")]
 mod pjrt;
+mod shard;
 #[cfg(feature = "pjrt")]
 pub mod xla_stub;
 
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
+pub use shard::{ShardedBackend, UploadStats};
 
 /// A design registered with (uploaded to) a backend. Holds the
 /// backend-specific representation plus the logical shape.
@@ -57,6 +64,8 @@ pub(crate) enum DesignRepr {
     Native(Vec<f64>),
     #[cfg(feature = "pjrt")]
     Pjrt(xla_stub::PjRtBuffer),
+    /// Per-shard sub-designs behind the pipelined upload slots.
+    Sharded(shard::ShardedRepr),
 }
 
 /// Result of a batched look-ahead KKT sweep: the correlation vector
@@ -87,6 +96,18 @@ pub trait Backend: Send + Sync {
     /// Number of worker threads the backend's kernels use (1 = serial).
     fn threads(&self) -> usize {
         1
+    }
+
+    /// Number of column shards the backend splits designs into
+    /// (1 = unsharded).
+    fn shards(&self) -> usize {
+        1
+    }
+
+    /// Upload-pipeline counters, for backends that stage designs
+    /// asynchronously. `None` for synchronous backends.
+    fn upload_stats(&self) -> Option<UploadStats> {
+        None
     }
 
     /// Whether a fused KKT sweep is available for this loss and shape.
@@ -186,6 +207,17 @@ impl RuntimeEngine {
         }
     }
 
+    /// Column-sharded native execution: `shards` engines with
+    /// `threads_per_shard` workers each, with pipelined shard uploads.
+    /// Bit-identical to [`Self::native`] at any shard count (the
+    /// reduction layer preserves the per-column scalar kernels — see
+    /// [`ShardedBackend`]).
+    pub fn native_sharded(shards: usize, threads_per_shard: usize) -> Self {
+        Self {
+            backend: Box::new(ShardedBackend::native(shards, threads_per_shard)),
+        }
+    }
+
     /// Wrap an arbitrary backend implementation.
     pub fn from_backend(backend: Box<dyn Backend>) -> Self {
         Self { backend }
@@ -227,6 +259,16 @@ impl RuntimeEngine {
     /// Worker threads the backend's kernels use (1 = serial).
     pub fn threads(&self) -> usize {
         self.backend.threads()
+    }
+
+    /// Column shards the backend splits designs into (1 = unsharded).
+    pub fn shards(&self) -> usize {
+        self.backend.shards()
+    }
+
+    /// Upload-pipeline counters (`None` for synchronous backends).
+    pub fn upload_stats(&self) -> Option<UploadStats> {
+        self.backend.upload_stats()
     }
 
     /// Whether a KKT sweep is available for this loss and shape.

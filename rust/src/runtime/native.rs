@@ -59,7 +59,6 @@ impl NativeBackend {
         &data[j * n..(j + 1) * n]
     }
 
-    #[cfg(feature = "pjrt")]
     fn design_data(design: &RegisteredDesign) -> Result<&[f64]> {
         match &design.repr {
             DesignRepr::Native(data) => Ok(data),
@@ -67,12 +66,6 @@ impl NativeBackend {
                 "design was registered with a different backend"
             )),
         }
-    }
-
-    #[cfg(not(feature = "pjrt"))]
-    fn design_data(design: &RegisteredDesign) -> Result<&[f64]> {
-        let DesignRepr::Native(data) = &design.repr;
-        Ok(data)
     }
 
     /// Worker count for `items` outputs of `flops_per_item` work each.

@@ -11,6 +11,12 @@
 //! This module type-checks against [`super::xla_stub`]; substituting
 //! the real `xla` crate is a one-line import swap (see the stub's
 //! module docs).
+//!
+//! Multi-device fan-out does **not** live here: hand one `PjrtBackend`
+//! per device to [`super::ShardedBackend::from_backends`] and the
+//! column sharding, pipelined uploads, and mask reduction come for
+//! free (the per-shard `supports_sweep` checks then key artifacts on
+//! the shard shape, so compile one artifact per shard width).
 
 use super::xla_stub as xla;
 use super::{Backend, DesignRepr, KktBatch, RegisteredDesign};

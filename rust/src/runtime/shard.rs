@@ -1,0 +1,671 @@
+//! Column-sharded compute backend with pipelined shard uploads.
+//!
+//! [`ShardedBackend`] splits a registered design into contiguous
+//! *column shards*, each held by its own inner [`Backend`] handle — N
+//! independent [`NativeBackend`] engines today, PJRT devices once the
+//! `pjrt` feature carries a real multi-device client
+//! ([`ShardedBackend::from_backends`] accepts any engine set). A
+//! reduction layer merges the per-shard results back into the exact
+//! global answers the path driver expects:
+//!
+//! * `correlation` / `kkt_sweep` — per-shard correlation slices are
+//!   concatenated in shard order; every entry is produced by the same
+//!   per-column kernel the unsharded backend runs, so the merged
+//!   vector is **bit-identical** to the unsharded sweep.
+//! * `kkt_sweep_batch` — per-shard batches are concatenated and the
+//!   Gap-Safe keep-masks are **rebuilt from the global correlation
+//!   vector**: a shard only knows its local sup-norm, and a mask built
+//!   from a shard-local ‖Xᵀr‖∞ would be unsound. The rebuilt masks
+//!   match the unsharded [`NativeBackend::kkt_sweep_batch`] bit for
+//!   bit (same dual scale, same gap, same sphere test).
+//! * `gram_block` — panel rows are fanned out across the shard
+//!   engines and concatenated row-major; each row is computed by the
+//!   same scalar kernel regardless of the split.
+//!
+//! **Pipelined uploads.** Registration is a double-buffered async
+//! pipeline (`std::thread` + `sync_channel(1)`, zero dependencies):
+//! shard 0 is staged and uploaded synchronously so the caller can
+//! start sweeping immediately, then a background thread stages shard
+//! k+1's column panel while shard k uploads — and while the caller
+//! sweeps the shards that are already resident. Sweeps block per
+//! shard (condvar) only until that shard's upload lands, so the first
+//! full sweep overlaps the tail of the upload pipeline. The overlap
+//! is *observable*, not assumed: [`UploadStats`] counts staged and
+//! uploaded panels, how many were already staged when the uploader
+//! asked (i.e. staging fully overlapped other work), and the seconds
+//! the uploader stalled waiting on staging; the path driver snapshots
+//! it into `StepStats::{shards, upload_overlap}`.
+//!
+//! Memory math: the coordinator's source copy (np) plus at most two
+//! staged panels (2·np/k) are alive while the per-shard engines take
+//! ownership of their slices, so peak transient footprint is
+//! ≈ np·(2 + 2/k) f64 — see README "Sharded designs".
+
+use super::{Backend, DesignRepr, KktBatch, NativeBackend, RegisteredDesign};
+use crate::error::Result;
+use crate::linalg::blas;
+use crate::loss::Loss;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+/// ⌈a/b⌉ (usize::div_ceil needs Rust 1.73; MSRV is 1.70).
+fn div_ceil(a: usize, b: usize) -> usize {
+    a / b + usize::from(a % b != 0)
+}
+
+/// Pipeline counters for the double-buffered shard upload path.
+/// Cumulative per backend (a backend can register several designs).
+#[derive(Clone, Debug, Default)]
+pub struct UploadStats {
+    /// Shard panels staged (host-side contiguous column-slice copies).
+    pub staged: usize,
+    /// Shard panels registered with ("uploaded to") their engine.
+    pub uploaded: usize,
+    /// Uploads whose panel was already staged when the uploader asked
+    /// for it — staging fully overlapped the previous shard's upload
+    /// (or the caller's sweeps on already-resident shards).
+    pub overlapped: usize,
+    /// Wall-seconds spent staging panels.
+    pub stage_seconds: f64,
+    /// Wall-seconds spent in the inner engines' `register_design`.
+    pub upload_seconds: f64,
+    /// Wall-seconds the uploader stalled waiting for a staged panel.
+    pub stall_seconds: f64,
+}
+
+/// Contiguous column ranges `[start, end)`, one per shard; the final
+/// shard is ragged when `p % shards != 0`, and trailing shards are
+/// empty when `shards > p`.
+fn shard_bounds(p: usize, shards: usize) -> Vec<(usize, usize)> {
+    let chunk = div_ceil(p.max(1), shards);
+    (0..shards)
+        .map(|k| ((k * chunk).min(p), ((k + 1) * chunk).min(p)))
+        .collect()
+}
+
+enum SlotState {
+    Pending,
+    Ready,
+    Failed(String),
+}
+
+/// One shard's upload rendezvous: the pipeline thread fulfills it, the
+/// sweep workers block on it until the shard is resident.
+struct ShardSlot {
+    state: Mutex<SlotState>,
+    ready: Condvar,
+    cell: OnceLock<RegisteredDesign>,
+}
+
+impl ShardSlot {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(SlotState::Pending),
+            ready: Condvar::new(),
+            cell: OnceLock::new(),
+        }
+    }
+
+    fn fulfill(&self, reg: RegisteredDesign) {
+        // The cell is set before the state flips, under the same
+        // mutex the readers take: a `Ready` observation implies the
+        // cell is populated.
+        let _ = self.cell.set(reg);
+        *self.state.lock().unwrap() = SlotState::Ready;
+        self.ready.notify_all();
+    }
+
+    fn fail(&self, msg: String) {
+        let mut st = self.state.lock().unwrap();
+        if matches!(*st, SlotState::Pending) {
+            *st = SlotState::Failed(msg);
+        }
+        drop(st);
+        self.ready.notify_all();
+    }
+
+    /// Block until the shard's upload lands (or failed).
+    fn wait(&self) -> Result<&RegisteredDesign> {
+        let mut st = self.state.lock().unwrap();
+        while matches!(*st, SlotState::Pending) {
+            st = self.ready.wait(st).unwrap();
+        }
+        match &*st {
+            SlotState::Ready => Ok(self.cell.get().expect("ready slot holds a design")),
+            SlotState::Failed(m) => Err(crate::err!("shard upload failed: {m}")),
+            SlotState::Pending => unreachable!(),
+        }
+    }
+}
+
+/// The sharded representation held inside a [`RegisteredDesign`]: one
+/// upload slot per shard (aligned with the backend's engines) plus the
+/// background pipeline handle.
+pub(crate) struct ShardedRepr {
+    slots: Arc<Vec<ShardSlot>>,
+    /// Background upload pipeline; joined on drop so no thread
+    /// outlives the design it uploads.
+    uploader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for ShardedRepr {
+    fn drop(&mut self) {
+        if let Some(h) = self.uploader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A [`Backend`] that routes every design-bound op through contiguous
+/// column shards, each owned by its own inner engine. See the module
+/// docs for the reduction and pipelining contracts.
+pub struct ShardedBackend {
+    engines: Arc<Vec<Box<dyn Backend>>>,
+    stats: Arc<Mutex<UploadStats>>,
+}
+
+impl ShardedBackend {
+    /// `shards` native engines with `threads_per_shard` worker threads
+    /// each (both clamped to at least 1, so total workers =
+    /// shards × threads_per_shard).
+    pub fn native(shards: usize, threads_per_shard: usize) -> Self {
+        let shards = shards.max(1);
+        Self::from_backends(
+            (0..shards)
+                .map(|_| Box::new(NativeBackend::new(threads_per_shard.max(1))) as Box<dyn Backend>)
+                .collect(),
+        )
+    }
+
+    /// Wrap an explicit engine set — one shard per engine. This is the
+    /// seam where PJRT devices plug in: hand one `PjrtBackend` per
+    /// device and the column fan-out plus the mask reduction come for
+    /// free.
+    pub fn from_backends(engines: Vec<Box<dyn Backend>>) -> Self {
+        assert!(!engines.is_empty(), "at least one shard engine required");
+        Self {
+            engines: Arc::new(engines),
+            stats: Arc::new(Mutex::new(UploadStats::default())),
+        }
+    }
+
+    fn repr<'d>(design: &'d RegisteredDesign) -> Result<&'d ShardedRepr> {
+        match &design.repr {
+            DesignRepr::Sharded(rep) => Ok(rep),
+            _ => Err(crate::err!(
+                "design was registered with a different backend"
+            )),
+        }
+    }
+
+    /// Run `f(shard, shard_design)` on every shard concurrently (each
+    /// shard on its own engine), blocking per shard until its upload
+    /// lands. Results come back in shard order; any `Err` propagates,
+    /// any `None` (missing kernel) makes the whole op unavailable.
+    fn shard_map<T, F>(&self, rep: &ShardedRepr, f: F) -> Result<Option<Vec<T>>>
+    where
+        T: Send,
+        F: Fn(usize, &RegisteredDesign) -> Result<Option<T>> + Sync,
+    {
+        let k = rep.slots.len();
+        let results: Vec<Result<Option<T>>> = if k == 1 {
+            vec![rep.slots[0].wait().and_then(|reg| f(0, reg))]
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..k)
+                    .map(|i| {
+                        let f = &f;
+                        let slots = &rep.slots;
+                        s.spawn(move || slots[i].wait().and_then(|reg| f(i, reg)))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard sweep worker panicked"))
+                    .collect()
+            })
+        };
+        let mut vals = Vec::with_capacity(k);
+        for r in results {
+            match r? {
+                Some(v) => vals.push(v),
+                None => return Ok(None),
+            }
+        }
+        Ok(Some(vals))
+    }
+}
+
+/// The stager half of the upload pipeline: slices contiguous column
+/// panels out of the source copy and hands them to the uploader
+/// through a bounded channel (capacity 1 ⇒ double buffering: one
+/// panel in flight, one being staged).
+#[allow(clippy::too_many_arguments)]
+fn upload_pipeline(
+    src: Arc<Vec<f64>>,
+    base: usize,
+    n: usize,
+    work: Vec<(usize, usize, usize)>,
+    engines: Arc<Vec<Box<dyn Backend>>>,
+    slots: Arc<Vec<ShardSlot>>,
+    stats: Arc<Mutex<UploadStats>>,
+) {
+    let (tx, rx) = mpsc::sync_channel::<(usize, usize, Vec<f64>)>(1);
+    let stager = {
+        let src = Arc::clone(&src);
+        let stats = Arc::clone(&stats);
+        let work = work.clone();
+        std::thread::spawn(move || {
+            for (k, c0, c1) in work {
+                let t = Instant::now();
+                let panel = src[c0 * n - base..c1 * n - base].to_vec();
+                let secs = t.elapsed().as_secs_f64();
+                {
+                    let mut st = stats.lock().unwrap();
+                    st.staged += 1;
+                    st.stage_seconds += secs;
+                }
+                if tx.send((k, c1 - c0, panel)).is_err() {
+                    return;
+                }
+            }
+        })
+    };
+    for _ in 0..work.len() {
+        // Overlap bookkeeping: a panel already in the channel means
+        // staging fully overlapped the previous upload (or the
+        // caller's sweeps); otherwise the uploader stalls and the
+        // stall is timed.
+        let (k, width, panel) = match rx.try_recv() {
+            Ok(v) => {
+                stats.lock().unwrap().overlapped += 1;
+                v
+            }
+            Err(mpsc::TryRecvError::Empty) => {
+                let t = Instant::now();
+                match rx.recv() {
+                    Ok(v) => {
+                        stats.lock().unwrap().stall_seconds += t.elapsed().as_secs_f64();
+                        v
+                    }
+                    Err(_) => break,
+                }
+            }
+            Err(mpsc::TryRecvError::Disconnected) => break,
+        };
+        let t = Instant::now();
+        match engines[k].register_design(&panel, n, width) {
+            Ok(reg) => {
+                let secs = t.elapsed().as_secs_f64();
+                {
+                    let mut st = stats.lock().unwrap();
+                    st.uploaded += 1;
+                    st.upload_seconds += secs;
+                }
+                slots[k].fulfill(reg);
+            }
+            Err(e) => slots[k].fail(e.to_string()),
+        }
+    }
+    let _ = stager.join();
+    // Any slot left pending (stager or channel died early) must still
+    // release its waiters.
+    for slot in slots.iter() {
+        slot.fail("upload pipeline exited early".to_string());
+    }
+}
+
+impl Backend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn num_ops(&self) -> usize {
+        self.engines[0].num_ops()
+    }
+
+    fn threads(&self) -> usize {
+        self.engines.iter().map(|e| e.threads()).sum()
+    }
+
+    fn shards(&self) -> usize {
+        self.engines.len()
+    }
+
+    fn upload_stats(&self) -> Option<UploadStats> {
+        Some(self.stats.lock().unwrap().clone())
+    }
+
+    fn supports_sweep(&self, loss: Loss, n: usize, p: usize) -> bool {
+        shard_bounds(p, self.engines.len())
+            .iter()
+            .zip(self.engines.iter())
+            .all(|(&(s, e), eng)| eng.supports_sweep(loss, n, e - s))
+    }
+
+    fn is_exact(&self) -> bool {
+        self.engines.iter().all(|e| e.is_exact())
+    }
+
+    fn register_design(&self, col_major: &[f64], n: usize, p: usize) -> Result<RegisteredDesign> {
+        if col_major.len() != n * p {
+            return Err(crate::err!(
+                "design buffer has {} entries, expected {}x{}",
+                col_major.len(),
+                n,
+                p
+            ));
+        }
+        // Global column norms in f64 — identical to the unsharded
+        // backends' cache (the batched mask reduction needs them).
+        let col_norms: Vec<f64> = (0..p)
+            .map(|j| blas::nrm2(&col_major[j * n..(j + 1) * n]))
+            .collect();
+        let bounds = shard_bounds(p, self.engines.len());
+        let slots: Arc<Vec<ShardSlot>> =
+            Arc::new((0..bounds.len()).map(|_| ShardSlot::new()).collect());
+
+        // Shard 0 synchronously: the caller can start sweeping it
+        // while the pipeline uploads the rest.
+        let (s0, e0) = bounds[0];
+        let t = Instant::now();
+        let panel0 = col_major[s0 * n..e0 * n].to_vec();
+        let stage0 = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let reg0 = self.engines[0].register_design(&panel0, n, e0 - s0)?;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.staged += 1;
+            st.stage_seconds += stage0;
+            st.uploaded += 1;
+            st.upload_seconds += t.elapsed().as_secs_f64();
+        }
+        slots[0].fulfill(reg0);
+
+        let uploader = if bounds.len() > 1 {
+            // Source copy for the background stager (only the columns
+            // past shard 0 — shard 0's panel is already resident).
+            let src = Arc::new(col_major[e0 * n..].to_vec());
+            let work: Vec<(usize, usize, usize)> = bounds
+                .iter()
+                .enumerate()
+                .skip(1)
+                .map(|(k, &(s, e))| (k, s, e))
+                .collect();
+            let engines = Arc::clone(&self.engines);
+            let slots = Arc::clone(&slots);
+            let stats = Arc::clone(&self.stats);
+            let base = e0 * n;
+            Some(std::thread::spawn(move || {
+                upload_pipeline(src, base, n, work, engines, slots, stats);
+            }))
+        } else {
+            None
+        };
+
+        Ok(RegisteredDesign {
+            n,
+            p,
+            col_norms,
+            repr: DesignRepr::Sharded(ShardedRepr {
+                slots,
+                uploader: Mutex::new(uploader),
+            }),
+        })
+    }
+
+    fn correlation(&self, design: &RegisteredDesign, r: &[f64]) -> Result<Option<Vec<f64>>> {
+        let rep = Self::repr(design)?;
+        let parts = self.shard_map(rep, |i, reg| self.engines[i].correlation(reg, r))?;
+        Ok(parts.map(|ps| ps.into_iter().flatten().collect()))
+    }
+
+    fn kkt_sweep(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambda: f64,
+    ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        let rep = Self::repr(design)?;
+        let parts = self.shard_map(rep, |i, reg| {
+            self.engines[i].kkt_sweep(loss, reg, y, eta, lambda)
+        })?;
+        Ok(parts.map(|ps| {
+            // Every shard computes the same n-length pseudo-residual;
+            // take shard 0's and concatenate the correlation slices.
+            let resid = ps[0].1.clone();
+            (ps.into_iter().flat_map(|(c, _)| c).collect(), resid)
+        }))
+    }
+
+    fn kkt_sweep_batch(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambdas: &[f64],
+        l1_norm: f64,
+    ) -> Result<Option<KktBatch>> {
+        if lambdas.is_empty() {
+            return Ok(None);
+        }
+        let rep = Self::repr(design)?;
+        let parts = self.shard_map(rep, |i, reg| {
+            self.engines[i].kkt_sweep_batch(loss, reg, y, eta, lambdas, l1_norm)
+        })?;
+        let Some(ps) = parts else {
+            return Ok(None);
+        };
+        let resid = ps[0].resid.clone();
+        let c: Vec<f64> = ps.into_iter().flat_map(|b| b.c).collect();
+        // Reduction: the per-shard masks were built from shard-local
+        // sup-norms and are unsound globally — rebuild every mask from
+        // the merged correlation vector and the global ‖Xᵀr‖∞, exactly
+        // as the unsharded native kernel does (bit-identical).
+        let xt_inf = blas::amax(&c);
+        let keep = lambdas
+            .iter()
+            .map(|&l| {
+                let gap = loss.duality_gap(y, eta, &resid, xt_inf, l, l1_norm);
+                crate::screening::lookahead_keep(&c, &design.col_norms, xt_inf, gap, l, 0.0)
+            })
+            .collect();
+        Ok(Some(KktBatch { c, resid, keep }))
+    }
+
+    fn gram_block(
+        &self,
+        xe_t: &[f64],
+        w: Option<&[f64]>,
+        xd_t: &[f64],
+        e: usize,
+        d: usize,
+        n: usize,
+    ) -> Result<Option<Vec<f64>>> {
+        if xe_t.len() != e * n || xd_t.len() != d * n || w.is_some_and(|w| w.len() != n) {
+            return Err(crate::err!(
+                "gram_block shape mismatch: xe {}, xd {}, w {} for (e={e}, d={d}, n={n})",
+                xe_t.len(),
+                xd_t.len(),
+                w.map_or(n, <[f64]>::len)
+            ));
+        }
+        if e * d == 0 {
+            return Ok(Some(Vec::new()));
+        }
+        let k = self.engines.len().min(e);
+        if k == 1 {
+            return self.engines[0].gram_block(xe_t, w, xd_t, e, d, n);
+        }
+        // Fan the panel's rows out across the shard engines; each row
+        // is computed by the same scalar kernel, so the row-major
+        // concatenation is bit-identical to the unsharded panel.
+        let rows_per = div_ceil(e, k);
+        let results: Vec<Result<Option<Vec<f64>>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..k)
+                .map(|i| {
+                    let r0 = (i * rows_per).min(e);
+                    let r1 = ((i + 1) * rows_per).min(e);
+                    let eng = &self.engines[i];
+                    s.spawn(move || {
+                        if r0 == r1 {
+                            Ok(Some(Vec::new()))
+                        } else {
+                            eng.gram_block(&xe_t[r0 * n..r1 * n], w, xd_t, r1 - r0, d, n)
+                        }
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("panel shard worker panicked"))
+                .collect()
+        });
+        let mut out = Vec::with_capacity(e * d);
+        for r in results {
+            match r? {
+                Some(mut block) => out.append(&mut block),
+                None => return Ok(None),
+            }
+        }
+        Ok(Some(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DesignMatrix, SyntheticSpec};
+
+    fn dense_problem(n: usize, p: usize, seed: u64) -> (crate::linalg::DenseMatrix, Vec<f64>) {
+        let data = SyntheticSpec::new(n, p, 5).rho(0.3).seed(seed).generate();
+        let dense = match data.design {
+            DesignMatrix::Dense(m) => m,
+            _ => unreachable!(),
+        };
+        (dense, data.response)
+    }
+
+    #[test]
+    fn bounds_cover_ragged_and_degenerate() {
+        assert_eq!(shard_bounds(10, 4), vec![(0, 3), (3, 6), (6, 9), (9, 10)]);
+        assert_eq!(shard_bounds(8, 1), vec![(0, 8)]);
+        assert_eq!(shard_bounds(3, 5), vec![(0, 1), (1, 2), (2, 3), (3, 3), (3, 3)]);
+        for (p, k) in [(10, 4), (8, 1), (3, 5), (100, 7)] {
+            let b = shard_bounds(p, k);
+            assert_eq!(b.len(), k);
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b[k - 1].1, p);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "shards must be contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_correlation_is_bit_identical() {
+        let (n, p) = (30, 53); // ragged for every shard count below
+        let (dense, y) = dense_problem(n, p, 7);
+        let reference = NativeBackend::default();
+        let reg_ref = reference.register_design(dense.data(), n, p).unwrap();
+        let c_ref = reference.correlation(&reg_ref, &y).unwrap().unwrap();
+        for shards in [1, 2, 4, 7] {
+            let b = ShardedBackend::native(shards, 1);
+            let reg = b.register_design(dense.data(), n, p).unwrap();
+            let c = b.correlation(&reg, &y).unwrap().unwrap();
+            assert_eq!(c, c_ref, "{shards} shards");
+            assert_eq!(reg.col_norms, reg_ref.col_norms, "{shards} shards norms");
+        }
+    }
+
+    #[test]
+    fn sharded_batch_masks_use_the_global_sup_norm() {
+        // The dominant column sits in the *last* shard, so a
+        // shard-local reduction would compute the wrong dual scale for
+        // every other shard. The merged masks must match the unsharded
+        // kernel exactly.
+        let (n, p) = (25, 40);
+        let (dense, y) = dense_problem(n, p, 11);
+        let eta = vec![0.0; n];
+        let lambdas = [0.8, 0.6, 0.4];
+        let reference = NativeBackend::default();
+        let reg_ref = reference.register_design(dense.data(), n, p).unwrap();
+        for loss in [Loss::Gaussian, Loss::Logistic] {
+            let want = reference
+                .kkt_sweep_batch(loss, &reg_ref, &y, &eta, &lambdas, 0.0)
+                .unwrap()
+                .unwrap();
+            for shards in [2, 3, 4] {
+                let b = ShardedBackend::native(shards, 1);
+                let reg = b.register_design(dense.data(), n, p).unwrap();
+                let got = b
+                    .kkt_sweep_batch(loss, &reg, &y, &eta, &lambdas, 0.0)
+                    .unwrap()
+                    .unwrap();
+                assert_eq!(got.c, want.c, "{loss:?} {shards} shards c");
+                assert_eq!(got.resid, want.resid, "{loss:?} {shards} shards resid");
+                assert_eq!(got.keep, want.keep, "{loss:?} {shards} shards masks");
+            }
+        }
+        // Poisson and empty λ batches stay unavailable, not errors.
+        let b = ShardedBackend::native(2, 1);
+        let reg = b.register_design(dense.data(), n, p).unwrap();
+        assert!(b
+            .kkt_sweep_batch(Loss::Poisson, &reg, &y, &eta, &lambdas, 0.0)
+            .unwrap()
+            .is_none());
+        assert!(b
+            .kkt_sweep_batch(Loss::Gaussian, &reg, &y, &eta, &[], 0.0)
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn upload_pipeline_counts_every_panel() {
+        let (n, p) = (20, 37);
+        let (dense, y) = dense_problem(n, p, 3);
+        let b = ShardedBackend::native(4, 1);
+        let reg = b.register_design(dense.data(), n, p).unwrap();
+        // A sweep blocks until every shard is resident, so the stats
+        // are complete afterwards.
+        let _ = b.correlation(&reg, &y).unwrap().unwrap();
+        let u = b.upload_stats().unwrap();
+        assert_eq!(u.staged, 4);
+        assert_eq!(u.uploaded, 4);
+        assert!(u.overlapped <= 3, "only pipelined shards can overlap");
+        // Second registration accumulates.
+        let reg2 = b.register_design(dense.data(), n, p).unwrap();
+        let _ = b.correlation(&reg2, &y).unwrap().unwrap();
+        let u = b.upload_stats().unwrap();
+        assert_eq!(u.staged, 8);
+        assert_eq!(u.uploaded, 8);
+    }
+
+    #[test]
+    fn foreign_or_malformed_designs_are_rejected() {
+        let (n, p) = (10, 6);
+        let (dense, y) = dense_problem(n, p, 1);
+        let b = ShardedBackend::native(2, 1);
+        assert!(b.register_design(&dense.data()[1..], n, p).is_err());
+        // A native-registered design handed to the sharded backend is
+        // an error, not a silent wrong answer.
+        let native = NativeBackend::default();
+        let foreign = native.register_design(dense.data(), n, p).unwrap();
+        assert!(b.correlation(&foreign, &y).is_err());
+    }
+
+    #[test]
+    fn reports_shards_threads_and_exactness() {
+        let b = ShardedBackend::native(3, 2);
+        assert_eq!(b.name(), "sharded");
+        assert_eq!(b.shards(), 3);
+        assert_eq!(b.threads(), 6);
+        assert!(b.is_exact());
+        assert!(b.supports_sweep(Loss::Gaussian, 50, 10));
+        assert!(!b.supports_sweep(Loss::Poisson, 50, 10));
+    }
+}

@@ -1,0 +1,224 @@
+//! Integration: column-sharded execution is bit-identical to the
+//! unsharded backend — through the raw [`Backend`] ops, the Gram
+//! panels, and whole fitted paths.
+//!
+//! Sharding, like threading, must be a pure wall-clock knob: every
+//! output entry is produced by the same per-column scalar kernel the
+//! serial backend runs, the per-shard results are concatenated in
+//! shard order, and the look-ahead keep-masks are rebuilt from the
+//! *global* correlation vector. These tests assert `==` on f64
+//! outputs, never tolerance.
+//!
+//! The CI matrix drives the same tests across configurations via env
+//! knobs: `HX_TEST_THREADS` (threads per shard / reference engine
+//! threads, default 1) and `HX_TEST_SHARDS` (an extra shard count to
+//! include, on top of the always-tested {1, 2, 4}).
+
+use hessian_screening::data::{DesignMatrix, SyntheticSpec};
+use hessian_screening::loss::Loss;
+use hessian_screening::path::{PathFitter, PathSettings};
+use hessian_screening::runtime::{EngineSweep, RuntimeEngine};
+use hessian_screening::screening::ScreeningKind;
+
+fn dense_of(data: &hessian_screening::data::Dataset) -> &hessian_screening::linalg::DenseMatrix {
+    match &data.design {
+        DesignMatrix::Dense(m) => m,
+        _ => unreachable!("test data is dense"),
+    }
+}
+
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok()?.trim().parse().ok()
+}
+
+/// Threads per shard (and reference-engine threads) — CI matrix knob.
+fn test_threads() -> usize {
+    env_usize("HX_TEST_THREADS").unwrap_or(1).max(1)
+}
+
+/// Shard counts under test: the 1-shard degenerate case, 2, 4, plus
+/// whatever the CI matrix adds via HX_TEST_SHARDS.
+fn shard_counts() -> Vec<usize> {
+    let mut counts = vec![1usize, 2, 4];
+    if let Some(k) = env_usize("HX_TEST_SHARDS") {
+        if k >= 1 && !counts.contains(&k) {
+            counts.push(k);
+        }
+    }
+    counts
+}
+
+#[test]
+fn sharded_correlation_bit_identical_ragged() {
+    // p = 1003 is not divisible by 2 or 4: the final shard is ragged.
+    let (n, p) = (60, 1_003);
+    let data = SyntheticSpec::new(n, p, 8).rho(0.3).seed(41).generate();
+    let dense = dense_of(&data);
+    let reference = RuntimeEngine::native_threaded(test_threads());
+    let reg_ref = reference.register_design(dense.data(), n, p).unwrap();
+    let c_ref = reference
+        .correlation(&reg_ref, &data.response)
+        .unwrap()
+        .expect("native kernel");
+    for shards in shard_counts() {
+        let engine = RuntimeEngine::native_sharded(shards, test_threads());
+        assert_eq!(engine.backend_name(), "sharded");
+        assert_eq!(engine.shards(), shards);
+        let reg = engine.register_design(dense.data(), n, p).unwrap();
+        let c = engine
+            .correlation(&reg, &data.response)
+            .unwrap()
+            .expect("sharded kernel");
+        assert_eq!(c, c_ref, "{shards} shards: correlation must not change bits");
+    }
+}
+
+#[test]
+fn sharded_kkt_sweeps_bit_identical_gaussian_and_logistic() {
+    let (n, p) = (50, 407); // ragged for 2 and 4 shards
+    for loss in [Loss::Gaussian, Loss::Logistic] {
+        let data = SyntheticSpec::new(n, p, 6)
+            .rho(0.25)
+            .loss(loss)
+            .seed(43)
+            .generate();
+        let dense = dense_of(&data);
+        let eta = vec![0.05; n];
+        let lambdas = [0.8, 0.55, 0.3];
+        let reference = RuntimeEngine::native_threaded(test_threads());
+        let reg_ref = reference.register_design(dense.data(), n, p).unwrap();
+        let (c_ref, r_ref) = reference
+            .kkt_sweep(loss, &reg_ref, &data.response, &eta, 0.5)
+            .unwrap()
+            .expect("native kernel");
+        let batch_ref = reference
+            .kkt_sweep_batch(loss, &reg_ref, &data.response, &eta, &lambdas, 1.2)
+            .unwrap()
+            .expect("native batch kernel");
+        for shards in shard_counts() {
+            let engine = RuntimeEngine::native_sharded(shards, test_threads());
+            let reg = engine.register_design(dense.data(), n, p).unwrap();
+            let (c, r) = engine
+                .kkt_sweep(loss, &reg, &data.response, &eta, 0.5)
+                .unwrap()
+                .expect("sharded kernel");
+            assert_eq!(c, c_ref, "{loss:?} {shards} shards: kkt_sweep c");
+            assert_eq!(r, r_ref, "{loss:?} {shards} shards: kkt_sweep resid");
+            // The batched masks must come from the *global* sup-norm —
+            // a shard-local reduction would produce different (unsound)
+            // dual scales. Bit-equality proves the reduction is right.
+            let batch = engine
+                .kkt_sweep_batch(loss, &reg, &data.response, &eta, &lambdas, 1.2)
+                .unwrap()
+                .expect("sharded batch kernel");
+            assert_eq!(batch.c, batch_ref.c, "{loss:?} {shards} shards: batch c");
+            assert_eq!(
+                batch.resid, batch_ref.resid,
+                "{loss:?} {shards} shards: batch resid"
+            );
+            assert_eq!(
+                batch.keep, batch_ref.keep,
+                "{loss:?} {shards} shards: keep-masks"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_gram_block_bit_identical_ragged_rows() {
+    // e = 7 rows fanned over up to 4 engines: ragged row split; also
+    // exercise e = 0 (empty panel) and unweighted vs weighted.
+    let (e, d, n) = (7, 5, 40);
+    let data = SyntheticSpec::new(n, e + d, 4).seed(47).generate();
+    let dense = dense_of(&data);
+    let mut xe_t = Vec::with_capacity(e * n);
+    for j in 0..e {
+        xe_t.extend_from_slice(dense.col(j));
+    }
+    let mut xd_t = Vec::with_capacity(d * n);
+    for j in e..e + d {
+        xd_t.extend_from_slice(dense.col(j));
+    }
+    let w: Vec<f64> = (0..n).map(|i| 0.2 + 0.1 * ((i % 4) as f64)).collect();
+    let reference = RuntimeEngine::native_threaded(test_threads());
+    for shards in shard_counts() {
+        let engine = RuntimeEngine::native_sharded(shards, test_threads());
+        for weights in [None, Some(&w[..])] {
+            let want = reference
+                .gram_block(&xe_t, weights, &xd_t, e, d, n)
+                .unwrap()
+                .unwrap();
+            let got = engine
+                .gram_block(&xe_t, weights, &xd_t, e, d, n)
+                .unwrap()
+                .unwrap();
+            assert_eq!(got, want, "{shards} shards, weighted={}", weights.is_some());
+        }
+        assert_eq!(
+            engine.gram_block(&[], None, &xd_t, 0, d, n).unwrap().unwrap(),
+            Vec::<f64>::new(),
+            "{shards} shards: empty panel"
+        );
+    }
+}
+
+/// The acceptance bar: `--shards k` path fits are bit-identical to the
+/// unsharded serial fits for k ∈ {1, 2, 4}, Gaussian and logistic.
+#[test]
+fn sharded_path_fits_bit_identical_to_unsharded() {
+    let (n, p) = (100, 902); // ragged for 4 shards
+    for loss in [Loss::Gaussian, Loss::Logistic] {
+        let data = SyntheticSpec::new(n, p, 8)
+            .rho(0.35)
+            .loss(loss)
+            .seed(53)
+            .generate();
+        let dense = dense_of(&data);
+        let mut settings = PathSettings::default();
+        settings.path_length = 30;
+        let fitter = PathFitter::new(loss, ScreeningKind::Hessian).with_settings(settings);
+        let reference = RuntimeEngine::native_threaded(test_threads());
+        let sweep_ref = EngineSweep::new(&reference, dense, loss).unwrap().unwrap();
+        let a = fitter.fit_with_engine(&data.design, &data.response, Some(&sweep_ref));
+        for shards in shard_counts() {
+            let engine = RuntimeEngine::native_sharded(shards, test_threads());
+            let sweep = EngineSweep::new(&engine, dense, loss).unwrap().unwrap();
+            let b = fitter.fit_with_engine(&data.design, &data.response, Some(&sweep));
+            assert_eq!(a.lambdas, b.lambdas, "{loss:?} {shards} shards: λ grid");
+            assert_eq!(a.betas, b.betas, "{loss:?} {shards} shards: coefficients");
+            assert_eq!(
+                a.dev_ratios, b.dev_ratios,
+                "{loss:?} {shards} shards: deviance ratios"
+            );
+            assert_eq!(a.converged, b.converged, "{loss:?} {shards} shards");
+            // The per-step instrumentation records the shard count.
+            assert!(
+                b.steps.iter().all(|s| s.shards == shards),
+                "{loss:?} {shards} shards: StepStats.shards not recorded"
+            );
+            assert!(
+                a.steps.iter().all(|s| s.shards == 1),
+                "{loss:?}: unsharded engine must record shards = 1"
+            );
+        }
+    }
+}
+
+#[test]
+fn upload_pipeline_is_observable() {
+    let (n, p) = (40, 256);
+    let data = SyntheticSpec::new(n, p, 5).seed(59).generate();
+    let dense = dense_of(&data);
+    // Unsharded engines report no upload pipeline.
+    assert!(RuntimeEngine::native().upload_stats().is_none());
+    let engine = RuntimeEngine::native_sharded(4, 1);
+    let reg = engine.register_design(dense.data(), n, p).unwrap();
+    // A sweep blocks on every shard, so afterwards the pipeline has
+    // fully drained and the counters must balance.
+    let _ = engine.correlation(&reg, &data.response).unwrap().unwrap();
+    let u = engine.upload_stats().expect("sharded engines expose stats");
+    assert_eq!(u.staged, 4);
+    assert_eq!(u.uploaded, 4);
+    assert!(u.overlapped <= 3, "only the pipelined shards can overlap");
+    assert!(u.stage_seconds >= 0.0 && u.upload_seconds >= 0.0 && u.stall_seconds >= 0.0);
+}
