@@ -12,7 +12,13 @@
 #   make bench-ci        quick sweep bench -> $(BENCH_JSON) (guarded:
 #                        a failed bench publishes no JSON)
 #   make perf-gate       diff $(BENCH_JSON) against $(BENCH_BASELINE)
-#   make check-features  cargo check the feature powerset (pjrt, none)
+#   make check-features  cargo check the feature powerset (pjrt,
+#                        paranoid, none)
+#   make lint            the xtask invariant linter (blocking in CI)
+#   make test-paranoid   crate tests with runtime invariant checks
+#   make miri            miri over the concurrency subset (nightly)
+#   make tsan            ThreadSanitizer over the threaded suites
+#                        (nightly + rust-src)
 #   make ci              mirror the CI workflow locally
 #   make clean           remove build products
 
@@ -24,9 +30,15 @@ BENCH_BASELINE ?= BENCH_baseline.json
 # The CI bench configuration: quick shape, 2 threads, 2 shards — keep
 # in sync with the records committed to $(BENCH_BASELINE).
 BENCH_FLAGS ?= --quick --threads 2 --shards 2
+# Nightly toolchain for the dynamic-analysis targets. CI pins this via
+# NIGHTLY_VERSION (.github/workflows/ci.yml); locally any installed
+# nightly works: `make miri NIGHTLY=nightly-2026-07-15`.
+NIGHTLY ?= nightly
+TSAN_TARGET ?= x86_64-unknown-linux-gnu
 
 .PHONY: all build test test-rust artifacts bench bench-compile bench-ci \
-        perf-gate check-features ci fmt clippy clean
+        perf-gate check-features lint test-paranoid miri tsan ci fmt \
+        clippy clean
 
 all: build
 
@@ -78,6 +90,43 @@ check-features:
 	$(CARGO) check --workspace --no-default-features
 	$(CARGO) check --workspace --features pjrt
 	$(CARGO) check --workspace --no-default-features --features pjrt
+	$(CARGO) check -p hessian-screening --features paranoid
+	$(CARGO) check -p hessian-screening --features "paranoid pjrt"
+
+# Project-invariant linter (xtask/src/lint.rs): SAFETY comments on
+# every unsafe block, no f32 in the f64-exact modules, no naked
+# unwraps in library code, no raw thread::spawn outside the pipeline
+# and the coordinator, no clocks in kernel inner loops. Blocking in CI.
+lint:
+	$(CARGO) run -q -p xtask -- lint
+
+# Crate tests with the runtime invariant layer (src/invariants.rs)
+# compiled in: Gram symmetry, screened-set soundness, shard reduction
+# spot checks, upload counter balance.
+test-paranoid:
+	$(CARGO) test -q -p hessian-screening --features paranoid
+
+# Miri over the curated concurrency subset: the shard upload pipeline,
+# the coordinator pool, and the upload-stats bookkeeping (lib tests
+# only — integration suites are too slow under the interpreter).
+# -Zmiri-disable-isolation: shard.rs reads Instant::now for its stall
+# bookkeeping, which isolation would reject.
+miri:
+	MIRIFLAGS="-Zmiri-disable-isolation" \
+	    $(CARGO) +$(NIGHTLY) miri test -p hessian-screening --lib -- \
+	    runtime::shard coordinator:: runtime::tests
+
+# ThreadSanitizer over the threaded suites: lib concurrency tests plus
+# the threads × shards equivalence matrix on shrunk shapes. Needs
+# -Zbuild-std (instrumented std) and therefore rust-src + an explicit
+# target triple.
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" \
+	    $(CARGO) +$(NIGHTLY) test -Zbuild-std --target $(TSAN_TARGET) \
+	    -p hessian-screening --lib -- runtime:: coordinator::
+	HX_TEST_THREADS=4 HX_TEST_SHARDS=4 RUSTFLAGS="-Zsanitizer=thread" \
+	    $(CARGO) +$(NIGHTLY) test -Zbuild-std --target $(TSAN_TARGET) \
+	    -p hessian-screening --test shard_equivalence
 
 fmt:
 	$(CARGO) fmt --all -- --check
@@ -85,8 +134,9 @@ fmt:
 clippy:
 	$(CARGO) clippy --workspace -- -D warnings
 
-# Mirror .github/workflows/ci.yml locally (same targets CI calls).
-ci: fmt clippy build test-rust bench-compile check-features
+# Mirror .github/workflows/ci.yml locally (same targets CI calls; the
+# advisory miri/tsan jobs are opt-in because they need a nightly).
+ci: fmt clippy lint build test-rust bench-compile check-features
 
 clean:
 	$(CARGO) clean

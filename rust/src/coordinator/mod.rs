@@ -10,6 +10,8 @@
 //! sequentially inside a cell and parallelizes *across* cells only when
 //! the cell declares itself parallel-safe).
 
+#![forbid(unsafe_code)]
+
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -66,7 +68,11 @@ impl Coordinator {
                         break;
                     }
                     let r = f_ref(i, &jobs_ref[i]);
-                    *slots_ref[i].lock().unwrap() = Some(r);
+                    // Poison-proof: each slot is written by exactly one
+                    // worker (the claimant of i) and `f` runs outside the
+                    // lock, so a poisoned slot can only mean a worker
+                    // panicked — which the join below re-throws anyway.
+                    *slots_ref[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
                 }));
             }
             for h in handles {
@@ -75,7 +81,11 @@ impl Coordinator {
         });
         slots
             .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("job not run"))
+            .map(|m| {
+                m.into_inner()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .expect("job not run")
+            })
             .collect()
     }
 

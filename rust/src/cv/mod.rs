@@ -189,11 +189,13 @@ pub fn cross_validate(
             .fit(&train_x, &train_y);
         (0..lambdas.len())
             .map(|k| {
-                let beta = fit
+                // Fall back to the last fitted step when the fold's path
+                // ended early; an empty path means the null model.
+                let beta: &[(usize, f64)] = fit
                     .betas
                     .get(k)
-                    .map(|b| b.as_slice())
-                    .unwrap_or(fit.betas.last().unwrap().as_slice());
+                    .or_else(|| fit.betas.last())
+                    .map_or(&[], |b| b.as_slice());
                 holdout_deviance(design, y, &holdout, beta, loss)
             })
             .collect()
@@ -209,7 +211,7 @@ pub fn cross_validate(
         cv_se.push(s.sd / (vals.len() as f64).sqrt());
     }
     let idx_min = (0..m)
-        .min_by(|&a, &b| cv_mean[a].partial_cmp(&cv_mean[b]).unwrap())
+        .min_by(|&a, &b| cv_mean[a].total_cmp(&cv_mean[b]))
         .unwrap_or(0);
     // 1-SE rule: the largest λ (smallest index) whose CV mean is within
     // one SE of the minimum.

@@ -8,6 +8,8 @@
 //! dominate, exactly as the paper argues, and this is what makes the
 //! rule affordable relative to an O(|A|³ + |A|²n) rebuild.
 
+#![forbid(unsafe_code)]
+
 use crate::linalg::cholesky::Cholesky;
 use crate::linalg::eigen::SymEigen;
 use crate::linalg::{DenseMatrix, Design};
@@ -163,6 +165,8 @@ impl<'e> HessianTracker<'e> {
         self.active = new_active.to_vec();
         self.install(h);
         self.n_rebuilds += 1;
+        #[cfg(feature = "paranoid")]
+        crate::invariants::assert_gram_symmetric(&self.h, "HessianTracker::rebuild");
     }
 
     /// Algorithm 1: update from the current active set to `new_active`
@@ -353,6 +357,8 @@ impl<'e> HessianTracker<'e> {
             self.q = q_new;
         }
         self.n_sweep_updates += 1;
+        #[cfg(feature = "paranoid")]
+        crate::invariants::assert_gram_symmetric(&self.h, "HessianTracker::update");
     }
 
     /// Install a freshly computed H, inverting it with preconditioning.

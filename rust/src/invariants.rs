@@ -1,0 +1,217 @@
+//! Runtime invariant checks behind the non-default `paranoid` cargo
+//! feature (`make test-paranoid`, CI job `paranoid`).
+//!
+//! Screening is only as trustworthy as its invariants: a silently
+//! dropped *active* predictor corrupts every later path step with no
+//! error anywhere (the motivation for hybrid rules pairing heuristic
+//! screens with exact KKT checks — §3.2/§3.3.4). The checks here are
+//! oracles for the contracts the optimized code paths rely on:
+//!
+//! * [`assert_gram_symmetric`] — H must be *exactly* symmetric after
+//!   triangle mirroring (float multiplication is not associative, so
+//!   an un-mirrored panel differs in the last bit and Cholesky drifts).
+//! * [`assert_screened_sound`] — at an accepted step, every discarded
+//!   predictor must satisfy the Gap-Safe ball bound
+//!   `|xⱼᵀr| ≤ λ + ‖xⱼ‖·√(2·gap) + slack`: the dual optimum lies
+//!   within `√(2·gap)/λ` of the current dual point, so a correctly
+//!   discarded predictor cannot exceed this — and a wrongly discarded
+//!   active one shows up as a violation far beyond the slack.
+//! * [`assert_upload_stats_sane`] — the shard pipeline's counters obey
+//!   `overlapped ≤ uploaded ≤ staged ≤ uploaded + 2` (double
+//!   buffering: at most one panel in the channel plus one just staged).
+//! * [`assert_spot_identical`] — sharded reductions are bit-identical
+//!   to a serial recompute; checked on sampled columns in
+//!   `ShardedBackend::correlation`.
+//!
+//! Every check panics with enough context to reproduce; they are
+//! asserts, not `Result`s, because a violated invariant means the
+//! process is already computing garbage.
+
+use crate::linalg::DenseMatrix;
+use crate::runtime::UploadStats;
+
+/// Exact (bitwise) symmetry of a mirrored Gram/Hessian panel.
+pub fn assert_gram_symmetric(h: &DenseMatrix, context: &str) {
+    assert_eq!(h.nrows(), h.ncols(), "{context}: H must be square");
+    let k = h.nrows();
+    for a in 0..k {
+        for b in 0..a {
+            let ab = h.at(a, b);
+            let ba = h.at(b, a);
+            assert!(
+                ab.to_bits() == ba.to_bits(),
+                "{context}: H[{a},{b}]={ab:e} != H[{b},{a}]={ba:e} — triangle mirroring broken"
+            );
+        }
+    }
+}
+
+/// Screened-set soundness at an accepted path step.
+///
+/// `c` is a *freshly recomputed* full correlation vector at the
+/// accepted iterate, `kept[j]` says predictor `j` was in the working
+/// set (never screened out this step), `gap` the duality gap at the
+/// same iterate. For discarded `j` the Gap-Safe ball argument bounds
+/// `|c[j]| ≤ λ + ‖xⱼ‖·√(2·gap)`; the relative slack absorbs float
+/// round-off only — a real screening bug lands far outside it.
+pub fn assert_screened_sound(c: &[f64], col_norms: &[f64], kept: &[bool], lambda: f64, gap: f64) {
+    assert_eq!(c.len(), kept.len(), "mask length mismatch");
+    assert_eq!(c.len(), col_norms.len(), "norm length mismatch");
+    let radius = (2.0 * gap.max(0.0)).sqrt();
+    let slack = 1e-8 * lambda.abs().max(1.0) + 1e-12;
+    for (j, &cj) in c.iter().enumerate() {
+        if kept[j] {
+            continue;
+        }
+        let bound = lambda + col_norms[j] * radius + slack;
+        assert!(
+            cj.abs() <= bound,
+            "screened-set soundness violated: discarded predictor {j} has |c|={:e} > \
+             λ + ‖xⱼ‖·√(2·gap) + slack = {bound:e} (λ={lambda:e}, gap={gap:e}) — \
+             an active predictor was screened out",
+            cj.abs()
+        );
+    }
+}
+
+/// Shard-upload pipeline counter balance. Holds at any instant for a
+/// single in-flight pipeline (the only usage pattern): the stager can
+/// lead the uploader by at most one panel in the `sync_channel(1)`
+/// plus one staged-but-unsent panel; at quiescence `staged ==
+/// uploaded` exactly (asserted by the pipeline tests).
+pub fn assert_upload_stats_sane(stats: &UploadStats) {
+    assert!(
+        stats.overlapped <= stats.uploaded,
+        "overlapped {} > uploaded {} — an overlap was counted without its upload",
+        stats.overlapped,
+        stats.uploaded
+    );
+    assert!(
+        stats.uploaded <= stats.staged,
+        "uploaded {} > staged {} — a panel was uploaded that was never staged",
+        stats.uploaded,
+        stats.staged
+    );
+    assert!(
+        stats.staged - stats.uploaded <= 2,
+        "staged {} leads uploaded {} by more than the double-buffer depth",
+        stats.staged,
+        stats.uploaded
+    );
+    for (name, v) in [
+        ("stage_seconds", stats.stage_seconds),
+        ("upload_seconds", stats.upload_seconds),
+        ("stall_seconds", stats.stall_seconds),
+    ] {
+        assert!(v.is_finite() && v >= 0.0, "{name} is {v}");
+    }
+}
+
+/// Bitwise equality of a sharded reduction entry against a serial
+/// recompute of the same column.
+pub fn assert_spot_identical(merged: f64, serial: f64, col: usize) {
+    assert!(
+        merged.to_bits() == serial.to_bits(),
+        "shard reduction mismatch at column {col}: merged {merged:e} (bits {:#x}) != \
+         serial {serial:e} (bits {:#x}) — shard offsets or concatenation order broken",
+        merged.to_bits(),
+        serial.to_bits()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sym2(a: f64, b: f64, c: f64) -> DenseMatrix {
+        let mut h = DenseMatrix::zeros(2, 2);
+        *h.at_mut(0, 0) = a;
+        *h.at_mut(0, 1) = b;
+        *h.at_mut(1, 0) = b;
+        *h.at_mut(1, 1) = c;
+        h
+    }
+
+    #[test]
+    fn symmetric_panel_passes() {
+        assert_gram_symmetric(&sym2(2.0, 0.5, 3.0), "test");
+        assert_gram_symmetric(&DenseMatrix::zeros(0, 0), "empty");
+    }
+
+    #[test]
+    #[should_panic(expected = "triangle mirroring broken")]
+    fn last_bit_asymmetry_is_caught() {
+        let mut h = sym2(2.0, 0.5, 3.0);
+        // One ulp of drift — exactly what an un-mirrored dot_w pair
+        // produces — must already fail.
+        *h.at_mut(1, 0) = f64::from_bits(0.5f64.to_bits() + 1);
+        assert_gram_symmetric(&h, "test");
+    }
+
+    #[test]
+    fn sound_screens_pass_including_gap_slack() {
+        // Discarded predictor slightly above λ but inside the ball
+        // radius: legitimate at a finite-tolerance iterate.
+        let lambda = 1.0;
+        let gap = 1e-6;
+        let c = [1.3, 1.0005, 0.2];
+        let norms = [1.0, 1.0, 1.0];
+        let kept = [true, false, false];
+        assert_screened_sound(&c, &norms, &kept, lambda, gap);
+    }
+
+    #[test]
+    #[should_panic(expected = "screened-set soundness violated")]
+    fn dropped_active_predictor_is_caught() {
+        let c = [1.3, 0.2];
+        let norms = [1.0, 1.0];
+        let kept = [false, true]; // |c0| = 1.3 >> λ + ‖x‖·√(2·gap)
+        assert_screened_sound(&c, &norms, &kept, 1.0, 1e-10);
+    }
+
+    #[test]
+    fn balanced_stats_pass() {
+        let s = UploadStats {
+            staged: 5,
+            uploaded: 4,
+            overlapped: 2,
+            stage_seconds: 0.1,
+            upload_seconds: 0.2,
+            stall_seconds: 0.0,
+        };
+        assert_upload_stats_sane(&s);
+        assert_upload_stats_sane(&UploadStats::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "never staged")]
+    fn upload_without_stage_is_caught() {
+        assert_upload_stats_sane(&UploadStats {
+            staged: 1,
+            uploaded: 2,
+            ..UploadStats::default()
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "double-buffer depth")]
+    fn runaway_stager_is_caught() {
+        assert_upload_stats_sane(&UploadStats {
+            staged: 7,
+            uploaded: 3,
+            ..UploadStats::default()
+        });
+    }
+
+    #[test]
+    fn spot_identical_is_bitwise() {
+        assert_spot_identical(0.1 + 0.2, 0.1 + 0.2, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "shard reduction mismatch")]
+    fn one_ulp_reduction_drift_is_caught() {
+        let v = 0.1 + 0.2;
+        assert_spot_identical(v, f64::from_bits(v.to_bits() + 1), 3);
+    }
+}

@@ -44,6 +44,12 @@
 //! assert!(fit.lambdas.len() > 1);
 //! ```
 
+// `unsafe` hygiene: the only unsafe in the crate is the bounds-check
+// elision in `linalg/{blas,dense,sparse}.rs`; every block carries a
+// `// SAFETY:` comment (enforced by `cargo run -p xtask -- lint`) and
+// any future `unsafe fn` must spell out its internal unsafety.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod cli;
 pub mod coordinator;
 pub mod cv;
@@ -51,6 +57,8 @@ pub mod data;
 pub mod error;
 pub mod experiments;
 pub mod hessian;
+#[cfg(feature = "paranoid")]
+pub mod invariants;
 pub mod linalg;
 pub mod loss;
 pub mod metrics;

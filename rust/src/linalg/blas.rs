@@ -20,10 +20,12 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     let n = x.len();
     let chunks = n / 8;
     let mut acc = [0.0f64; 8];
-    // Safety: indices bounded by chunks*8 <= n.
     for i in 0..chunks {
         let b = i * 8;
         for (k, a) in acc.iter_mut().enumerate() {
+            // SAFETY: b + k <= (chunks-1)*8 + 7 < chunks*8 <= n = x.len(),
+            // and y.len() == x.len() (debug_assert above; all callers pass
+            // equal-length slices).
             unsafe {
                 *a += x.get_unchecked(b + k) * y.get_unchecked(b + k);
             }
@@ -47,6 +49,8 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     let chunks = n / 4;
     for i in 0..chunks {
         let b = i * 4;
+        // SAFETY: b + 3 <= (chunks-1)*4 + 3 < chunks*4 <= n = x.len() ==
+        // y.len() (debug_assert above).
         unsafe {
             *y.get_unchecked_mut(b) += alpha * x.get_unchecked(b);
             *y.get_unchecked_mut(b + 1) += alpha * x.get_unchecked(b + 1);
@@ -68,6 +72,8 @@ pub fn dot2(x: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
     let n = x.len();
     let (mut s0, mut s1) = (0.0, 0.0);
     for i in 0..n {
+        // SAFETY: i < n = x.len(), and a.len() == b.len() == x.len()
+        // (debug_asserts above).
         unsafe {
             let xi = *x.get_unchecked(i);
             s0 += xi * a.get_unchecked(i);
@@ -84,6 +90,8 @@ pub fn dot_w(x: &[f64], y: &[f64], w: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), w.len());
     let mut s = 0.0;
     for i in 0..x.len() {
+        // SAFETY: i < x.len(), and y.len() == w.len() == x.len()
+        // (debug_asserts above).
         unsafe {
             s += w.get_unchecked(i) * x.get_unchecked(i) * y.get_unchecked(i);
         }

@@ -67,12 +67,16 @@ impl DenseMatrix {
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.nrows && j < self.ncols);
+        // SAFETY: i < nrows and j < ncols (debug_assert; callers index by
+        // matrix shape), so j*nrows + i <= (ncols-1)*nrows + nrows-1 <
+        // nrows*ncols = data.len() (constructors enforce the length).
         unsafe { *self.data.get_unchecked(j * self.nrows + i) }
     }
 
     #[inline]
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
         debug_assert!(i < self.nrows && j < self.ncols);
+        // SAFETY: same bound as `at`: j*nrows + i < nrows*ncols = data.len().
         unsafe { self.data.get_unchecked_mut(j * self.nrows + i) }
     }
 

@@ -82,7 +82,7 @@ impl SymEigen {
         // Collect and sort ascending, permuting eigenvectors along.
         let mut order: Vec<usize> = (0..n).collect();
         let vals: Vec<f64> = (0..n).map(|i| m.at(i, i)).collect();
-        order.sort_by(|&i, &j| vals[i].partial_cmp(&vals[j]).unwrap());
+        order.sort_by(|&i, &j| vals[i].total_cmp(&vals[j]));
         let values: Vec<f64> = order.iter().map(|&i| vals[i]).collect();
         let mut vectors = DenseMatrix::zeros(n, n);
         for (jj, &j) in order.iter().enumerate() {

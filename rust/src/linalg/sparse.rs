@@ -118,6 +118,9 @@ impl Design for CscMatrix {
         let (ri, vals) = self.col(j);
         let mut s = 0.0;
         for (&i, &x) in ri.iter().zip(vals) {
+            // SAFETY: `from_triplets` (the only constructor) asserts every
+            // row index < nrows, and the Design contract gives
+            // v.len() == nrows, so i as usize < v.len().
             s += x * unsafe { *v.get_unchecked(i as usize) };
         }
         s
@@ -130,6 +133,8 @@ impl Design for CscMatrix {
         }
         let (ri, vals) = self.col(j);
         for (&i, &x) in ri.iter().zip(vals) {
+            // SAFETY: row indices < nrows by the `from_triplets` CSC
+            // invariant and v.len() == nrows (Design contract).
             unsafe {
                 *v.get_unchecked_mut(i as usize) += alpha * x;
             }

@@ -320,7 +320,7 @@ impl PathFitter {
         let mut c_full: Vec<f64> = (0..p).map(|j| design.col_dot(j, &state.resid)).collect();
         let lambda_max = blas::amax(&c_full);
         let argmax_col = (0..p)
-            .max_by(|&a, &b| c_full[a].abs().partial_cmp(&c_full[b].abs()).unwrap())
+            .max_by(|&a, &b| c_full[a].abs().total_cmp(&c_full[b].abs()))
             .unwrap_or(0);
 
         let lambdas = match &s.lambda_path {
@@ -542,7 +542,7 @@ impl PathFitter {
                         .filter(|&&j| !w_set.contains(j))
                         .map(|&j| (ws_priority(c_full[j] / scale, col_norms[j]), j))
                         .collect();
-                    cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    cand.sort_by(|a, b| a.0.total_cmp(&b.0));
                     for (_, j) in cand.into_iter().take(target.saturating_sub(w_set.len())) {
                         w_set.insert(j);
                     }
@@ -908,7 +908,7 @@ impl PathFitter {
                             .filter(|&j| state.beta[j] == 0.0)
                             .map(|j| (ws_priority(c_full[j] / scale, col_norms[j]), j))
                             .collect();
-                        cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                        cand.sort_by(|a, b| a.0.total_cmp(&b.0));
                         w_set.clear();
                         for j in active_now {
                             w_set.insert(j);
@@ -931,6 +931,26 @@ impl PathFitter {
             st.active = active.len();
             for &j in &active {
                 ever_active.insert(j);
+            }
+
+            // Paranoid: re-derive the full correlation vector at the
+            // accepted iterate and check every screened-out predictor
+            // against the Gap-Safe ball bound (`crate::invariants`). A
+            // violation means an active predictor was wrongly discarded.
+            // Gated on losses with a valid gap-safe dual ball.
+            #[cfg(feature = "paranoid")]
+            if gap_safe_ok {
+                let c_chk: Vec<f64> = (0..p).map(|j| design.col_dot(j, &state.resid)).collect();
+                let xt_chk = blas::amax(&c_chk);
+                let gap_chk =
+                    loss.duality_gap(y, &state.eta, &state.resid, xt_chk, ln, state.l1_norm());
+                crate::invariants::assert_screened_sound(
+                    &c_chk,
+                    &col_norms,
+                    &w_set.member,
+                    ln,
+                    gap_chk,
+                );
             }
 
             // Update H / H⁻¹ (Algorithm 1) for the next step.

@@ -11,6 +11,8 @@
 //! serial loop — threading is a pure wall-clock knob, never a
 //! numerics knob.
 
+#![forbid(unsafe_code)]
+
 use super::{Backend, DesignRepr, KktBatch, RegisteredDesign};
 use crate::error::Result;
 use crate::linalg::blas;

@@ -41,17 +41,65 @@
 //! ownership of their slices, so peak transient footprint is
 //! ≈ np·(2 + 2/k) f64 — see README "Sharded designs".
 
+#![forbid(unsafe_code)]
+
 use super::{Backend, DesignRepr, KktBatch, NativeBackend, RegisteredDesign};
 use crate::error::Result;
 use crate::linalg::blas;
 use crate::loss::Loss;
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::time::Instant;
 
 /// ⌈a/b⌉ (usize::div_ceil needs Rust 1.73; MSRV is 1.70).
 fn div_ceil(a: usize, b: usize) -> usize {
     a / b + usize::from(a % b != 0)
+}
+
+/// Lock a mutex, recovering from poisoning. Every mutex in this module
+/// guards plain bookkeeping (counters, slot states, a join handle)
+/// that stays consistent even if a holder panicked mid-update.
+/// Recovering matters for liveness: if a stager panic poisoned the
+/// stats lock and the uploader then panicked on `lock().unwrap()`, the
+/// trailing fail-loop would never run, slots would stay `Pending`, and
+/// every sweep waiter would hang forever.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Best-effort panic payload → message, for surfacing a stager panic
+/// in the slot failure handed to sweep waiters.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Diagnostics/test hook run by the stager thread right before it
+/// stages pipelined panel `k` (shard 0 is staged synchronously by
+/// `register_design` and never sees the hook). Used to inject delays
+/// (stall bookkeeping tests, `HX_STAGE_DELAY_MS`) and failures
+/// (stager-panic tests).
+pub type StageHook = Arc<dyn Fn(usize) + Send + Sync>;
+
+/// A hook that sleeps `ms` per panel — the slow-stager injection
+/// behind `HX_STAGE_DELAY_MS`.
+fn delay_hook(ms: u64) -> StageHook {
+    Arc::new(move |_k| std::thread::sleep(std::time::Duration::from_millis(ms)))
+}
+
+/// `HX_STAGE_DELAY_MS=<ms>` injects a slow stager into every upload
+/// pipeline of sharded backends constructed afterwards.
+fn stage_hook_from_env() -> Option<StageHook> {
+    std::env::var("HX_STAGE_DELAY_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .map(delay_hook)
 }
 
 /// Pipeline counters for the double-buffered shard upload path.
@@ -108,16 +156,17 @@ impl ShardSlot {
     }
 
     fn fulfill(&self, reg: RegisteredDesign) {
-        // The cell is set before the state flips, under the same
-        // mutex the readers take: a `Ready` observation implies the
-        // cell is populated.
+        // The cell is populated before the state flips to `Ready`, and
+        // readers only observe the state under the mutex — the
+        // release/acquire pairing on the state lock makes the cell
+        // write visible to every reader that sees `Ready`.
         let _ = self.cell.set(reg);
-        *self.state.lock().unwrap() = SlotState::Ready;
+        *lock_ignore_poison(&self.state) = SlotState::Ready;
         self.ready.notify_all();
     }
 
     fn fail(&self, msg: String) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_ignore_poison(&self.state);
         if matches!(*st, SlotState::Pending) {
             *st = SlotState::Failed(msg);
         }
@@ -127,9 +176,9 @@ impl ShardSlot {
 
     /// Block until the shard's upload lands (or failed).
     fn wait(&self) -> Result<&RegisteredDesign> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_ignore_poison(&self.state);
         while matches!(*st, SlotState::Pending) {
-            st = self.ready.wait(st).unwrap();
+            st = self.ready.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         match &*st {
             SlotState::Ready => Ok(self.cell.get().expect("ready slot holds a design")),
@@ -151,7 +200,7 @@ pub(crate) struct ShardedRepr {
 
 impl Drop for ShardedRepr {
     fn drop(&mut self) {
-        if let Some(h) = self.uploader.lock().unwrap().take() {
+        if let Some(h) = lock_ignore_poison(&self.uploader).take() {
             let _ = h.join();
         }
     }
@@ -163,6 +212,9 @@ impl Drop for ShardedRepr {
 pub struct ShardedBackend {
     engines: Arc<Vec<Box<dyn Backend>>>,
     stats: Arc<Mutex<UploadStats>>,
+    /// Optional stager-thread hook (delay/failure injection); seeded
+    /// from `HX_STAGE_DELAY_MS` at construction.
+    stage_hook: Option<StageHook>,
 }
 
 impl ShardedBackend {
@@ -187,7 +239,16 @@ impl ShardedBackend {
         Self {
             engines: Arc::new(engines),
             stats: Arc::new(Mutex::new(UploadStats::default())),
+            stage_hook: stage_hook_from_env(),
         }
+    }
+
+    /// Replace the stager hook (tests: delay and panic injection). The
+    /// hook runs in the stager thread right before each pipelined
+    /// panel is staged.
+    pub fn with_stage_hook(mut self, hook: StageHook) -> Self {
+        self.stage_hook = Some(hook);
+        self
     }
 
     fn repr<'d>(design: &'d RegisteredDesign) -> Result<&'d ShardedRepr> {
@@ -235,6 +296,34 @@ impl ShardedBackend {
         }
         Ok(Some(vals))
     }
+
+    /// Paranoid spot check: recompute up to 8 evenly spaced entries of
+    /// a merged correlation vector with a serial `blas::dot` on the
+    /// resident shard panels and demand bitwise equality. Shards whose
+    /// inner engine keeps no host-side column copy (non-`Native`
+    /// representations) are skipped.
+    #[cfg(feature = "paranoid")]
+    fn spot_check_correlation(&self, rep: &ShardedRepr, c: &[f64], r: &[f64], p: usize) {
+        let bounds = shard_bounds(p, self.engines.len());
+        let n = r.len();
+        let step = (p / 8).max(1);
+        let mut j = 0;
+        while j < p {
+            let (k, s) = bounds
+                .iter()
+                .enumerate()
+                .find(|&(_, &(s, e))| s <= j && j < e)
+                .map(|(k, &(s, _))| (k, s))
+                .expect("shard bounds cover 0..p");
+            if let Ok(reg) = rep.slots[k].wait() {
+                if let DesignRepr::Native(data) = &reg.repr {
+                    let serial = blas::dot(&data[(j - s) * n..(j - s + 1) * n], r);
+                    crate::invariants::assert_spot_identical(c[j], serial, j);
+                }
+            }
+            j += step;
+        }
+    }
 }
 
 /// The stager half of the upload pipeline: slices contiguous column
@@ -250,6 +339,7 @@ fn upload_pipeline(
     engines: Arc<Vec<Box<dyn Backend>>>,
     slots: Arc<Vec<ShardSlot>>,
     stats: Arc<Mutex<UploadStats>>,
+    hook: Option<StageHook>,
 ) {
     let (tx, rx) = mpsc::sync_channel::<(usize, usize, Vec<f64>)>(1);
     let stager = {
@@ -258,11 +348,14 @@ fn upload_pipeline(
         let work = work.clone();
         std::thread::spawn(move || {
             for (k, c0, c1) in work {
+                if let Some(h) = &hook {
+                    h(k);
+                }
                 let t = Instant::now();
                 let panel = src[c0 * n - base..c1 * n - base].to_vec();
                 let secs = t.elapsed().as_secs_f64();
                 {
-                    let mut st = stats.lock().unwrap();
+                    let mut st = lock_ignore_poison(&stats);
                     st.staged += 1;
                     st.stage_seconds += secs;
                 }
@@ -279,14 +372,14 @@ fn upload_pipeline(
         // stall is timed.
         let (k, width, panel) = match rx.try_recv() {
             Ok(v) => {
-                stats.lock().unwrap().overlapped += 1;
+                lock_ignore_poison(&stats).overlapped += 1;
                 v
             }
             Err(mpsc::TryRecvError::Empty) => {
                 let t = Instant::now();
                 match rx.recv() {
                     Ok(v) => {
-                        stats.lock().unwrap().stall_seconds += t.elapsed().as_secs_f64();
+                        lock_ignore_poison(&stats).stall_seconds += t.elapsed().as_secs_f64();
                         v
                     }
                     Err(_) => break,
@@ -299,7 +392,7 @@ fn upload_pipeline(
             Ok(reg) => {
                 let secs = t.elapsed().as_secs_f64();
                 {
-                    let mut st = stats.lock().unwrap();
+                    let mut st = lock_ignore_poison(&stats);
                     st.uploaded += 1;
                     st.upload_seconds += secs;
                 }
@@ -308,11 +401,26 @@ fn upload_pipeline(
             Err(e) => slots[k].fail(e.to_string()),
         }
     }
-    let _ = stager.join();
-    // Any slot left pending (stager or channel died early) must still
-    // release its waiters.
+    // A dead stager (panic in a hook or in staging itself) must
+    // surface as a per-shard `Err` to sweep waiters — never an
+    // unwrap-abort in this thread, and never a hang: fail every slot
+    // still pending (fulfilled slots ignore `fail`).
+    let leftover = match stager.join() {
+        Ok(()) => "upload pipeline exited early".to_string(),
+        Err(payload) => format!("stager panicked: {}", panic_message(payload)),
+    };
     for slot in slots.iter() {
-        slot.fail("upload pipeline exited early".to_string());
+        slot.fail(leftover.clone());
+    }
+    // Paranoid: the whole point of the fail-loop above is that no
+    // waiter can be left blocking on a Pending slot once the pipeline
+    // thread exits.
+    #[cfg(feature = "paranoid")]
+    for (i, slot) in slots.iter().enumerate() {
+        assert!(
+            !matches!(*lock_ignore_poison(&slot.state), SlotState::Pending),
+            "shard slot {i} still pending after pipeline exit"
+        );
     }
 }
 
@@ -334,7 +442,10 @@ impl Backend for ShardedBackend {
     }
 
     fn upload_stats(&self) -> Option<UploadStats> {
-        Some(self.stats.lock().unwrap().clone())
+        let stats = lock_ignore_poison(&self.stats).clone();
+        #[cfg(feature = "paranoid")]
+        crate::invariants::assert_upload_stats_sane(&stats);
+        Some(stats)
     }
 
     fn supports_sweep(&self, loss: Loss, n: usize, p: usize) -> bool {
@@ -375,7 +486,7 @@ impl Backend for ShardedBackend {
         let t = Instant::now();
         let reg0 = self.engines[0].register_design(&panel0, n, e0 - s0)?;
         {
-            let mut st = self.stats.lock().unwrap();
+            let mut st = lock_ignore_poison(&self.stats);
             st.staged += 1;
             st.stage_seconds += stage0;
             st.uploaded += 1;
@@ -396,9 +507,10 @@ impl Backend for ShardedBackend {
             let engines = Arc::clone(&self.engines);
             let slots = Arc::clone(&slots);
             let stats = Arc::clone(&self.stats);
+            let hook = self.stage_hook.clone();
             let base = e0 * n;
             Some(std::thread::spawn(move || {
-                upload_pipeline(src, base, n, work, engines, slots, stats);
+                upload_pipeline(src, base, n, work, engines, slots, stats, hook);
             }))
         } else {
             None
@@ -418,7 +530,17 @@ impl Backend for ShardedBackend {
     fn correlation(&self, design: &RegisteredDesign, r: &[f64]) -> Result<Option<Vec<f64>>> {
         let rep = Self::repr(design)?;
         let parts = self.shard_map(rep, |i, reg| self.engines[i].correlation(reg, r))?;
-        Ok(parts.map(|ps| ps.into_iter().flatten().collect()))
+        let merged = parts.map(|ps| ps.into_iter().flatten().collect::<Vec<f64>>());
+        // Paranoid: sampled entries of the merged vector must be
+        // *bit-identical* to a serial recompute on the resident shard
+        // panels — every entry is produced by the same per-column
+        // `blas::dot`, so any drift means the shard offsets or the
+        // concatenation order broke.
+        #[cfg(feature = "paranoid")]
+        if let Some(c) = merged.as_deref() {
+            self.spot_check_correlation(rep, c, r, design.p);
+        }
+        Ok(merged)
     }
 
     fn kkt_sweep(
@@ -643,6 +765,63 @@ mod tests {
         let u = b.upload_stats().unwrap();
         assert_eq!(u.staged, 8);
         assert_eq!(u.uploaded, 8);
+    }
+
+    #[test]
+    fn stager_panic_surfaces_as_error_not_hang() {
+        let (n, p) = (15, 32);
+        let (dense, y) = dense_problem(n, p, 5);
+        // The hook panics before staging pipelined panel 2: shards 0
+        // (synchronous) and 1 become resident, shards 2 and 3 must
+        // fail with the panic message — and a sweep must return that
+        // error instead of blocking forever on a pending slot.
+        let b = ShardedBackend::native(4, 1).with_stage_hook(Arc::new(|k| {
+            if k == 2 {
+                panic!("injected stager panic");
+            }
+        }));
+        let reg = b.register_design(dense.data(), n, p).unwrap();
+        let err = b.correlation(&reg, &y).unwrap_err().to_string();
+        assert!(err.contains("stager panicked"), "{err}");
+        assert!(err.contains("injected stager panic"), "{err}");
+        // The resident shards stayed balanced: shard 0 and panel 1
+        // staged and uploaded, panels 2 and 3 never staged.
+        let u = b.upload_stats().unwrap();
+        assert_eq!(u.staged, 2);
+        assert_eq!(u.uploaded, 2);
+    }
+
+    #[test]
+    fn slow_stager_stalls_are_counted_and_balanced() {
+        let (n, p) = (20, 44);
+        let (dense, y) = dense_problem(n, p, 9);
+        // 4 shards with a 25 ms injected stage delay per pipelined
+        // panel: the uploader must record stall time (staging is the
+        // bottleneck by construction) while the counters stay balanced
+        // once the design is fully resident.
+        let b = ShardedBackend::native(4, 1).with_stage_hook(delay_hook(25));
+        let reg = b.register_design(dense.data(), n, p).unwrap();
+        let _ = b.correlation(&reg, &y).unwrap().unwrap();
+        let u = b.upload_stats().unwrap();
+        assert_eq!(u.staged, 4);
+        assert_eq!(u.uploaded, 4);
+        assert!(u.overlapped <= u.uploaded);
+        assert!(
+            u.stall_seconds > 0.0,
+            "a 25 ms stage delay must stall the uploader"
+        );
+
+        // 1 shard: no pipeline, so the hook never runs (it would
+        // panic) and nothing can overlap or stall.
+        let b1 = ShardedBackend::native(1, 1)
+            .with_stage_hook(Arc::new(|_| panic!("hook must not run without a pipeline")));
+        let reg1 = b1.register_design(dense.data(), n, p).unwrap();
+        let _ = b1.correlation(&reg1, &y).unwrap().unwrap();
+        let u1 = b1.upload_stats().unwrap();
+        assert_eq!(u1.staged, 1);
+        assert_eq!(u1.uploaded, 1);
+        assert_eq!(u1.overlapped, 0);
+        assert_eq!(u1.stall_seconds, 0.0);
     }
 
     #[test]

@@ -23,6 +23,8 @@
 //! * working sets / Celer / Blitz are *strategies* layered on these
 //!   estimates and live in the path driver (`crate::path`).
 
+#![forbid(unsafe_code)]
+
 use crate::linalg::Design;
 
 /// Which screening strategy a path fit uses. `Working` is the paper's

@@ -19,6 +19,8 @@
 //! the local quadratic model followed by a backtracking line search on
 //! the true objective (the "line search algorithm used in Blitz").
 
+#![forbid(unsafe_code)]
+
 use crate::linalg::blas::{self, soft_threshold};
 use crate::linalg::Design;
 use crate::loss::Loss;

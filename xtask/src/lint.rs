@@ -1,0 +1,693 @@
+//! The project-invariant linter.
+//!
+//! Parses the crate's own sources with a light lexical pass — comment
+//! and string-literal *contents* are masked to spaces (preserving line
+//! structure), `#[cfg(test)]` item regions are tracked by brace
+//! balance — and enforces the repo invariants as hard failures:
+//!
+//! * `safety-comment` — every `unsafe` token carries a `// SAFETY:`
+//!   comment on the same line or within the three lines above it.
+//! * `no-f32` — no `f32` token in `hessian/`, `screening/`, `solver/`
+//!   or `runtime/shard.rs`: the screening math and the Gram/Hessian
+//!   panels are f64-exact by contract (`Backend::is_exact`), and a
+//!   stray cast would corrupt the path silently.
+//! * `no-unwrap` — no `.unwrap()` in library code outside tests and
+//!   `cli.rs`/`main.rs`, unless the line (or the line above) carries
+//!   an `// INVARIANT:` justification (the lock-poison policy).
+//! * `no-raw-spawn` — no `std::thread::spawn` outside
+//!   `runtime/shard.rs` and `coordinator/`: everything else uses
+//!   scoped threads so no worker can outlive its data.
+//! * `no-kernel-clock` — no `Instant::now()` in the per-column kernel
+//!   files (`linalg/`, `runtime/native.rs`): timing belongs in the
+//!   drivers, never in inner loops.
+//!
+//! Each rule has its own allowlist file under `xtask/lint/allow/`
+//! (entries are `<path>` or `<path>:<line>` relative to `rust/src`;
+//! `#` starts a comment). Unused entries are reported as warnings so
+//! stale suppressions cannot accumulate. The lexer does not handle
+//! raw string literals (`r"…"`, `r#"…"#`) — the crate does not use
+//! them, and the `real-tree` unit test would flag the fallout if one
+//! ever confused the masker.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Directories (trailing `/`) or exact files where `f32` is forbidden.
+const F32_FORBIDDEN: &[&str] = &["hessian/", "screening/", "solver/", "runtime/shard.rs"];
+/// The only homes of raw `std::thread::spawn` (the upload pipeline and
+/// the experiment pool); everything else must use `thread::scope`.
+const SPAWN_ALLOWED: &[&str] = &["runtime/shard.rs", "coordinator/"];
+/// Per-column kernel files: no wall-clock reads in inner loops.
+const KERNEL_FILES: &[&str] = &["linalg/", "runtime/native.rs"];
+/// Binary/CLI surfaces where `.unwrap()` on user input is acceptable.
+const UNWRAP_EXEMPT: &[&str] = &["cli.rs", "main.rs"];
+
+/// How far above an `unsafe` token a `// SAFETY:` comment may sit.
+const SAFETY_LOOKBACK: usize = 3;
+
+pub const RULE_IDS: &[&str] = &[
+    "safety-comment",
+    "no-f32",
+    "no-unwrap",
+    "no-raw-spawn",
+    "no-kernel-clock",
+];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    /// Path relative to the scanned source root (unix separators).
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub msg: String,
+}
+
+/// One source file, pre-lexed for the rules.
+struct FileView {
+    rel: String,
+    raw_lines: Vec<String>,
+    masked_lines: Vec<String>,
+    in_test: Vec<bool>,
+}
+
+impl FileView {
+    fn new(rel: &str, text: &str) -> Self {
+        let masked = mask_comments_and_strings(text);
+        let raw_lines: Vec<String> = text.lines().map(str::to_string).collect();
+        let masked_lines: Vec<String> = masked.lines().map(str::to_string).collect();
+        let in_test = test_regions(&masked_lines);
+        Self {
+            rel: rel.to_string(),
+            raw_lines,
+            masked_lines,
+            in_test,
+        }
+    }
+
+    fn violation(&self, rule: &'static str, idx: usize, msg: impl Into<String>) -> Violation {
+        Violation {
+            rule,
+            path: self.rel.clone(),
+            line: idx + 1,
+            msg: msg.into(),
+        }
+    }
+}
+
+/// Replace comment bodies and string/char-literal contents with
+/// spaces, preserving newlines (and therefore line numbers), so token
+/// rules cannot be fooled by prose or literals. Comment markers are
+/// erased along with their text; rules that *want* comments (SAFETY,
+/// INVARIANT) read the raw lines instead.
+fn mask_comments_and_strings(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = b.clone();
+    let n = b.len();
+    let mut i = 0;
+    while i < n {
+        match b[i] {
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                while i < n && b[i] != '\n' {
+                    out[i] = ' ';
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                let mut depth = 1usize;
+                out[i] = ' ';
+                out[i + 1] = ' ';
+                i += 2;
+                while i < n && depth > 0 {
+                    if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                        depth += 1;
+                        out[i] = ' ';
+                        out[i + 1] = ' ';
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                        depth -= 1;
+                        out[i] = ' ';
+                        out[i + 1] = ' ';
+                        i += 2;
+                    } else {
+                        if b[i] != '\n' {
+                            out[i] = ' ';
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            '"' => {
+                i += 1;
+                while i < n {
+                    if b[i] == '\\' {
+                        out[i] = ' ';
+                        if i + 1 < n && b[i + 1] != '\n' {
+                            out[i + 1] = ' ';
+                        }
+                        i += 2;
+                    } else if b[i] == '"' {
+                        i += 1;
+                        break;
+                    } else {
+                        if b[i] != '\n' {
+                            out[i] = ' ';
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            '\'' => {
+                // Char literal ('x', '\n') vs. lifetime ('a): a
+                // literal closes with a quote nearby; a lifetime never
+                // does on the same token.
+                if i + 2 < n && (b[i + 1] == '\\' || b[i + 2] == '\'') {
+                    let mut j = i + 1;
+                    while j < n && b[j] != '\'' {
+                        if b[j] == '\\' && j + 1 < n {
+                            out[j] = ' ';
+                            out[j + 1] = ' ';
+                            j += 2;
+                        } else {
+                            out[j] = ' ';
+                            j += 1;
+                        }
+                    }
+                    i = j + 1;
+                } else {
+                    i += 1;
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    out.into_iter().collect()
+}
+
+/// Mark every line covered by a `#[cfg(test)]`-annotated item: from
+/// the attribute line through the end of the following brace-balanced
+/// block (computed on the masked text, so braces in strings/comments
+/// do not skew the balance).
+fn test_regions(masked_lines: &[String]) -> Vec<bool> {
+    let mut in_test = vec![false; masked_lines.len()];
+    let mut i = 0;
+    while i < masked_lines.len() {
+        if !masked_lines[i].contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut started = false;
+        let mut j = i;
+        while j < masked_lines.len() {
+            for ch in masked_lines[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if started && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        let end = j.min(masked_lines.len().saturating_sub(1));
+        for flag in in_test.iter_mut().take(end + 1).skip(i) {
+            *flag = true;
+        }
+        i = end + 1;
+    }
+    in_test
+}
+
+fn is_ident_char(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Word-boundary token search (ASCII `word`, e.g. `unsafe`, `f32`).
+fn has_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let p = start + pos;
+        let before_ok = p == 0 || !is_ident_char(bytes[p - 1]);
+        let after = p + word.len();
+        let after_ok = after >= bytes.len() || !is_ident_char(bytes[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + 1;
+    }
+    false
+}
+
+fn path_matches(rel: &str, patterns: &[&str]) -> bool {
+    patterns
+        .iter()
+        .any(|p| if p.ends_with('/') { rel.starts_with(p) } else { rel == *p })
+}
+
+fn rule_safety(f: &FileView, out: &mut Vec<Violation>) {
+    for (idx, ml) in f.masked_lines.iter().enumerate() {
+        if !has_word(ml, "unsafe") {
+            continue;
+        }
+        let lo = idx.saturating_sub(SAFETY_LOOKBACK);
+        let covered = f.raw_lines[lo..=idx].iter().any(|l| l.contains("SAFETY:"));
+        if !covered {
+            out.push(f.violation(
+                "safety-comment",
+                idx,
+                "`unsafe` without a `// SAFETY:` comment on the line or within 3 lines above",
+            ));
+        }
+    }
+}
+
+fn rule_f32(f: &FileView, out: &mut Vec<Violation>) {
+    if !path_matches(&f.rel, F32_FORBIDDEN) {
+        return;
+    }
+    for (idx, ml) in f.masked_lines.iter().enumerate() {
+        if has_word(ml, "f32") {
+            out.push(f.violation(
+                "no-f32",
+                idx,
+                "`f32` in an f64-exact module (is_exact contract: screening/Hessian math \
+                 never runs in single precision)",
+            ));
+        }
+    }
+}
+
+fn rule_unwrap(f: &FileView, out: &mut Vec<Violation>) {
+    if UNWRAP_EXEMPT.iter().any(|e| f.rel == *e) {
+        return;
+    }
+    for (idx, ml) in f.masked_lines.iter().enumerate() {
+        if f.in_test[idx] || !ml.contains(".unwrap()") {
+            continue;
+        }
+        let prev = if idx > 0 { f.raw_lines[idx - 1].as_str() } else { "" };
+        if f.raw_lines[idx].contains("INVARIANT:") || prev.contains("INVARIANT:") {
+            continue;
+        }
+        out.push(f.violation(
+            "no-unwrap",
+            idx,
+            "`.unwrap()` in library code — use `expect` with an invariant message, propagate \
+             via crate::error, or justify with an `// INVARIANT:` comment",
+        ));
+    }
+}
+
+fn rule_spawn(f: &FileView, out: &mut Vec<Violation>) {
+    if path_matches(&f.rel, SPAWN_ALLOWED) {
+        return;
+    }
+    for (idx, ml) in f.masked_lines.iter().enumerate() {
+        if f.in_test[idx] {
+            continue;
+        }
+        if ml.contains("thread::spawn") {
+            out.push(f.violation(
+                "no-raw-spawn",
+                idx,
+                "raw `thread::spawn` outside runtime/shard.rs and coordinator/ — use \
+                 `std::thread::scope` so workers cannot outlive their data",
+            ));
+        }
+    }
+}
+
+fn rule_kernel_clock(f: &FileView, out: &mut Vec<Violation>) {
+    if !path_matches(&f.rel, KERNEL_FILES) {
+        return;
+    }
+    for (idx, ml) in f.masked_lines.iter().enumerate() {
+        if f.in_test[idx] {
+            continue;
+        }
+        if ml.contains("Instant::now") {
+            out.push(f.violation(
+                "no-kernel-clock",
+                idx,
+                "`Instant::now()` in a per-column kernel file — time in the drivers \
+                 (path/, runtime/shard.rs), never inside inner loops",
+            ));
+        }
+    }
+}
+
+/// Run every rule over `(relative_path, contents)` pairs. Pure — this
+/// is the seam the unit tests drive with fixture snippets.
+fn check_files(files: &[(String, String)]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (rel, text) in files {
+        let f = FileView::new(rel, text);
+        rule_safety(&f, &mut out);
+        rule_f32(&f, &mut out);
+        rule_unwrap(&f, &mut out);
+        rule_spawn(&f, &mut out);
+        rule_kernel_clock(&f, &mut out);
+    }
+    out
+}
+
+/// One rule's allowlist: entries are `<path>` (whole file) or
+/// `<path>:<line>`, relative to the source root.
+struct Allowlist {
+    entries: Vec<(String, Option<usize>)>,
+    used: Vec<bool>,
+}
+
+impl Allowlist {
+    fn parse(text: &str) -> Self {
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            match line.rsplit_once(':') {
+                Some((path, ln)) if ln.chars().all(|c| c.is_ascii_digit()) && !ln.is_empty() => {
+                    entries.push((path.to_string(), ln.parse().ok()));
+                }
+                _ => entries.push((line.to_string(), None)),
+            }
+        }
+        let used = vec![false; entries.len()];
+        Self { entries, used }
+    }
+
+    fn permits(&mut self, v: &Violation) -> bool {
+        let mut hit = false;
+        for (i, (path, line)) in self.entries.iter().enumerate() {
+            let line_ok = match line {
+                Some(l) => *l == v.line,
+                None => true,
+            };
+            if *path == v.path && line_ok {
+                self.used[i] = true;
+                hit = true;
+            }
+        }
+        hit
+    }
+
+    fn unused(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .zip(&self.used)
+            .filter(|(_, &u)| !u)
+            .map(|((p, l), _)| match l {
+                Some(l) => format!("{p}:{l}"),
+                None => p.clone(),
+            })
+            .collect()
+    }
+}
+
+fn allow_file_name(rule: &str) -> String {
+    format!("{rule}.allow")
+}
+
+fn collect_rs_files(root: &Path) -> std::io::Result<Vec<(String, String)>> {
+    let mut stack = vec![root.to_path_buf()];
+    let mut files = Vec::new();
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .to_string_lossy()
+                    .into_owned();
+                let text = std::fs::read_to_string(&path)?;
+                files.push((rel, text));
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+fn workspace_root() -> PathBuf {
+    // CARGO_MANIFEST_DIR is <workspace>/xtask at compile time; the
+    // parent is the workspace root regardless of the invocation cwd.
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+pub fn run(args: &[String]) -> ExitCode {
+    let root = workspace_root();
+    let mut src_root = root.join("rust").join("src");
+    let mut allow_dir = root.join("xtask").join("lint").join("allow");
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(v) => src_root = PathBuf::from(v),
+                None => {
+                    eprintln!("lint: --root needs a value");
+                    return ExitCode::from(2);
+                }
+            },
+            "--allow-dir" => match it.next() {
+                Some(v) => allow_dir = PathBuf::from(v),
+                None => {
+                    eprintln!("lint: --allow-dir needs a value");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("lint: unknown flag `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let files = match collect_rs_files(&src_root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("lint: cannot read {}: {e}", src_root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    let violations = check_files(&files);
+
+    let mut allow: Vec<(&str, Allowlist)> = Vec::new();
+    for rule in RULE_IDS {
+        let path = allow_dir.join(allow_file_name(rule));
+        let text = std::fs::read_to_string(&path).unwrap_or_default();
+        allow.push((rule, Allowlist::parse(&text)));
+    }
+
+    let mut reported = 0usize;
+    for v in &violations {
+        let permitted = allow
+            .iter_mut()
+            .find(|(rule, _)| *rule == v.rule)
+            .is_some_and(|(_, list)| list.permits(v));
+        if permitted {
+            continue;
+        }
+        println!("error[{}] rust/src/{}:{}: {}", v.rule, v.path, v.line, v.msg);
+        reported += 1;
+    }
+    for (rule, list) in &allow {
+        for entry in list.unused() {
+            println!("warning[{rule}] unused allowlist entry: {entry}");
+        }
+    }
+    println!(
+        "lint: {} files scanned, {} rules, {} violation(s)",
+        files.len(),
+        RULE_IDS.len(),
+        reported
+    );
+    if reported > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_one(rel: &str, text: &str) -> Vec<Violation> {
+        check_files(&[(rel.to_string(), text.to_string())])
+    }
+
+    fn rules_of(vs: &[Violation]) -> Vec<&'static str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn masking_hides_comments_and_strings_keeps_lines() {
+        let src = "let a = \"unsafe f32\"; // unsafe f32\nlet b = 1;\n";
+        let m = mask_comments_and_strings(src);
+        assert_eq!(m.lines().count(), src.lines().count());
+        assert!(!m.contains("unsafe"));
+        assert!(!m.contains("f32"));
+        assert!(m.contains("let b = 1;"));
+    }
+
+    #[test]
+    fn masking_handles_block_comments_escapes_and_char_literals() {
+        let src = "/* f32\n unsafe */ let c = '\\''; let d = 'x'; let l: &'static str = \"\\\"f32\";\n";
+        let m = mask_comments_and_strings(src);
+        assert!(!m.contains("f32"));
+        assert!(!m.contains("unsafe"));
+        assert!(m.contains("let d ="));
+        assert!(m.contains("&'static str"));
+    }
+
+    #[test]
+    fn test_region_tracking_covers_balanced_blocks() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {\n    }\n}\nfn c() {}\n";
+        let f = FileView::new("x.rs", src);
+        assert_eq!(
+            f.in_test,
+            vec![false, true, true, true, true, true, false]
+        );
+    }
+
+    #[test]
+    fn safety_rule_flags_seeded_violation_and_accepts_comment() {
+        let bad = "fn f(x: &[f64]) -> f64 {\n    unsafe { *x.get_unchecked(0) }\n}\n";
+        let vs = check_one("linalg/blas.rs", bad);
+        assert_eq!(rules_of(&vs), vec!["safety-comment"]);
+        assert_eq!(vs[0].line, 2);
+
+        let good = "fn f(x: &[f64]) -> f64 {\n    // SAFETY: caller guarantees x is non-empty.\n    unsafe { *x.get_unchecked(0) }\n}\n";
+        assert!(check_one("linalg/blas.rs", good).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_must_be_within_lookback_window() {
+        let far = "// SAFETY: too far away.\nfn f(x: &[f64]) -> f64 {\n    let n = x.len();\n    let _ = n;\n    unsafe { *x.get_unchecked(0) }\n}\n";
+        let vs = check_one("linalg/blas.rs", far);
+        assert_eq!(rules_of(&vs), vec!["safety-comment"]);
+    }
+
+    #[test]
+    fn f32_rule_is_scoped_to_the_exact_f64_modules() {
+        let bad = "pub fn g(v: f32) -> f32 { v }\n";
+        assert_eq!(rules_of(&check_one("hessian/mod.rs", bad)), vec!["no-f32"]);
+        assert_eq!(rules_of(&check_one("screening/mod.rs", bad)), vec!["no-f32"]);
+        assert_eq!(rules_of(&check_one("runtime/shard.rs", bad)), vec!["no-f32"]);
+        // pjrt may buffer-convert; the rule does not apply there.
+        assert!(check_one("runtime/pjrt.rs", bad).is_empty());
+        // prose about f32 in a comment is not a token.
+        let doc = "//! Never build H from f32 values.\npub fn ok() {}\n";
+        assert!(check_one("hessian/mod.rs", doc).is_empty());
+    }
+
+    #[test]
+    fn unwrap_rule_honors_tests_exemptions_and_invariant_comments() {
+        let bad = "pub fn f(v: Option<u8>) -> u8 {\n    v.unwrap()\n}\n";
+        let vs = check_one("solver/mod.rs", bad);
+        assert_eq!(rules_of(&vs), vec!["no-unwrap"]);
+        assert_eq!(vs[0].line, 2);
+
+        let invariant = "pub fn f(m: &std::sync::Mutex<u8>) -> u8 {\n    // INVARIANT: lock poisoning aborts via the joined worker.\n    *m.lock().unwrap()\n}\n";
+        assert!(check_one("solver/mod.rs", invariant).is_empty());
+
+        let in_test = "pub fn f() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        Some(1).unwrap();\n    }\n}\n";
+        assert!(check_one("solver/mod.rs", in_test).is_empty());
+
+        assert!(check_one("cli.rs", bad).is_empty());
+        assert!(check_one("main.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn spawn_rule_allows_only_the_pipeline_and_the_coordinator() {
+        let bad = "pub fn f() {\n    std::thread::spawn(|| {});\n}\n";
+        assert_eq!(rules_of(&check_one("path/mod.rs", bad)), vec!["no-raw-spawn"]);
+        assert!(check_one("runtime/shard.rs", bad).is_empty());
+        assert!(check_one("coordinator/mod.rs", bad).is_empty());
+        // Scoped spawns are fine everywhere.
+        let scoped = "pub fn f() {\n    std::thread::scope(|s| {\n        s.spawn(|| {});\n    });\n}\n";
+        assert!(check_one("path/mod.rs", scoped).is_empty());
+    }
+
+    #[test]
+    fn kernel_clock_rule_is_scoped_to_kernel_files() {
+        let bad = "pub fn f() {\n    let _t = std::time::Instant::now();\n}\n";
+        assert_eq!(
+            rules_of(&check_one("linalg/blas.rs", bad)),
+            vec!["no-kernel-clock"]
+        );
+        assert_eq!(
+            rules_of(&check_one("runtime/native.rs", bad)),
+            vec!["no-kernel-clock"]
+        );
+        // Drivers may time freely.
+        assert!(check_one("path/mod.rs", bad).is_empty());
+        assert!(check_one("runtime/shard.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn allowlist_permits_by_file_and_by_line_and_tracks_usage() {
+        let v = Violation {
+            rule: "no-unwrap",
+            path: "solver/mod.rs".to_string(),
+            line: 7,
+            msg: String::new(),
+        };
+        let mut by_file = Allowlist::parse("# comment\nsolver/mod.rs\n");
+        assert!(by_file.permits(&v));
+        assert!(by_file.unused().is_empty());
+
+        let mut by_line = Allowlist::parse("solver/mod.rs:7\n");
+        assert!(by_line.permits(&v));
+
+        let mut wrong_line = Allowlist::parse("solver/mod.rs:8\n");
+        assert!(!wrong_line.permits(&v));
+        assert_eq!(wrong_line.unused(), vec!["solver/mod.rs:8".to_string()]);
+    }
+
+    #[test]
+    fn real_tree_is_lint_clean() {
+        // The linter's strongest test: the actual crate sources must
+        // pass every rule, and the SAFETY/f32 allowlists must be
+        // EMPTY (repo acceptance bar — suppressions are allowed for
+        // no-unwrap only).
+        let root = workspace_root();
+        let files = collect_rs_files(&root.join("rust").join("src")).expect("rust/src readable");
+        assert!(files.len() > 20, "expected the full source tree");
+        let violations = check_files(&files);
+
+        let allow_dir = root.join("xtask").join("lint").join("allow");
+        let mut remaining = Vec::new();
+        for v in &violations {
+            let text =
+                std::fs::read_to_string(allow_dir.join(allow_file_name(v.rule))).unwrap_or_default();
+            if !Allowlist::parse(&text).permits(v) {
+                remaining.push(v.clone());
+            }
+        }
+        assert!(remaining.is_empty(), "lint violations: {remaining:?}");
+
+        for rule in ["safety-comment", "no-f32"] {
+            let text =
+                std::fs::read_to_string(allow_dir.join(allow_file_name(rule))).unwrap_or_default();
+            assert!(
+                Allowlist::parse(&text).entries.is_empty(),
+                "{rule} allowlist must stay empty"
+            );
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! `cargo xtask` — repo automation, following the zero-dependency
+//! "cargo xtask" pattern: build tooling lives in a workspace member so
+//! `cargo run -p xtask -- <task>` works wherever cargo does, with no
+//! external scripts or toolchain beyond the one that builds the crate.
+//!
+//! Tasks:
+//!   lint    the project-invariant linter (see `lint.rs` and the
+//!           README "Correctness tooling" section); wired to
+//!           `make lint` and the blocking CI tier.
+
+mod lint;
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint::run(&args[1..]),
+        Some(other) => {
+            eprintln!("xtask: unknown task `{other}`");
+            usage();
+            ExitCode::from(2)
+        }
+        None => {
+            usage();
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn usage() {
+    eprintln!("usage: cargo run -p xtask -- lint [--root <dir>] [--allow-dir <dir>]");
+    eprintln!();
+    eprintln!("  lint   enforce project invariants over the crate sources");
+    eprintln!("         --root       source tree to scan (default rust/src)");
+    eprintln!("         --allow-dir  allowlist directory (default xtask/lint/allow)");
+}
