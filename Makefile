@@ -14,6 +14,8 @@
 #   make perf-gate       diff $(BENCH_JSON) against $(BENCH_BASELINE)
 #   make check-features  cargo check the feature powerset (pjrt,
 #                        paranoid, none)
+#   make check-oac       out-of-core acceptance: hx pack -> hx fit
+#                        --design end-to-end, truncated file must fail
 #   make lint            the xtask invariant linter (blocking in CI)
 #   make test-paranoid   crate tests with runtime invariant checks
 #   make miri            miri over the concurrency subset (nightly)
@@ -29,7 +31,7 @@ BENCH_JSON ?= BENCH_sweeps.json
 BENCH_BASELINE ?= BENCH_baseline.json
 # The CI bench configuration: quick shape, 2 threads, 2 shards — keep
 # in sync with the records committed to $(BENCH_BASELINE).
-BENCH_FLAGS ?= --quick --threads 2 --shards 2
+BENCH_FLAGS ?= --quick --threads 2 --shards 2 --design
 # Nightly toolchain for the dynamic-analysis targets. CI pins this via
 # NIGHTLY_VERSION (.github/workflows/ci.yml); locally any installed
 # nightly works: `make miri NIGHTLY=nightly-2026-07-15`.
@@ -37,8 +39,8 @@ NIGHTLY ?= nightly
 TSAN_TARGET ?= x86_64-unknown-linux-gnu
 
 .PHONY: all build test test-rust artifacts bench bench-compile bench-ci \
-        perf-gate check-features lint test-paranoid miri tsan ci fmt \
-        clippy clean
+        perf-gate check-features check-oac lint test-paranoid miri tsan \
+        ci fmt clippy clean
 
 all: build
 
@@ -93,6 +95,25 @@ check-features:
 	$(CARGO) check -p hessian-screening --features paranoid
 	$(CARGO) check -p hessian-screening --features "paranoid pjrt"
 
+# Out-of-core acceptance, end-to-end through the real binary: pack a
+# synthetic design to .hxd, fit it streaming with a ragged shard split,
+# then truncate the file and prove the fit fails loudly instead of
+# reading garbage. Blocking in CI (job `oac`).
+check-oac: build
+	tmp=$$(mktemp -d) && trap 'rm -rf "$$tmp"' EXIT; \
+	./target/release/hx pack --out "$$tmp/design.hxd" \
+	    --n 120 --p 601 --s 8 --seed 7 --block-cols 37 && \
+	./target/release/hx fit --design "$$tmp/design.hxd" \
+	    --shards 3 --threads 2 --path-length 20 && \
+	truncate -s -8 "$$tmp/design.hxd" && \
+	if ./target/release/hx fit --design "$$tmp/design.hxd" --shards 2 \
+	    >/dev/null 2>&1; then \
+	    echo "check-oac: FAIL — a truncated .hxd file must be rejected" >&2; \
+	    exit 1; \
+	else \
+	    echo "check-oac: truncated file rejected as expected"; \
+	fi
+
 # Project-invariant linter (xtask/src/lint.rs): SAFETY comments on
 # every unsafe block, no f32 in the f64-exact modules, no naked
 # unwraps in library code, no raw thread::spawn outside the pipeline
@@ -107,14 +128,22 @@ test-paranoid:
 	$(CARGO) test -q -p hessian-screening --features paranoid
 
 # Miri over the curated concurrency subset: the shard upload pipeline,
-# the coordinator pool, and the upload-stats bookkeeping (lib tests
-# only — integration suites are too slow under the interpreter).
+# the coordinator pool, the upload-stats bookkeeping, and the storage
+# layer (lib tests), plus — at HX_TEST_SHAPE=small — the full
+# shard-equivalence and storage-roundtrip integration suites.
 # -Zmiri-disable-isolation: shard.rs reads Instant::now for its stall
-# bookkeeping, which isolation would reject.
+# bookkeeping and the storage tests touch the real filesystem, which
+# isolation would reject.
 miri:
 	MIRIFLAGS="-Zmiri-disable-isolation" \
 	    $(CARGO) +$(NIGHTLY) miri test -p hessian-screening --lib -- \
-	    runtime::shard coordinator:: runtime::tests
+	    runtime::shard coordinator:: runtime::tests storage::
+	HX_TEST_SHAPE=small MIRIFLAGS="-Zmiri-disable-isolation" \
+	    $(CARGO) +$(NIGHTLY) miri test -p hessian-screening \
+	    --test shard_equivalence
+	HX_TEST_SHAPE=small MIRIFLAGS="-Zmiri-disable-isolation" \
+	    $(CARGO) +$(NIGHTLY) miri test -p hessian-screening \
+	    --test storage_roundtrip
 
 # ThreadSanitizer over the threaded suites: lib concurrency tests plus
 # the threads × shards equivalence matrix on shrunk shapes. Needs
@@ -136,7 +165,7 @@ clippy:
 
 # Mirror .github/workflows/ci.yml locally (same targets CI calls; the
 # advisory miri/tsan jobs are opt-in because they need a nightly).
-ci: fmt clippy lint build test-rust bench-compile check-features
+ci: fmt clippy lint build test-rust bench-compile check-features check-oac
 
 clean:
 	$(CARGO) clean

@@ -10,6 +10,9 @@
 //!   --threads T        threaded-kernel worker count (0 = all cores)
 //!   --shards S         also bench the column-sharded backend at S
 //!                      shards (pipelined uploads; 0/absent = skip)
+//!   --design           also bench the out-of-core path: pack the
+//!                      design to a temp .hxd and time the streamed,
+//!                      checksum-verified registration (bytes/s)
 //!   --reps R           timed repetitions per kernel
 //!   --json OUT         write the sweep-suite records to OUT
 //!                      (machine-readable perf trajectory — see
@@ -53,6 +56,9 @@ struct Record {
     /// Column shards the backend splits the design into (1 = unsharded).
     shards: usize,
     batch: usize,
+    /// Where the design bytes live during registration: "resident"
+    /// (host buffer) or "hxd" (streamed from a packed .hxd file).
+    design: &'static str,
     wall_seconds: f64,
     ci_half: f64,
 }
@@ -62,7 +68,7 @@ fn write_json(path: &str, records: &[Record]) {
     for (i, r) in records.iter().enumerate() {
         s.push_str(&format!(
             "  {{\"name\": \"{}\", \"n\": {}, \"p\": {}, \"backend\": \"{}\", \
-             \"threads\": {}, \"shards\": {}, \"batch\": {}, \
+             \"threads\": {}, \"shards\": {}, \"batch\": {}, \"design\": \"{}\", \
              \"wall_seconds\": {:.9}, \"ci_half\": {:.9}}}{}\n",
             r.name,
             r.n,
@@ -71,6 +77,7 @@ fn write_json(path: &str, records: &[Record]) {
             r.threads,
             r.shards,
             r.batch,
+            r.design,
             r.wall_seconds,
             r.ci_half,
             if i + 1 < records.len() { "," } else { "" }
@@ -175,6 +182,7 @@ fn main() {
             threads: t,
             shards: 1,
             batch: 1,
+            design: "resident",
             wall_seconds: s.mean,
             ci_half: s.ci_half,
         });
@@ -192,6 +200,7 @@ fn main() {
             threads: t,
             shards: 1,
             batch: 1,
+            design: "resident",
             wall_seconds: s.mean,
             ci_half: s.ci_half,
         });
@@ -220,6 +229,7 @@ fn main() {
             threads: t,
             shards: 1,
             batch: lookahead,
+            design: "resident",
             wall_seconds: s.mean,
             ci_half: s.ci_half,
         });
@@ -247,6 +257,7 @@ fn main() {
             threads: t,
             shards: 1,
             batch: 1,
+            design: "resident",
             wall_seconds: s.mean,
             ci_half: s.ci_half,
         });
@@ -276,6 +287,7 @@ fn main() {
                 threads: t,
                 shards,
                 batch,
+                design: "resident",
                 wall_seconds: s.mean,
                 ci_half: s.ci_half,
             });
@@ -326,6 +338,54 @@ fn main() {
         }
     }
 
+    // ------------- out-of-core suite (--design, JSON-recorded) -------------
+    // Pack the same design to a temp .hxd, then time the streamed,
+    // checksum-verified registration: disk -> shard panels -> engines,
+    // with the design never resident in one allocation.
+    if args.flag("design") {
+        use hessian_screening::storage::{pack_dense, HxdSource, DEFAULT_BLOCK_COLS};
+        let k = shards.max(2);
+        let path = std::env::temp_dir().join(format!("hxd-bench-{}.hxd", std::process::id()));
+        pack_dense(&path, &dense, DEFAULT_BLOCK_COLS, Loss::Gaussian, None)
+            .expect("packing the bench design");
+        let engine = RuntimeEngine::native_sharded(k, 1);
+        println!(
+            "\nout-of-core suite (n={n}, p={p}, {k} shard(s), {})",
+            path.display()
+        );
+        let s = bench(&format!("register_hxd ({k} shards, streamed)"), reps, || {
+            let src = HxdSource::open(&path).expect("reopening the packed design");
+            let reg = engine.register_source(Box::new(src)).unwrap();
+            // Wait for the pipeline so the timing covers the full upload.
+            let _ = std::hint::black_box(engine.correlation(&reg, &v).unwrap());
+        });
+        records.push(Record {
+            name: "register_hxd",
+            n,
+            p,
+            backend: "sharded",
+            threads: engine.threads(),
+            shards: k,
+            batch: 1,
+            design: "hxd",
+            wall_seconds: s.mean,
+            ci_half: s.ci_half,
+        });
+        if let Some(u) = engine.upload_stats() {
+            // Cumulative across warmup + reps: the rate is still the
+            // honest figure (bytes over seconds spent in read calls).
+            let mib = u.bytes_read as f64 / (1024.0 * 1024.0);
+            let rate = if u.read_seconds > 0.0 { mib / u.read_seconds } else { 0.0 };
+            println!(
+                "  -> streamed {mib:.1} MiB total at {rate:.0} MiB/s \
+                 (peak in-flight {:.2} MiB, {} staged panels)",
+                u.peak_inflight_bytes as f64 / (1024.0 * 1024.0),
+                u.staged
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
     // Artifact backend (pjrt feature + `make artifacts`): add a record
     // so the perf trajectory also tracks the artifact-served sweep.
     match RuntimeEngine::load_default() {
@@ -347,6 +407,7 @@ fn main() {
                     threads: engine.threads(),
                     shards: engine.shards(),
                     batch: 1,
+                    design: "resident",
                     wall_seconds: s.mean,
                     ci_half: s.ci_half,
                 });

@@ -2,8 +2,9 @@
 """Perf-trajectory gate: diff a fresh BENCH_sweeps.json against the
 committed baseline.
 
-Records are keyed on (name, backend, threads, shards, batch) — the
-same identity the bench writes — and compared on mean wall-seconds:
+Records are keyed on (name, backend, threads, shards, batch, design)
+— the same identity the bench writes — and compared on mean
+wall-seconds:
 
   ratio = fresh / baseline
   ratio > --warn  (default 1.25x)  ->  warning, exit 0
@@ -63,6 +64,9 @@ def load_records(path):
                 # shards field: those records are unsharded.
                 int(r.get("shards", 1)),
                 int(r["batch"]),
+                # Baselines predating out-of-core storage have no
+                # design field: those records ran on resident buffers.
+                str(r.get("design", "resident")),
             )
             out[key] = {"wall_seconds": float(r["wall_seconds"])}
         except (KeyError, TypeError, ValueError) as e:
@@ -71,8 +75,8 @@ def load_records(path):
 
 
 def fmt_key(key):
-    name, backend, threads, shards, batch = key
-    return f"{name} [{backend} t={threads} s={shards} B={batch}]"
+    name, backend, threads, shards, batch, design = key
+    return f"{name} [{backend} t={threads} s={shards} B={batch} d={design}]"
 
 
 def main(argv=None):

@@ -12,7 +12,15 @@ from pathlib import Path
 SCRIPT = Path(__file__).resolve().parents[1] / "ci" / "bench_compare.py"
 
 
-def record(name="kkt_sweep", backend="native", threads=1, shards=1, batch=1, wall=1e-3):
+def record(
+    name="kkt_sweep",
+    backend="native",
+    threads=1,
+    shards=1,
+    batch=1,
+    design="resident",
+    wall=1e-3,
+):
     return {
         "name": name,
         "n": 200,
@@ -21,6 +29,7 @@ def record(name="kkt_sweep", backend="native", threads=1, shards=1, batch=1, wal
         "threads": threads,
         "shards": shards,
         "batch": batch,
+        "design": design,
         "wall_seconds": wall,
         "ci_half": wall / 20,
     }
@@ -82,6 +91,34 @@ def test_legacy_baseline_without_shards_field_defaults_to_one(tmp_path):
     r = run_gate(tmp_path, [record(wall=1.05e-3)], [legacy])
     assert r.returncode == 0, r.stdout + r.stderr
     assert "perf-gate: 1 record(s) compared" in r.stdout
+
+
+def test_legacy_baseline_without_design_field_defaults_to_resident(tmp_path):
+    # Mirrors the shards migration: records predating out-of-core
+    # storage carry no design field and must key as "resident".
+    legacy = record(wall=1e-3)
+    del legacy["design"]
+    r = run_gate(tmp_path, [record(wall=1.05e-3)], [legacy])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "perf-gate: 1 record(s) compared" in r.stdout
+
+
+def test_design_field_separates_resident_and_hxd_records(tmp_path):
+    # Same kernel name and shard count, different design substrate:
+    # these are different keys and must never gate against each other.
+    base = [
+        record(name="register_hxd", backend="sharded", shards=2, wall=4e-3),
+        record(name="register_hxd", backend="sharded", shards=2, design="hxd", wall=5e-3),
+    ]
+    fresh = [
+        record(name="register_hxd", backend="sharded", shards=2, wall=4e-3),
+        # 10x slower resident-keyed record would fail if keys collided.
+        record(name="register_hxd", backend="sharded", shards=2, design="hxd", wall=5.1e-3),
+    ]
+    r = run_gate(tmp_path, fresh, base)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "perf-gate: 2 record(s) compared" in r.stdout
+    assert "d=hxd" in r.stdout and "d=resident" in r.stdout
 
 
 def test_unreadable_input_is_a_usage_error(tmp_path):

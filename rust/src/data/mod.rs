@@ -111,6 +111,15 @@ impl Dataset {
     pub fn p(&self) -> usize {
         self.design.ncols()
     }
+
+    /// The dense design, or `None` for sparse datasets — the `.hxd`
+    /// packer and the bench suites need raw column-major storage.
+    pub fn dense_design(&self) -> Option<&DenseMatrix> {
+        match &self.design {
+            DesignMatrix::Dense(m) => Some(m),
+            DesignMatrix::Sparse(_) => None,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -18,7 +18,15 @@
 //!   active one shows up as a violation far beyond the slack.
 //! * [`assert_upload_stats_sane`] — the shard pipeline's counters obey
 //!   `overlapped ≤ uploaded ≤ staged ≤ uploaded + 2` (double
-//!   buffering: at most one panel in the channel plus one just staged).
+//!   buffering: at most one panel in the channel plus one just staged)
+//!   and the byte gauges obey `inflight ≤ peak ≤ 2·max_panel` — the
+//!   out-of-core memory bound the streaming path promises.
+//! * [`assert_staged_panel_bounded`] — a staged panel is never larger
+//!   than one shard (`n·chunk` values): the streaming path must not
+//!   quietly materialize a full `n×p` buffer.
+//! * [`assert_source_norm_identical`] — a column norm read from an
+//!   `.hxd` manifest is bit-identical to a recompute from the column
+//!   bytes just decoded (a mismatch means pack/read disagree).
 //! * [`assert_spot_identical`] — sharded reductions are bit-identical
 //!   to a serial recompute; checked on sampled columns in
 //!   `ShardedBackend::correlation`.
@@ -102,9 +110,53 @@ pub fn assert_upload_stats_sane(stats: &UploadStats) {
         ("stage_seconds", stats.stage_seconds),
         ("upload_seconds", stats.upload_seconds),
         ("stall_seconds", stats.stall_seconds),
+        ("read_seconds", stats.read_seconds),
     ] {
         assert!(v.is_finite() && v >= 0.0, "{name} is {v}");
     }
+    assert!(
+        stats.inflight_bytes <= stats.peak_inflight_bytes,
+        "inflight_bytes {} > peak_inflight_bytes {} — the peak gauge missed an update",
+        stats.inflight_bytes,
+        stats.peak_inflight_bytes
+    );
+    assert!(
+        stats.peak_inflight_bytes <= 2 * stats.max_panel_bytes,
+        "peak_inflight_bytes {} > 2·max_panel_bytes = {} — more than two shard panels \
+         were resident at once; the double-buffer memory bound is broken",
+        stats.peak_inflight_bytes,
+        2 * stats.max_panel_bytes
+    );
+}
+
+/// A staged panel must be at most one shard wide: `len == n·width` and
+/// `width ≤ chunk`. Violations mean the streaming path materialized
+/// more than a shard in one read — the exact failure mode out-of-core
+/// registration exists to prevent.
+pub fn assert_staged_panel_bounded(panel_len: usize, n: usize, width: usize, chunk: usize) {
+    assert!(
+        panel_len == n * width,
+        "staged panel holds {panel_len} values, expected n·width = {n}·{width} = {}",
+        n * width
+    );
+    assert!(
+        width <= chunk,
+        "staged panel spans {width} columns > shard chunk {chunk} — \
+         the stager read past its shard"
+    );
+}
+
+/// Bitwise equality of a manifest column norm against a recompute from
+/// the decoded column bytes. Spot-checked on sampled columns in
+/// `HxdSource::read_cols`.
+pub fn assert_source_norm_identical(manifest: f64, recomputed: f64, col: usize) {
+    assert!(
+        manifest.to_bits() == recomputed.to_bits(),
+        "column {col} norm mismatch: manifest {manifest:e} (bits {:#x}) != \
+         recomputed {recomputed:e} (bits {:#x}) — pack and read disagree on the bytes",
+        manifest.to_bits(),
+        recomputed.to_bits()
+    );
 }
 
 /// Bitwise equality of a sharded reduction entry against a serial
@@ -178,9 +230,54 @@ mod tests {
             stage_seconds: 0.1,
             upload_seconds: 0.2,
             stall_seconds: 0.0,
+            bytes_read: 4096,
+            read_seconds: 0.05,
+            inflight_bytes: 512,
+            peak_inflight_bytes: 1024,
+            max_panel_bytes: 512,
         };
         assert_upload_stats_sane(&s);
         assert_upload_stats_sane(&UploadStats::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "memory bound is broken")]
+    fn triple_buffering_is_caught() {
+        assert_upload_stats_sane(&UploadStats {
+            peak_inflight_bytes: 1537,
+            max_panel_bytes: 512,
+            ..UploadStats::default()
+        });
+    }
+
+    #[test]
+    fn bounded_panels_pass() {
+        assert_staged_panel_bounded(60, 20, 3, 5);
+        assert_staged_panel_bounded(0, 20, 0, 5); // empty shard
+    }
+
+    #[test]
+    #[should_panic(expected = "read past its shard")]
+    fn overwide_panel_is_caught() {
+        assert_staged_panel_bounded(120, 20, 6, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected n·width")]
+    fn short_panel_is_caught() {
+        assert_staged_panel_bounded(59, 20, 3, 5);
+    }
+
+    #[test]
+    fn matching_norms_pass() {
+        assert_source_norm_identical(0.1 + 0.2, 0.1 + 0.2, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "pack and read disagree")]
+    fn one_ulp_norm_drift_is_caught() {
+        let v = 0.1 + 0.2;
+        assert_source_norm_identical(v, f64::from_bits(v.to_bits() + 1), 7);
     }
 
     #[test]

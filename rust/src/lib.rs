@@ -68,6 +68,7 @@ pub mod penalty;
 pub mod runtime;
 pub mod screening;
 pub mod solver;
+pub mod storage;
 pub mod rng;
 pub mod testkit;
 

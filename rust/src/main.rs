@@ -1,7 +1,9 @@
 //! `hx` — the hessian-screening coordinator CLI.
 //!
 //! Subcommands:
-//!   fit            fit one regularization path (synthetic or catalog data)
+//!   fit            fit one regularization path (synthetic, catalog, or
+//!                  out-of-core `.hxd` data via `--design`)
+//!   pack           write a dataset/CSV to a checksummed columnar `.hxd` file
 //!   exp <id>       regenerate a paper table/figure (fig1…fig12, tab1, tab3, all)
 //!   cv             k-fold cross-validated λ selection
 //!   homotopy       adaptive-grid (approximate homotopy) lasso path
@@ -19,10 +21,11 @@ use hessian_screening::linalg::Design;
 use hessian_screening::loss::Loss;
 use hessian_screening::metrics::{fmt_secs, Table};
 use hessian_screening::path::{
-    fit_approximate_homotopy, HomotopySettings, PathFitter, PathSettings,
+    fit_approximate_homotopy, HomotopySettings, PathFit, PathFitter, PathSettings,
 };
-use hessian_screening::runtime::{EngineSweep, RuntimeEngine};
+use hessian_screening::runtime::{EngineSweep, RuntimeEngine, ShardedDesignView};
 use hessian_screening::screening::ScreeningKind;
+use hessian_screening::storage::{pack_dense, read_csv, ColumnSource, HxdSource, DEFAULT_BLOCK_COLS};
 
 const USAGE: &str = "\
 hx — Hessian Screening Rule (Larsson & Wallin, NeurIPS 2022) reproduction
@@ -33,6 +36,13 @@ USAGE:
           celer|blitz|gap_safe|edpp|sasvi|none] [--path-length M] [--eps E]
          [--gamma G] [--seed K] [--engine] [--threads T] [--shards K]
          [--lookahead B]
+  hx fit --design FILE.hxd [--shards K] [--threads T] [--method M]
+         [--path-length M] [--eps E] [--gamma G] [--lookahead B]
+         (loss and response come from the packed file; shard panels
+          stream from disk — the design is never resident in one piece)
+  hx pack --out FILE.hxd [--dataset NAME | --n N --p P --s S [--rho R]
+         [--snr S] [--loss L] [--seed K] | --csv FILE [--csv-response]]
+         [--block-cols B]
   hx exp <fig1|fig2|fig3|tab1|fig4|fig5|fig6|tab3|fig8|fig9|fig10|fig11|fig12|all>
          [--reps R] [--full] [--out DIR] [--threads T] [--seed K]
          [--datasets a,b,c]   (tab1 only)
@@ -57,6 +67,7 @@ fn main() {
     let args = Args::from_env();
     let code = match args.pos(0) {
         Some("fit") => cmd_fit(&args),
+        Some("pack") => cmd_pack(&args),
         Some("exp") => cmd_exp(&args),
         Some("cv") => cmd_cv(&args),
         Some("homotopy") => cmd_homotopy(&args),
@@ -106,7 +117,67 @@ fn path_settings_from(args: &Args) -> Result<PathSettings, String> {
     Ok(s)
 }
 
+/// Shard-pipeline observability line, shared by the resident and
+/// out-of-core fit paths.
+fn print_upload_stats(engine: Option<&RuntimeEngine>) {
+    if let Some(u) = engine.and_then(RuntimeEngine::upload_stats) {
+        let mib = u.bytes_read as f64 / (1024.0 * 1024.0);
+        let rate = if u.read_seconds > 0.0 { mib / u.read_seconds } else { 0.0 };
+        eprintln!(
+            "(shard uploads: {} staged, {} uploaded, {} overlapped; \
+             stage {}s upload {}s stall {}s; read {mib:.1} MiB in {}s \
+             ({rate:.0} MiB/s), peak in-flight {:.1} MiB)",
+            u.staged,
+            u.uploaded,
+            u.overlapped,
+            fmt_secs(u.stage_seconds),
+            fmt_secs(u.upload_seconds),
+            fmt_secs(u.stall_seconds),
+            fmt_secs(u.read_seconds),
+            u.peak_inflight_bytes as f64 / (1024.0 * 1024.0)
+        );
+    }
+}
+
+/// Per-step path table + totals, shared by the resident and
+/// out-of-core fit paths.
+fn print_fit_report(
+    name: &str,
+    n: usize,
+    p: usize,
+    loss: Loss,
+    kind: ScreeningKind,
+    fit: &PathFit,
+    secs: f64,
+) {
+    println!("dataset={name} n={n} p={p} loss={loss:?} method={kind}");
+    let mut table = Table::new(&["step", "lambda", "active", "screened", "passes", "dev.ratio"]);
+    let m = fit.lambdas.len();
+    for k in (0..m).step_by((m / 15).max(1)) {
+        let s = &fit.steps[k];
+        table.row(vec![
+            format!("{k}"),
+            format!("{:.4}", fit.lambdas[k]),
+            format!("{}", s.active),
+            format!("{}", s.screened),
+            format!("{}", s.passes),
+            format!("{:.4}", s.dev_ratio),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "steps={} total_passes={} violations={} time={}s",
+        m,
+        fit.total_passes(),
+        fit.total_violations(),
+        fmt_secs(secs)
+    );
+}
+
 fn cmd_fit(args: &Args) -> Result<(), String> {
+    if args.get("design").is_some() {
+        return cmd_fit_hxd(args);
+    }
     let loss = parse_loss(args.get("loss").unwrap_or("gaussian"))?;
     let kind = ScreeningKind::parse(args.get("method").unwrap_or("hessian"))
         .ok_or("unknown --method")?;
@@ -180,45 +251,130 @@ fn cmd_fit(args: &Args) -> Result<(), String> {
         _ => fitter.fit(&data.design, &data.response),
     };
     let secs = t.elapsed().as_secs_f64();
-    if let Some(u) = engine.as_ref().and_then(RuntimeEngine::upload_stats) {
-        eprintln!(
-            "(shard uploads: {} staged, {} uploaded, {} overlapped; \
-             stage {}s upload {}s stall {}s)",
-            u.staged,
-            u.uploaded,
-            u.overlapped,
-            fmt_secs(u.stage_seconds),
-            fmt_secs(u.upload_seconds),
-            fmt_secs(u.stall_seconds)
-        );
-    }
+    print_upload_stats(engine.as_ref());
+    print_fit_report(&data.name, data.n(), data.p(), loss, kind, &fit, secs);
+    Ok(())
+}
 
-    println!(
-        "dataset={} n={} p={} loss={loss:?} method={kind}",
-        data.name,
-        data.n(),
-        data.p()
+/// `hx fit --design FILE.hxd`: fit a path with the design streamed
+/// shard-by-shard from a packed `.hxd` file. Loss and response come
+/// from the file; coefficients are bit-identical to a resident fit of
+/// the same data (same blas kernels, same reduction order).
+fn cmd_fit_hxd(args: &Args) -> Result<(), String> {
+    let path = std::path::PathBuf::from(args.get("design").expect("routed on --design"));
+    let mut source = HxdSource::open(&path).map_err(|e| e.to_string())?;
+    let loss = source.loss();
+    let kind = ScreeningKind::parse(args.get("method").unwrap_or("hessian"))
+        .ok_or("unknown --method")?;
+    let y = source.take_response().ok_or_else(|| {
+        format!(
+            "{} was packed without a response; re-pack with one \
+             (a dataset/synthetic spec, or `--csv … --csv-response`)",
+            path.display()
+        )
+    })?;
+    let (n, p) = (source.n(), source.p());
+    let name = path.display().to_string();
+    let fitter = PathFitter::new(loss, kind).with_settings(path_settings_from(args)?);
+
+    let shards = args.get_usize("shards")?.unwrap_or(1).max(1);
+    let threads = args.get_usize("threads")?.unwrap_or(1);
+    let engine = RuntimeEngine::native_sharded(shards, threads);
+
+    // Decide the sweep question *before* handing the source over: the
+    // source is consumed by registration, and both branches stream it
+    // through the sharded pipeline (never a resident n×p buffer here).
+    let t = std::time::Instant::now();
+    let fit = if engine.supports_sweep(loss, n, p) {
+        let mut sweep = EngineSweep::from_source(&engine, Box::new(source), loss)
+            .map_err(|e| e.to_string())?
+            .expect("supports_sweep checked above");
+        if let Some(b) = args.get_usize("lookahead")? {
+            sweep = sweep.with_lookahead(b);
+        }
+        eprintln!(
+            "(streaming {name} through the {} backend, {} shard(s), {} thread(s), look-ahead {})",
+            engine.backend_name(),
+            engine.shards(),
+            engine.threads(),
+            sweep.lookahead
+        );
+        let view = ShardedDesignView::new(&sweep.design).map_err(|e| e.to_string())?;
+        fitter.fit_with_engine(&view, &y, Some(&sweep))
+    } else {
+        let reg = engine
+            .register_source(Box::new(source))
+            .map_err(|e| e.to_string())?;
+        eprintln!("(no sweep kernel for this shape; native sweeps over the streamed design)");
+        let view = ShardedDesignView::new(&reg).map_err(|e| e.to_string())?;
+        fitter.fit(&view, &y)
+    };
+    let secs = t.elapsed().as_secs_f64();
+    print_upload_stats(Some(&engine));
+    print_fit_report(&name, n, p, loss, kind, &fit, secs);
+    Ok(())
+}
+
+/// `hx pack`: write a dataset (catalog, synthetic, or CSV) to a
+/// checksummed columnar `.hxd` file for out-of-core fitting.
+fn cmd_pack(args: &Args) -> Result<(), String> {
+    let out = std::path::PathBuf::from(
+        args.get("out").ok_or("hx pack needs --out FILE.hxd (see `hx` usage)")?,
     );
-    let mut table = Table::new(&["step", "lambda", "active", "screened", "passes", "dev.ratio"]);
-    let m = fit.lambdas.len();
-    for k in (0..m).step_by((m / 15).max(1)) {
-        let s = &fit.steps[k];
-        table.row(vec![
-            format!("{k}"),
-            format!("{:.4}", fit.lambdas[k]),
-            format!("{}", s.active),
-            format!("{}", s.screened),
-            format!("{}", s.passes),
-            format!("{:.4}", s.dev_ratio),
-        ]);
-    }
-    println!("{}", table.render());
+    let block_cols = args.get_usize("block-cols")?.unwrap_or(DEFAULT_BLOCK_COLS);
+    let (dense, response, loss, what) = if let Some(csv) = args.get("csv") {
+        let csv_path = std::path::PathBuf::from(csv);
+        let loss = parse_loss(args.get("loss").unwrap_or("gaussian"))?;
+        let (m, y) = read_csv(&csv_path, args.flag("csv-response")).map_err(|e| e.to_string())?;
+        (m, y, loss, csv.to_string())
+    } else {
+        let loss = parse_loss(args.get("loss").unwrap_or("gaussian"))?;
+        let data = if let Some(dname) = args.get("dataset") {
+            dataset_by_name(dname)
+                .ok_or_else(|| format!("unknown dataset '{dname}' (see `hx list`)"))?
+                .generate(args.get_usize("seed")?.unwrap_or(0) as u64)
+        } else {
+            let n = args.get_usize("n")?.unwrap_or(200);
+            let p = args.get_usize("p")?.unwrap_or(2_000);
+            let s = args.get_usize("s")?.unwrap_or(10);
+            let rho = args.get_f64("rho")?.unwrap_or(0.3);
+            let snr = args.get_f64("snr")?.unwrap_or(2.0);
+            experiments::simulate(
+                n,
+                p,
+                s,
+                rho,
+                snr,
+                loss,
+                args.get_usize("seed")?.unwrap_or(0) as u64,
+            )
+        };
+        let name = data.name.clone();
+        let loss = data.loss;
+        match data.design {
+            hessian_screening::data::DesignMatrix::Dense(m) => {
+                (m, Some(data.response), loss, name)
+            }
+            hessian_screening::data::DesignMatrix::Sparse(_) => {
+                return Err(format!(
+                    "dataset '{name}' is sparse; .hxd stores dense f64 columns — \
+                     pick a dense dataset or a synthetic spec"
+                ));
+            }
+        }
+    };
+    let summary = pack_dense(&out, &dense, block_cols, loss, response.as_deref())
+        .map_err(|e| e.to_string())?;
     println!(
-        "steps={} total_passes={} violations={} time={}s",
-        m,
-        fit.total_passes(),
-        fit.total_violations(),
-        fmt_secs(secs)
+        "packed {what} -> {}: n={} p={} loss={loss:?} block_cols={} blocks={} \
+         response={} size={:.1} MiB",
+        out.display(),
+        summary.n,
+        summary.p,
+        summary.block_cols,
+        summary.blocks,
+        if response.is_some() { "yes" } else { "no" },
+        summary.bytes as f64 / (1024.0 * 1024.0)
     );
     Ok(())
 }

@@ -46,7 +46,9 @@ pub mod xla_stub;
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
-pub use shard::{ShardedBackend, UploadStats};
+pub use shard::{ShardedBackend, ShardedDesignView, UploadStats};
+
+use crate::storage::ColumnSource;
 
 /// A design registered with (uploaded to) a backend. Holds the
 /// backend-specific representation plus the logical shape.
@@ -124,6 +126,19 @@ pub trait Backend: Send + Sync {
     /// Register a design from its raw column-major f64 buffer.
     /// O(np), once per dataset.
     fn register_design(&self, col_major: &[f64], n: usize, p: usize) -> Result<RegisteredDesign>;
+
+    /// Register a design pulled from a [`ColumnSource`] (an `.hxd`
+    /// file, a resident buffer, …). The default materializes the full
+    /// design once and defers to [`Backend::register_design`] —
+    /// correct for resident backends, which hold a full copy anyway.
+    /// [`ShardedBackend`] overrides this with the streaming pipeline,
+    /// where panels are pulled shard-by-shard and the full design is
+    /// never materialized in one allocation.
+    fn register_source(&self, mut source: Box<dyn ColumnSource>) -> Result<RegisteredDesign> {
+        let (n, p) = (source.n(), source.p());
+        let data = source.read_cols(0, p)?;
+        self.register_design(&data, n, p)
+    }
 
     /// c = Xᵀr. `None` when the backend has no kernel for this shape.
     fn correlation(&self, design: &RegisteredDesign, r: &[f64]) -> Result<Option<Vec<f64>>>;
@@ -291,6 +306,12 @@ impl RuntimeEngine {
         self.backend.register_design(col_major, n, p)
     }
 
+    /// Register a design from a [`ColumnSource`] — the out-of-core
+    /// entry point (`.hxd` files stream shard panels from disk).
+    pub fn register_source(&self, source: Box<dyn ColumnSource>) -> Result<RegisteredDesign> {
+        self.backend.register_source(source)
+    }
+
     /// c = Xᵀr; `None` when no kernel matches the shape.
     pub fn correlation(&self, design: &RegisteredDesign, r: &[f64]) -> Result<Option<Vec<f64>>> {
         self.backend.correlation(design, r)
@@ -366,6 +387,28 @@ impl<'a> EngineSweep<'a> {
             return Ok(None);
         }
         let reg = engine.register_design(design.data(), n, p)?;
+        Ok(Some(Self {
+            engine,
+            design: reg,
+            loss,
+            recheck_band: 1e-3,
+            lookahead: 4,
+        }))
+    }
+
+    /// Bind `engine` to a design pulled from a [`ColumnSource`] — the
+    /// out-of-core path (`hx fit --design file.hxd`). Same None
+    /// semantics as [`EngineSweep::new`].
+    pub fn from_source(
+        engine: &'a RuntimeEngine,
+        source: Box<dyn ColumnSource>,
+        loss: Loss,
+    ) -> Result<Option<Self>> {
+        let (n, p) = (source.n(), source.p());
+        if !engine.supports_sweep(loss, n, p) {
+            return Ok(None);
+        }
+        let reg = engine.register_source(source)?;
         Ok(Some(Self {
             engine,
             design: reg,

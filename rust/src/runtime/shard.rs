@@ -32,21 +32,38 @@
 //! full sweep overlaps the tail of the upload pipeline. The overlap
 //! is *observable*, not assumed: [`UploadStats`] counts staged and
 //! uploaded panels, how many were already staged when the uploader
-//! asked (i.e. staging fully overlapped other work), and the seconds
-//! the uploader stalled waiting on staging; the path driver snapshots
-//! it into `StepStats::{shards, upload_overlap}`.
+//! asked (i.e. staging fully overlapped other work), the seconds the
+//! uploader stalled waiting on staging, plus the bytes/seconds of
+//! source reads and the in-flight panel byte gauge; the path driver
+//! snapshots it into `StepStats::{shards, upload_overlap}`.
 //!
-//! Memory math: the coordinator's source copy (np) plus at most two
-//! staged panels (2·np/k) are alive while the per-shard engines take
-//! ownership of their slices, so peak transient footprint is
-//! ≈ np·(2 + 2/k) f64 — see README "Sharded designs".
+//! **Out-of-core staging.** The stager pulls panels through the
+//! [`ColumnSource`] seam (`crate::storage`), never from a borrowed
+//! resident slice: `register_design` wraps its input in a
+//! [`ResidentSource`], while `register_source` accepts any source —
+//! in particular an `HxdSource` streaming a checksummed `.hxd` file,
+//! so shard k+1 is staged *from disk* while shard k uploads. A source
+//! read that fails mid-stream fails that shard's slot (and every
+//! later one) with the underlying error — a sweep returns a
+//! descriptive `Err`, it never hangs.
+//!
+//! Memory math: at most two staged panels (2·np/k f64) are alive
+//! while the per-shard engines take ownership of their slices —
+//! enforced by the `inflight_bytes`/`peak_inflight_bytes` gauges, not
+//! hoped for. On top of that the resident path holds the caller's
+//! copy (np) inside its `ResidentSource` (peak ≈ np·(2 + 2/k) beyond
+//! the caller's own buffer is thus down to ≈ np·(1 + 2/k)), while the
+//! `.hxd` path holds only a one-block read cache (n·block_cols), so
+//! its peak is ≈ np·(1 + 2/k) *total* — the design itself never
+//! exists in one allocation. See README "Out-of-core designs".
 
 #![forbid(unsafe_code)]
 
 use super::{Backend, DesignRepr, KktBatch, NativeBackend, RegisteredDesign};
 use crate::error::Result;
-use crate::linalg::blas;
+use crate::linalg::{blas, Design};
 use crate::loss::Loss;
+use crate::storage::{ColumnSource, ResidentSource};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::time::Instant;
@@ -120,6 +137,21 @@ pub struct UploadStats {
     pub upload_seconds: f64,
     /// Wall-seconds the uploader stalled waiting for a staged panel.
     pub stall_seconds: f64,
+    /// Column-data bytes pulled from the registration source (file
+    /// reads for an `.hxd` source, resident copies otherwise).
+    pub bytes_read: u64,
+    /// Wall-seconds spent inside `ColumnSource::read_cols`. A subset
+    /// of `stage_seconds` (staging currently *is* the read).
+    pub read_seconds: f64,
+    /// Bytes of panels staged but not yet taken by the uploader — the
+    /// live double-buffer gauge. Zero once a pipeline is quiescent.
+    pub inflight_bytes: u64,
+    /// High-water mark of `inflight_bytes`: the memory-bound proof.
+    /// Never exceeds two panels (`2 × max_panel_bytes`).
+    pub peak_inflight_bytes: u64,
+    /// Largest single staged panel in bytes — on the streaming path
+    /// this stays at `n·ceil(p/k)·8`, never the full design.
+    pub max_panel_bytes: u64,
 }
 
 /// Contiguous column ranges `[start, end)`, one per shard; the final
@@ -326,67 +358,126 @@ impl ShardedBackend {
     }
 }
 
-/// The stager half of the upload pipeline: slices contiguous column
-/// panels out of the source copy and hands them to the uploader
+/// What the stager hands the uploader: a staged panel, or the error
+/// that stopped staging. A mid-stream source failure (a corrupt
+/// `.hxd` block, a vanished file) rides the channel so the uploader
+/// can fail the right shard's slot with the *underlying* error — the
+/// acceptance bar is a descriptive `Err` on every sweep, never a
+/// panic or a hang in the pipeline.
+enum Staged {
+    Panel { k: usize, width: usize, data: Vec<f64> },
+    Failed { k: usize, error: String },
+}
+
+/// The stager half of the upload pipeline: pulls contiguous column
+/// panels out of the [`ColumnSource`] and hands them to the uploader
 /// through a bounded channel (capacity 1 ⇒ double buffering: one
-/// panel in flight, one being staged).
+/// panel in flight, one being staged). With an on-disk source, shard
+/// k+1 is read from the file while shard k uploads.
 #[allow(clippy::too_many_arguments)]
 fn upload_pipeline(
-    src: Arc<Vec<f64>>,
-    base: usize,
+    mut source: Box<dyn ColumnSource>,
     n: usize,
+    chunk: usize,
     work: Vec<(usize, usize, usize)>,
     engines: Arc<Vec<Box<dyn Backend>>>,
     slots: Arc<Vec<ShardSlot>>,
     stats: Arc<Mutex<UploadStats>>,
     hook: Option<StageHook>,
 ) {
-    let (tx, rx) = mpsc::sync_channel::<(usize, usize, Vec<f64>)>(1);
+    let total = work.len();
+    let (tx, rx) = mpsc::sync_channel::<Staged>(1);
     let stager = {
-        let src = Arc::clone(&src);
         let stats = Arc::clone(&stats);
-        let work = work.clone();
         std::thread::spawn(move || {
             for (k, c0, c1) in work {
                 if let Some(h) = &hook {
                     h(k);
                 }
+                let before = source.bytes_read();
                 let t = Instant::now();
-                let panel = src[c0 * n - base..c1 * n - base].to_vec();
+                let staged = source.read_cols(c0, c1).and_then(|panel| {
+                    // A source serving the wrong panel shape (or one
+                    // wider than the shard chunk) would corrupt every
+                    // downstream kernel — refuse it here, descriptively.
+                    if panel.len() != (c1 - c0) * n || c1 - c0 > chunk {
+                        Err(crate::err!(
+                            "source staged {} values for columns {c0}..{c1}, expected {} \
+                             (chunk {chunk})",
+                            panel.len(),
+                            (c1 - c0) * n
+                        ))
+                    } else {
+                        Ok(panel)
+                    }
+                });
                 let secs = t.elapsed().as_secs_f64();
+                let panel = match staged {
+                    Ok(panel) => panel,
+                    Err(e) => {
+                        // Stop staging: later shards are failed by the
+                        // uploader's trailing loop with this cause.
+                        let _ = tx.send(Staged::Failed { k, error: e.to_string() });
+                        return;
+                    }
+                };
+                #[cfg(feature = "paranoid")]
+                crate::invariants::assert_staged_panel_bounded(panel.len(), n, c1 - c0, chunk);
+                let bytes = 8 * panel.len() as u64;
                 {
                     let mut st = lock_ignore_poison(&stats);
                     st.staged += 1;
                     st.stage_seconds += secs;
+                    st.read_seconds += secs;
+                    st.bytes_read += source.bytes_read() - before;
+                    st.inflight_bytes += bytes;
+                    st.peak_inflight_bytes = st.peak_inflight_bytes.max(st.inflight_bytes);
+                    st.max_panel_bytes = st.max_panel_bytes.max(bytes);
                 }
-                if tx.send((k, c1 - c0, panel)).is_err() {
+                if tx.send(Staged::Panel { k, width: c1 - c0, data: panel }).is_err() {
                     return;
                 }
             }
         })
     };
-    for _ in 0..work.len() {
+    let mut source_error: Option<String> = None;
+    for _ in 0..total {
         // Overlap bookkeeping: a panel already in the channel means
         // staging fully overlapped the previous upload (or the
         // caller's sweeps); otherwise the uploader stalls and the
         // stall is timed.
-        let (k, width, panel) = match rx.try_recv() {
-            Ok(v) => {
-                lock_ignore_poison(&stats).overlapped += 1;
-                v
-            }
+        let (item, was_overlapped) = match rx.try_recv() {
+            Ok(v) => (v, true),
             Err(mpsc::TryRecvError::Empty) => {
                 let t = Instant::now();
                 match rx.recv() {
                     Ok(v) => {
                         lock_ignore_poison(&stats).stall_seconds += t.elapsed().as_secs_f64();
-                        v
+                        (v, false)
                     }
                     Err(_) => break,
                 }
             }
             Err(mpsc::TryRecvError::Disconnected) => break,
         };
+        let (k, width, panel) = match item {
+            Staged::Panel { k, width, data } => (k, width, data),
+            Staged::Failed { k, error } => {
+                slots[k].fail(error.clone());
+                source_error = Some(error);
+                break;
+            }
+        };
+        {
+            // The uploader owns the panel from here on, so it stops
+            // counting against the staged-but-untaken double-buffer
+            // gauge (`overlapped` only counts real panels).
+            let mut st = lock_ignore_poison(&stats);
+            if was_overlapped {
+                st.overlapped += 1;
+            }
+            st.inflight_bytes = st.inflight_bytes.saturating_sub(8 * panel.len() as u64);
+        }
         let t = Instant::now();
         match engines[k].register_design(&panel, n, width) {
             Ok(reg) => {
@@ -404,9 +495,13 @@ fn upload_pipeline(
     // A dead stager (panic in a hook or in staging itself) must
     // surface as a per-shard `Err` to sweep waiters — never an
     // unwrap-abort in this thread, and never a hang: fail every slot
-    // still pending (fulfilled slots ignore `fail`).
+    // still pending (fulfilled slots ignore `fail`). A source read
+    // failure names the original cause instead of a generic message.
     let leftover = match stager.join() {
-        Ok(()) => "upload pipeline exited early".to_string(),
+        Ok(()) => match source_error {
+            Some(e) => format!("an earlier shard's staging read failed: {e}"),
+            None => "upload pipeline exited early".to_string(),
+        },
         Err(payload) => format!("stager panicked: {}", panic_message(payload)),
     };
     for slot in slots.iter() {
@@ -460,44 +555,69 @@ impl Backend for ShardedBackend {
     }
 
     fn register_design(&self, col_major: &[f64], n: usize, p: usize) -> Result<RegisteredDesign> {
-        if col_major.len() != n * p {
+        // One resident copy serves both the synchronous shard-0 panel
+        // and the background stager (replacing the former panel-0 +
+        // remaining-columns copy pair); `ResidentSource` validates the
+        // shape and computes the global f64 column norms with the same
+        // `blas::nrm2` the unsharded backends cache.
+        self.register_source(Box::new(ResidentSource::copy_of(col_major, n, p)?))
+    }
+
+    fn register_source(&self, mut source: Box<dyn ColumnSource>) -> Result<RegisteredDesign> {
+        let (n, p) = (source.n(), source.p());
+        if n == 0 || p == 0 {
+            return Err(crate::err!("cannot register an empty design ({n}x{p})"));
+        }
+        // Global column norms in f64, straight from the source's
+        // manifest/precompute — no resident pass over the data (the
+        // batched mask reduction needs them bitwise-exact).
+        let col_norms = source.col_norms().to_vec();
+        if col_norms.len() != p {
             return Err(crate::err!(
-                "design buffer has {} entries, expected {}x{}",
-                col_major.len(),
-                n,
-                p
+                "source reports {} column norms for p = {p}",
+                col_norms.len()
             ));
         }
-        // Global column norms in f64 — identical to the unsharded
-        // backends' cache (the batched mask reduction needs them).
-        let col_norms: Vec<f64> = (0..p)
-            .map(|j| blas::nrm2(&col_major[j * n..(j + 1) * n]))
-            .collect();
         let bounds = shard_bounds(p, self.engines.len());
+        let chunk = div_ceil(p.max(1), self.engines.len());
         let slots: Arc<Vec<ShardSlot>> =
             Arc::new((0..bounds.len()).map(|_| ShardSlot::new()).collect());
 
         // Shard 0 synchronously: the caller can start sweeping it
-        // while the pipeline uploads the rest.
+        // while the pipeline uploads the rest. A failing first read
+        // (truncated file, corrupt block 0) surfaces directly here.
         let (s0, e0) = bounds[0];
+        let before = source.bytes_read();
         let t = Instant::now();
-        let panel0 = col_major[s0 * n..e0 * n].to_vec();
+        let panel0 = source.read_cols(s0, e0)?;
         let stage0 = t.elapsed().as_secs_f64();
-        let t = Instant::now();
+        if panel0.len() != (e0 - s0) * n {
+            return Err(crate::err!(
+                "source staged {} values for columns {s0}..{e0}, expected {}",
+                panel0.len(),
+                (e0 - s0) * n
+            ));
+        }
+        #[cfg(feature = "paranoid")]
+        crate::invariants::assert_staged_panel_bounded(panel0.len(), n, e0 - s0, chunk);
+        let bytes0 = 8 * panel0.len() as u64;
+        let t_up = Instant::now();
         let reg0 = self.engines[0].register_design(&panel0, n, e0 - s0)?;
         {
             let mut st = lock_ignore_poison(&self.stats);
             st.staged += 1;
             st.stage_seconds += stage0;
+            st.read_seconds += stage0;
+            st.bytes_read += source.bytes_read() - before;
+            st.max_panel_bytes = st.max_panel_bytes.max(bytes0);
+            st.peak_inflight_bytes = st.peak_inflight_bytes.max(bytes0);
             st.uploaded += 1;
-            st.upload_seconds += t.elapsed().as_secs_f64();
+            st.upload_seconds += t_up.elapsed().as_secs_f64();
         }
+        drop(panel0);
         slots[0].fulfill(reg0);
 
         let uploader = if bounds.len() > 1 {
-            // Source copy for the background stager (only the columns
-            // past shard 0 — shard 0's panel is already resident).
-            let src = Arc::new(col_major[e0 * n..].to_vec());
             let work: Vec<(usize, usize, usize)> = bounds
                 .iter()
                 .enumerate()
@@ -508,9 +628,12 @@ impl Backend for ShardedBackend {
             let slots = Arc::clone(&slots);
             let stats = Arc::clone(&self.stats);
             let hook = self.stage_hook.clone();
-            let base = e0 * n;
+            // The source moves into the pipeline thread; nothing else
+            // holds design data, so the streaming path's only standing
+            // allocations are the source's own buffers plus at most
+            // two in-flight panels.
             Some(std::thread::spawn(move || {
-                upload_pipeline(src, base, n, work, engines, slots, stats, hook);
+                upload_pipeline(source, n, chunk, work, engines, slots, stats, hook);
             }))
         } else {
             None
@@ -655,6 +778,118 @@ impl Backend for ShardedBackend {
             }
         }
         Ok(Some(out))
+    }
+}
+
+/// A host-resident [`Design`] view over a registered design's shard
+/// panels: per-column kernels run on the engines' own slices through
+/// the exact blas calls `DenseMatrix` uses, so a path fit through
+/// this view is **bit-identical** to a fit over the original dense
+/// matrix — without any single n×p allocation (the design lives in k
+/// per-shard panels). This is what lets `hx fit --design file.hxd`
+/// run the whole solver out-of-core-registered yet bitwise-equal.
+///
+/// Construction blocks until every shard upload lands and surfaces
+/// any upload failure as an `Err`; the view borrows the panels, so it
+/// costs no copies.
+pub struct ShardedDesignView<'a> {
+    n: usize,
+    p: usize,
+    /// Uniform shard width `ceil(p/k)`: column `j` lives in panel
+    /// `j / chunk` at local column `j % chunk`.
+    chunk: usize,
+    panels: Vec<&'a [f64]>,
+}
+
+impl<'a> ShardedDesignView<'a> {
+    pub fn new(design: &'a RegisteredDesign) -> Result<Self> {
+        match &design.repr {
+            DesignRepr::Sharded(rep) => {
+                let bounds = shard_bounds(design.p, rep.slots.len());
+                let chunk = div_ceil(design.p.max(1), rep.slots.len());
+                let mut panels = Vec::with_capacity(rep.slots.len());
+                for (slot, &(s, e)) in rep.slots.iter().zip(&bounds) {
+                    let reg = slot.wait()?;
+                    match &reg.repr {
+                        DesignRepr::Native(data) => {
+                            if data.len() != (e - s) * design.n {
+                                return Err(crate::err!(
+                                    "shard panel holds {} values for columns {s}..{e}, \
+                                     expected {}",
+                                    data.len(),
+                                    (e - s) * design.n
+                                ));
+                            }
+                            panels.push(data.as_slice());
+                        }
+                        _ => {
+                            return Err(crate::err!(
+                                "shard panels are not host-resident; a design view needs \
+                                 native shard engines"
+                            ))
+                        }
+                    }
+                }
+                Ok(Self { n: design.n, p: design.p, chunk, panels })
+            }
+            DesignRepr::Native(data) => Ok(Self {
+                n: design.n,
+                p: design.p,
+                chunk: design.p.max(1),
+                panels: vec![data.as_slice()],
+            }),
+            #[cfg(feature = "pjrt")]
+            DesignRepr::Pjrt(_) => Err(crate::err!(
+                "device-resident designs have no host-side view"
+            )),
+        }
+    }
+
+    #[inline]
+    fn col(&self, j: usize) -> &[f64] {
+        let k = j / self.chunk;
+        let local = j - k * self.chunk;
+        &self.panels[k][local * self.n..(local + 1) * self.n]
+    }
+}
+
+impl Design for ShardedDesignView<'_> {
+    fn nrows(&self) -> usize {
+        self.n
+    }
+
+    fn ncols(&self) -> usize {
+        self.p
+    }
+
+    #[inline]
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        blas::dot(self.col(j), v)
+    }
+
+    #[inline]
+    fn col_axpy(&self, j: usize, alpha: f64, v: &mut [f64]) {
+        blas::axpy(alpha, self.col(j), v);
+    }
+
+    #[inline]
+    fn col_sq_norm(&self, j: usize) -> f64 {
+        blas::sq_norm(self.col(j))
+    }
+
+    fn gram(&self, i: usize, j: usize) -> f64 {
+        blas::dot(self.col(i), self.col(j))
+    }
+
+    fn gram_weighted(&self, i: usize, j: usize, w: Option<&[f64]>) -> f64 {
+        match w {
+            None => self.gram(i, j),
+            Some(w) => blas::dot_w(self.col(i), self.col(j), w),
+        }
+    }
+
+    fn density(&self) -> f64 {
+        1.0
     }
 }
 
@@ -846,5 +1081,180 @@ mod tests {
         assert!(b.is_exact());
         assert!(b.supports_sweep(Loss::Gaussian, 50, 10));
         assert!(!b.supports_sweep(Loss::Poisson, 50, 10));
+    }
+
+    #[test]
+    fn register_source_streams_bit_identical_to_resident() {
+        let (n, p) = (22, 37);
+        let (dense, y) = dense_problem(n, p, 13);
+        let b = ShardedBackend::native(4, 1);
+        let reg_a = b.register_design(dense.data(), n, p).unwrap();
+        let src = ResidentSource::copy_of(dense.data(), n, p).unwrap();
+        let reg_b = b.register_source(Box::new(src)).unwrap();
+        assert_eq!(reg_a.col_norms, reg_b.col_norms);
+        let ca = b.correlation(&reg_a, &y).unwrap().unwrap();
+        let cb = b.correlation(&reg_b, &y).unwrap().unwrap();
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn pipeline_counters_bound_the_double_buffer() {
+        let (n, p, shards) = (20, 36, 4); // chunk = 9 columns
+        let (dense, y) = dense_problem(n, p, 17);
+        let b = ShardedBackend::native(shards, 1);
+        let reg = b.register_design(dense.data(), n, p).unwrap();
+        let _ = b.correlation(&reg, &y).unwrap().unwrap();
+        let u = b.upload_stats().unwrap();
+        assert_eq!(u.staged, shards);
+        assert_eq!(u.uploaded, shards);
+        // Every column crossed the source seam exactly once.
+        assert_eq!(u.bytes_read, (8 * n * p) as u64);
+        assert!(u.read_seconds >= 0.0 && u.read_seconds <= u.stage_seconds);
+        // Quiescent pipeline: nothing staged-but-untaken, and the
+        // high-water mark respected the double-buffer depth.
+        assert_eq!(u.inflight_bytes, 0);
+        let panel_cap = (8 * n * div_ceil(p, shards)) as u64;
+        assert_eq!(u.max_panel_bytes, panel_cap);
+        assert!(
+            u.max_panel_bytes < (8 * n * p) as u64,
+            "no full-design panel may exist on the streaming path"
+        );
+        assert!(
+            u.peak_inflight_bytes <= 2 * u.max_panel_bytes,
+            "peak staged bytes {} exceeded two panels ({})",
+            u.peak_inflight_bytes,
+            2 * u.max_panel_bytes
+        );
+    }
+
+    /// A source whose reads start failing after `ok_reads` calls —
+    /// the deterministic stand-in for a disk that dies mid-stream.
+    struct FlakySource {
+        inner: ResidentSource,
+        ok_reads: usize,
+        reads: usize,
+    }
+
+    impl ColumnSource for FlakySource {
+        fn n(&self) -> usize {
+            self.inner.n()
+        }
+
+        fn p(&self) -> usize {
+            self.inner.p()
+        }
+
+        fn col_norms(&self) -> &[f64] {
+            self.inner.col_norms()
+        }
+
+        fn read_cols(&mut self, c0: usize, c1: usize) -> Result<Vec<f64>> {
+            self.reads += 1;
+            if self.reads > self.ok_reads {
+                return Err(crate::err!("disk went away reading columns {c0}..{c1}"));
+            }
+            self.inner.read_cols(c0, c1)
+        }
+
+        fn bytes_read(&self) -> u64 {
+            self.inner.bytes_read()
+        }
+
+        fn source_name(&self) -> &'static str {
+            "flaky"
+        }
+    }
+
+    #[test]
+    fn mid_stream_read_failure_is_an_error_not_a_hang() {
+        let (n, p) = (15, 32);
+        let (dense, y) = dense_problem(n, p, 19);
+        // 4 shards; reads 1 (shard 0) and 2 (panel 1) succeed, the
+        // read for panel 2 fails: registration itself succeeds, every
+        // sweep must surface the read error, and the counters must
+        // stay balanced with no panel left in flight.
+        let flaky = FlakySource {
+            inner: ResidentSource::copy_of(dense.data(), n, p).unwrap(),
+            ok_reads: 2,
+            reads: 0,
+        };
+        let b = ShardedBackend::native(4, 1);
+        let reg = b.register_source(Box::new(flaky)).unwrap();
+        let err = b.correlation(&reg, &y).unwrap_err().to_string();
+        assert!(err.contains("disk went away"), "{err}");
+        let u = b.upload_stats().unwrap();
+        assert_eq!(u.staged, 2);
+        assert_eq!(u.uploaded, 2);
+        assert_eq!(u.inflight_bytes, 0);
+
+        // A first read that fails surfaces synchronously from
+        // registration (the "source open / first read" surface).
+        let dead = FlakySource {
+            inner: ResidentSource::copy_of(dense.data(), n, p).unwrap(),
+            ok_reads: 0,
+            reads: 0,
+        };
+        let err = b.register_source(Box::new(dead)).unwrap_err().to_string();
+        assert!(err.contains("disk went away"), "{err}");
+    }
+
+    #[test]
+    fn design_view_matches_dense_kernels_bitwise() {
+        let (n, p) = (18, 23);
+        let (dense, y) = dense_problem(n, p, 21);
+        let w: Vec<f64> = (0..n).map(|i| 0.5 + 0.01 * i as f64).collect();
+        // 30 shards > p exercises empty trailing shards.
+        for shards in [1, 2, 5, 30] {
+            let b = ShardedBackend::native(shards, 1);
+            let reg = b.register_design(dense.data(), n, p).unwrap();
+            let view = ShardedDesignView::new(&reg).unwrap();
+            assert_eq!((view.nrows(), view.ncols()), (n, p));
+            assert_eq!(view.density(), 1.0);
+            for j in 0..p {
+                assert_eq!(
+                    view.col_dot(j, &y).to_bits(),
+                    dense.col_dot(j, &y).to_bits(),
+                    "{shards} shards col {j}"
+                );
+                assert_eq!(
+                    view.col_sq_norm(j).to_bits(),
+                    dense.col_sq_norm(j).to_bits()
+                );
+                let mut a = vec![0.25; n];
+                let mut c = vec![0.25; n];
+                view.col_axpy(j, 1.25, &mut a);
+                dense.col_axpy(j, 1.25, &mut c);
+                assert_eq!(a, c);
+            }
+            assert_eq!(view.gram(3, 11).to_bits(), dense.gram(3, 11).to_bits());
+            assert_eq!(
+                view.gram_weighted(2, 9, Some(&w)).to_bits(),
+                dense.gram_weighted(2, 9, Some(&w)).to_bits()
+            );
+            assert_eq!(
+                view.gram_weighted(2, 9, None).to_bits(),
+                dense.gram(2, 9).to_bits()
+            );
+        }
+
+        // A native-registered design exposes the same view.
+        let native = NativeBackend::default();
+        let reg = native.register_design(dense.data(), n, p).unwrap();
+        let view = ShardedDesignView::new(&reg).unwrap();
+        assert_eq!(view.col_dot(7, &y).to_bits(), dense.col_dot(7, &y).to_bits());
+    }
+
+    #[test]
+    fn design_view_surfaces_failed_uploads() {
+        let (n, p) = (15, 32);
+        let (dense, _) = dense_problem(n, p, 23);
+        let b = ShardedBackend::native(4, 1).with_stage_hook(Arc::new(|k| {
+            if k == 2 {
+                panic!("injected stager panic");
+            }
+        }));
+        let reg = b.register_design(dense.data(), n, p).unwrap();
+        let err = ShardedDesignView::new(&reg).unwrap_err().to_string();
+        assert!(err.contains("stager panicked"), "{err}");
     }
 }

@@ -1,0 +1,128 @@
+//! CSV ingestion for `hx pack`.
+//!
+//! Deliberately small: comma-separated numeric rows (one observation
+//! per row), an optional non-numeric first row treated as a header,
+//! and an optional response in the last column. Packing is the one
+//! place a resident pass over external data is acceptable — the point
+//! of `.hxd` is that everything *after* pack streams.
+
+#![forbid(unsafe_code)]
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::linalg::DenseMatrix;
+
+/// Read `path` into a dense column-major design. With
+/// `response_last`, the final column is split off and returned as the
+/// response vector.
+pub fn read_csv(path: &Path, response_last: bool) -> Result<(DenseMatrix, Option<Vec<f64>>)> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| crate::err!("reading {}: {e}", path.display()))?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut width: Option<usize> = None;
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parsed: std::result::Result<Vec<f64>, _> =
+            line.split(',').map(|f| f.trim().parse::<f64>()).collect();
+        let vals = match parsed {
+            Ok(vals) => vals,
+            // A non-numeric first row is a header; anywhere else it is
+            // a data error worth naming by line.
+            Err(_) if i == 0 => continue,
+            Err(e) => {
+                return Err(crate::err!("line {} of {}: {e}", i + 1, path.display()));
+            }
+        };
+        match width {
+            None => width = Some(vals.len()),
+            Some(w) if w != vals.len() => {
+                return Err(crate::err!(
+                    "line {} of {} has {} fields, expected {w}",
+                    i + 1,
+                    path.display(),
+                    vals.len()
+                ));
+            }
+            Some(_) => {}
+        }
+        rows.push(vals);
+    }
+    let n = rows.len();
+    let cols = width.unwrap_or(0);
+    if n == 0 || cols == 0 {
+        return Err(crate::err!("{} holds no numeric data rows", path.display()));
+    }
+    let p = if response_last {
+        if cols < 2 {
+            return Err(crate::err!(
+                "{} has {cols} column(s); splitting off a response needs at least 2",
+                path.display()
+            ));
+        }
+        cols - 1
+    } else {
+        cols
+    };
+    let mut col_major = vec![0.0; n * p];
+    let mut response = if response_last { Some(Vec::with_capacity(n)) } else { None };
+    for (i, row) in rows.iter().enumerate() {
+        for (j, &v) in row[..p].iter().enumerate() {
+            col_major[j * n + i] = v;
+        }
+        if let Some(y) = response.as_mut() {
+            y.push(row[p]);
+        }
+    }
+    Ok((DenseMatrix::from_col_major(n, p, col_major), response))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hxd-csv-{}-{tag}.csv", std::process::id()))
+    }
+
+    #[test]
+    fn parses_header_rows_and_response_column() {
+        let path = tmp("ok");
+        std::fs::write(&path, "a,b,y\n1,2,3\n4,5,6\n\n7,8,9\n").expect("write");
+        let (m, y) = read_csv(&path, true).expect("parse");
+        assert_eq!((m.nrows(), m.ncols()), (3, 2));
+        assert_eq!(m.col(0), &[1.0, 4.0, 7.0]);
+        assert_eq!(m.col(1), &[2.0, 5.0, 8.0]);
+        assert_eq!(y.expect("response"), vec![3.0, 6.0, 9.0]);
+
+        let (m, y) = read_csv(&path, false).expect("parse without split");
+        assert_eq!((m.nrows(), m.ncols()), (3, 3));
+        assert!(y.is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn names_the_offending_line_on_errors() {
+        let path = tmp("bad");
+        std::fs::write(&path, "1,2\n3,nope\n").expect("write");
+        let err = read_csv(&path, false).expect_err("bad float");
+        assert!(err.to_string().contains("line 2"), "got: {err}");
+
+        std::fs::write(&path, "1,2\n3,4,5\n").expect("write");
+        let err = read_csv(&path, false).expect_err("ragged row");
+        assert!(err.to_string().contains("has 3 fields, expected 2"), "got: {err}");
+
+        std::fs::write(&path, "header,only\n").expect("write");
+        let err = read_csv(&path, false).expect_err("no data");
+        assert!(err.to_string().contains("no numeric data rows"), "got: {err}");
+
+        std::fs::write(&path, "1\n2\n").expect("write");
+        let err = read_csv(&path, true).expect_err("single column split");
+        assert!(err.to_string().contains("at least 2"), "got: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

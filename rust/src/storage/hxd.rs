@@ -1,0 +1,753 @@
+//! The `.hxd` on-disk columnar design format.
+//!
+//! Byte layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size            field
+//! ------  --------------  ------------------------------------------
+//!      0  8               magic  b"HXDESIGN"
+//!      8  4               format version (u32, currently 1)
+//!     12  4               endianness sentinel (u32 0x01020304)
+//!     16  8               n   (u64, rows)
+//!     24  8               p   (u64, columns)
+//!     32  8               block_cols (u64, checksum/cache granule)
+//!     40  8               flags (bit 0: response present,
+//!                                bits 1..=2: loss tag 0/1/2)
+//!     48  n·p·8           column-major f64 data; column c starts at
+//!                         48 + c·n·8 (blocks set checksum and cache
+//!                         granularity only — the data is contiguous)
+//!      …  nblocks·8       per-block FNV-1a-64 checksums      ┐
+//!      …  p·8             per-column ℓ2 norms (f64)          │ the
+//!      …  [n·8]           response vector, if flagged        │ manifest
+//!      …  8               FNV-1a-64 of the manifest bytes    │
+//!      …  8               tail magic b"HXDTAIL\0"            ┘
+//! ```
+//!
+//! `nblocks = ceil(p / block_cols)`; the last block may be ragged. The
+//! total file size is computable from the header alone, so truncation
+//! is detected at open time; block corruption is detected at read time
+//! (every block read is checksummed before it is served); manifest
+//! corruption is detected at open time via the trailing manifest hash.
+//!
+//! Norms are computed by the writer with the same `blas::nrm2` kernel
+//! the resident path uses, so a design registered from an `.hxd` file
+//! carries bitwise-identical `col_norms` — a requirement, not a nicety:
+//! the sharded keep-mask rebuild consumes them.
+
+#![forbid(unsafe_code)]
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::{check_range, fnv1a64, fnv1a64_update, ColumnSource};
+use crate::error::Result;
+use crate::linalg::{blas, DenseMatrix};
+use crate::loss::Loss;
+
+/// Leading file magic.
+pub const HXD_MAGIC: [u8; 8] = *b"HXDESIGN";
+/// Trailing tail marker (a cheap torn-write detector).
+pub const HXD_TAIL: [u8; 8] = *b"HXDTAIL\0";
+/// Format version this reader/writer speaks.
+pub const HXD_VERSION: u32 = 1;
+/// Default checksum/cache block width for `hx pack`.
+pub const DEFAULT_BLOCK_COLS: usize = 64;
+
+const ENDIAN_SENTINEL: u32 = 0x0102_0304;
+const HEADER_LEN: usize = 48;
+const FLAG_RESPONSE: u64 = 1;
+const KNOWN_FLAGS: u64 = 0b111;
+
+/// `ceil(a / b)` for b > 0 (MSRV predates `usize::div_ceil`).
+fn div_ceil(a: usize, b: usize) -> usize {
+    a / b + usize::from(a % b != 0)
+}
+
+fn loss_tag(loss: Loss) -> u64 {
+    match loss {
+        Loss::Gaussian => 0,
+        Loss::Logistic => 1,
+        Loss::Poisson => 2,
+    }
+}
+
+fn loss_from_tag(tag: u64) -> Result<Loss> {
+    match tag {
+        0 => Ok(Loss::Gaussian),
+        1 => Ok(Loss::Logistic),
+        2 => Ok(Loss::Poisson),
+        other => Err(crate::err!("unknown loss tag {other} in .hxd flags")),
+    }
+}
+
+fn u32_at(buf: &[u8], off: usize) -> u32 {
+    let mut b = [0u8; 4];
+    b.copy_from_slice(&buf[off..off + 4]);
+    u32::from_le_bytes(b)
+}
+
+fn u64_at(buf: &[u8], off: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[off..off + 8]);
+    u64::from_le_bytes(b)
+}
+
+fn f64_from_le(chunk: &[u8]) -> f64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(chunk);
+    f64::from_le_bytes(b)
+}
+
+fn to_usize(v: u64, what: &str) -> Result<usize> {
+    usize::try_from(v).map_err(|_| crate::err!("{what} = {v} does not fit in usize"))
+}
+
+/// What `pack_dense`/[`HxdWriter::finish`] report back.
+#[derive(Clone, Debug)]
+pub struct PackSummary {
+    pub n: usize,
+    pub p: usize,
+    pub block_cols: usize,
+    /// Number of checksum blocks written (`ceil(p / block_cols)`).
+    pub blocks: usize,
+    /// Total file size in bytes.
+    pub bytes: u64,
+}
+
+/// Streaming `.hxd` writer: columns go out in arrival order with
+/// incremental per-block checksums, so packing never needs a second
+/// resident copy of the design.
+pub struct HxdWriter {
+    file: BufWriter<File>,
+    path: PathBuf,
+    n: usize,
+    p: usize,
+    block_cols: usize,
+    loss: Loss,
+    cols_written: usize,
+    cols_in_block: usize,
+    block_hash: u64,
+    block_sums: Vec<u64>,
+    col_norms: Vec<f64>,
+    buf: Vec<u8>,
+}
+
+impl HxdWriter {
+    /// Create `path` and write the fixed header. The flags word is
+    /// patched at [`HxdWriter::finish`], when the response is known.
+    pub fn create(path: &Path, n: usize, p: usize, block_cols: usize, loss: Loss) -> Result<Self> {
+        if n == 0 || p == 0 {
+            return Err(crate::err!("cannot pack an empty design ({n}x{p})"));
+        }
+        if block_cols == 0 {
+            return Err(crate::err!("block width must be at least 1 column"));
+        }
+        (n as u64)
+            .checked_mul(p as u64)
+            .and_then(|v| v.checked_mul(8))
+            .ok_or_else(|| crate::err!("design shape {n}x{p} overflows the 64-bit file layout"))?;
+        let file = File::create(path)
+            .map_err(|e| crate::err!("creating {}: {e}", path.display()))?;
+        let mut header = [0u8; HEADER_LEN];
+        header[..8].copy_from_slice(&HXD_MAGIC);
+        header[8..12].copy_from_slice(&HXD_VERSION.to_le_bytes());
+        header[12..16].copy_from_slice(&ENDIAN_SENTINEL.to_le_bytes());
+        header[16..24].copy_from_slice(&(n as u64).to_le_bytes());
+        header[24..32].copy_from_slice(&(p as u64).to_le_bytes());
+        header[32..40].copy_from_slice(&(block_cols as u64).to_le_bytes());
+        // header[40..48] (flags) stays zero until finish().
+        let mut w = Self {
+            file: BufWriter::new(file),
+            path: path.to_path_buf(),
+            n,
+            p,
+            block_cols,
+            loss,
+            cols_written: 0,
+            cols_in_block: 0,
+            block_hash: fnv1a64(b""),
+            block_sums: Vec::with_capacity(div_ceil(p, block_cols)),
+            col_norms: Vec::with_capacity(p),
+            buf: Vec::with_capacity(8 * n),
+        };
+        w.write_bytes(&header)?;
+        Ok(w)
+    }
+
+    fn write_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        self.file
+            .write_all(bytes)
+            .map_err(|e| crate::err!("writing {}: {e}", self.path.display()))
+    }
+
+    /// Append whole columns (a column-major panel of `w·n` values).
+    pub fn write_cols(&mut self, panel: &[f64]) -> Result<()> {
+        if panel.len() % self.n != 0 {
+            return Err(crate::err!(
+                "panel of {} values is not a whole number of n = {} columns",
+                panel.len(),
+                self.n
+            ));
+        }
+        let w = panel.len() / self.n;
+        if self.cols_written + w > self.p {
+            return Err(crate::err!(
+                "writing {w} more column(s) would exceed p = {} ({} already packed)",
+                self.p,
+                self.cols_written
+            ));
+        }
+        for col in panel.chunks_exact(self.n) {
+            self.col_norms.push(blas::nrm2(col));
+            self.buf.clear();
+            for &v in col {
+                self.buf.extend_from_slice(&v.to_le_bytes());
+            }
+            self.block_hash = fnv1a64_update(self.block_hash, &self.buf);
+            let bytes = std::mem::take(&mut self.buf);
+            self.write_bytes(&bytes)?;
+            self.buf = bytes;
+            self.cols_written += 1;
+            self.cols_in_block += 1;
+            if self.cols_in_block == self.block_cols {
+                self.block_sums.push(self.block_hash);
+                self.block_hash = fnv1a64(b"");
+                self.cols_in_block = 0;
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal the file: flush the ragged tail block, write the manifest
+    /// (checksums, norms, optional response, manifest hash, tail
+    /// marker) and patch the header flags.
+    pub fn finish(mut self, response: Option<&[f64]>) -> Result<PackSummary> {
+        if self.cols_written != self.p {
+            return Err(crate::err!(
+                "packed only {} of {} columns before finish",
+                self.cols_written,
+                self.p
+            ));
+        }
+        if self.cols_in_block > 0 {
+            self.block_sums.push(self.block_hash);
+        }
+        if let Some(y) = response {
+            if y.len() != self.n {
+                return Err(crate::err!(
+                    "response has {} entries, expected n = {}",
+                    y.len(),
+                    self.n
+                ));
+            }
+        }
+        let mut manifest =
+            Vec::with_capacity(8 * (self.block_sums.len() + self.p + self.n) + 16);
+        for &h in &self.block_sums {
+            manifest.extend_from_slice(&h.to_le_bytes());
+        }
+        for &v in &self.col_norms {
+            manifest.extend_from_slice(&v.to_le_bytes());
+        }
+        if let Some(y) = response {
+            for &v in y {
+                manifest.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let sum = fnv1a64(&manifest);
+        manifest.extend_from_slice(&sum.to_le_bytes());
+        manifest.extend_from_slice(&HXD_TAIL);
+        let manifest_len = manifest.len();
+        self.write_bytes(&manifest)?;
+        let flags = (loss_tag(self.loss) << 1)
+            | if response.is_some() { FLAG_RESPONSE } else { 0 };
+        self.file
+            .seek(SeekFrom::Start(40))
+            .and_then(|_| self.file.write_all(&flags.to_le_bytes()))
+            .and_then(|_| self.file.flush())
+            .map_err(|e| crate::err!("finalizing {}: {e}", self.path.display()))?;
+        Ok(PackSummary {
+            n: self.n,
+            p: self.p,
+            block_cols: self.block_cols,
+            blocks: self.block_sums.len(),
+            bytes: (HEADER_LEN + 8 * self.n * self.p + manifest_len) as u64,
+        })
+    }
+}
+
+/// Pack a resident dense design to `path`, streaming block-sized
+/// panels through [`HxdWriter`].
+pub fn pack_dense(
+    path: &Path,
+    design: &DenseMatrix,
+    block_cols: usize,
+    loss: Loss,
+    response: Option<&[f64]>,
+) -> Result<PackSummary> {
+    let (n, p) = (design.nrows(), design.ncols());
+    let mut w = HxdWriter::create(path, n, p, block_cols, loss)?;
+    let data = design.data();
+    let mut c = 0;
+    while c < p {
+        let e = (c + block_cols).min(p);
+        w.write_cols(&data[c * n..e * n])?;
+        c = e;
+    }
+    w.finish(response)
+}
+
+/// A [`ColumnSource`] over an `.hxd` file: buffered block reads with a
+/// depth-1 block cache, FNV verification on every block served, and
+/// the manifest's norms/response/loss available without touching the
+/// column data.
+pub struct HxdSource {
+    file: File,
+    path: PathBuf,
+    n: usize,
+    p: usize,
+    block_cols: usize,
+    loss: Loss,
+    block_sums: Vec<u64>,
+    col_norms: Vec<f64>,
+    response: Option<Vec<f64>>,
+    /// Depth-1 cache: (block index, decoded column values).
+    cache: Option<(usize, Vec<f64>)>,
+    bytes_read: u64,
+    #[cfg(feature = "paranoid")]
+    spot: usize,
+}
+
+impl HxdSource {
+    /// Open and validate `path`: header sanity, exact file size, and
+    /// the manifest hash are all checked before any column is served.
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut file =
+            File::open(path).map_err(|e| crate::err!("opening {}: {e}", path.display()))?;
+        let file_len = file
+            .metadata()
+            .map_err(|e| crate::err!("reading metadata of {}: {e}", path.display()))?
+            .len();
+        if file_len < HEADER_LEN as u64 {
+            return Err(crate::err!(
+                "truncated .hxd file {}: {file_len} bytes is smaller than the {HEADER_LEN}-byte \
+                 header",
+                path.display()
+            ));
+        }
+        let mut header = [0u8; HEADER_LEN];
+        file.read_exact(&mut header)
+            .map_err(|e| crate::err!("reading header of {}: {e}", path.display()))?;
+        if header[..8] != HXD_MAGIC {
+            return Err(crate::err!(
+                "{} is not an .hxd design (bad magic {:02x?})",
+                path.display(),
+                &header[..8]
+            ));
+        }
+        let version = u32_at(&header, 8);
+        if version != HXD_VERSION {
+            return Err(crate::err!(
+                "unsupported .hxd version {version} in {} (this reader speaks version \
+                 {HXD_VERSION})",
+                path.display()
+            ));
+        }
+        if u32_at(&header, 12) != ENDIAN_SENTINEL {
+            return Err(crate::err!(
+                "endianness sentinel mismatch in {} (written on an incompatible platform?)",
+                path.display()
+            ));
+        }
+        let n64 = u64_at(&header, 16);
+        let p64 = u64_at(&header, 24);
+        let bc64 = u64_at(&header, 32);
+        let flags = u64_at(&header, 40);
+        if flags & !KNOWN_FLAGS != 0 {
+            return Err(crate::err!(
+                "unknown flag bits {flags:#x} in {} (written by a newer format revision?)",
+                path.display()
+            ));
+        }
+        let loss = loss_from_tag((flags >> 1) & 0b11)?;
+        let has_response = flags & FLAG_RESPONSE != 0;
+        if n64 == 0 || p64 == 0 || bc64 == 0 {
+            return Err(crate::err!(
+                "degenerate header in {}: n = {n64}, p = {p64}, block_cols = {bc64}",
+                path.display()
+            ));
+        }
+        let data_bytes = n64
+            .checked_mul(p64)
+            .and_then(|v| v.checked_mul(8))
+            .ok_or_else(|| {
+                crate::err!(
+                    "header of {} declares n = {n64}, p = {p64}: n x p overflows the 64-bit \
+                     file layout",
+                    path.display()
+                )
+            })?;
+        let n = to_usize(n64, "n")?;
+        let p = to_usize(p64, "p")?;
+        let block_cols = to_usize(bc64, "block_cols")?;
+        let nblocks = div_ceil(p, block_cols);
+        let resp_len = if has_response { n as u64 } else { 0 };
+        let manifest_len = 8 * (nblocks as u64 + p as u64 + resp_len) + 16;
+        let expected = (HEADER_LEN as u64)
+            .checked_add(data_bytes)
+            .and_then(|v| v.checked_add(manifest_len))
+            .ok_or_else(|| {
+                crate::err!("declared size of {} overflows u64", path.display())
+            })?;
+        if file_len != expected {
+            return Err(crate::err!(
+                "truncated or oversized .hxd file {}: {file_len} bytes on disk, {expected} \
+                 expected from the header ({n}x{p}, {block_cols}-column blocks)",
+                path.display()
+            ));
+        }
+        file.seek(SeekFrom::Start(HEADER_LEN as u64 + data_bytes))
+            .map_err(|e| crate::err!("seeking manifest of {}: {e}", path.display()))?;
+        let mut manifest = vec![0u8; to_usize(manifest_len, "manifest length")?];
+        file.read_exact(&mut manifest)
+            .map_err(|e| crate::err!("reading manifest of {}: {e}", path.display()))?;
+        let body_len = manifest.len() - 16;
+        if manifest[body_len + 8..] != HXD_TAIL {
+            return Err(crate::err!(
+                "missing .hxd tail marker in {} (file truncated mid-write?)",
+                path.display()
+            ));
+        }
+        let stored = u64_at(&manifest, body_len);
+        let computed = fnv1a64(&manifest[..body_len]);
+        if stored != computed {
+            return Err(crate::err!(
+                "manifest checksum mismatch in {}: stored {stored:#018x}, computed \
+                 {computed:#018x} — the file is corrupt",
+                path.display()
+            ));
+        }
+        let body = &manifest[..body_len];
+        let block_sums: Vec<u64> =
+            body[..8 * nblocks].chunks_exact(8).map(|c| u64_at(c, 0)).collect();
+        let col_norms: Vec<f64> =
+            body[8 * nblocks..8 * (nblocks + p)].chunks_exact(8).map(f64_from_le).collect();
+        let response = if has_response {
+            Some(body[8 * (nblocks + p)..].chunks_exact(8).map(f64_from_le).collect())
+        } else {
+            None
+        };
+        Ok(Self {
+            file,
+            path: path.to_path_buf(),
+            n,
+            p,
+            block_cols,
+            loss,
+            block_sums,
+            col_norms,
+            response,
+            cache: None,
+            bytes_read: (HEADER_LEN as u64) + manifest_len,
+            #[cfg(feature = "paranoid")]
+            spot: 0,
+        })
+    }
+
+    /// The loss the design was packed for.
+    pub fn loss(&self) -> Loss {
+        self.loss
+    }
+
+    /// The packed response vector, if the file carries one.
+    pub fn response(&self) -> Option<&[f64]> {
+        self.response.as_deref()
+    }
+
+    /// Move the response out (the fit path owns its `y`).
+    pub fn take_response(&mut self) -> Option<Vec<f64>> {
+        self.response.take()
+    }
+
+    /// Checksum/cache block width.
+    pub fn block_cols(&self) -> usize {
+        self.block_cols
+    }
+
+    /// Load block `b` (columns `bs..be`) into the depth-1 cache,
+    /// verifying its checksum against the manifest.
+    fn ensure_block(&mut self, b: usize, bs: usize, be: usize) -> Result<()> {
+        if matches!(&self.cache, Some((cached, _)) if *cached == b) {
+            return Ok(());
+        }
+        let nbytes = (be - bs) * self.n * 8;
+        let mut bytes = vec![0u8; nbytes];
+        let off = (HEADER_LEN + bs * self.n * 8) as u64;
+        self.file
+            .seek(SeekFrom::Start(off))
+            .and_then(|_| self.file.read_exact(&mut bytes))
+            .map_err(|e| {
+                crate::err!(
+                    "reading block {b} (columns {bs}..{be}) of {}: {e}",
+                    self.path.display()
+                )
+            })?;
+        self.bytes_read += nbytes as u64;
+        let computed = fnv1a64(&bytes);
+        if computed != self.block_sums[b] {
+            return Err(crate::err!(
+                "checksum mismatch in block {b} (columns {bs}..{be}) of {}: stored {:#018x}, \
+                 computed {computed:#018x} — the file is corrupt",
+                self.path.display(),
+                self.block_sums[b]
+            ));
+        }
+        let vals: Vec<f64> = bytes.chunks_exact(8).map(f64_from_le).collect();
+        self.cache = Some((b, vals));
+        Ok(())
+    }
+}
+
+impl ColumnSource for HxdSource {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn col_norms(&self) -> &[f64] {
+        &self.col_norms
+    }
+
+    fn read_cols(&mut self, c0: usize, c1: usize) -> Result<Vec<f64>> {
+        check_range(c0, c1, self.p)?;
+        let n = self.n;
+        let mut out = Vec::with_capacity((c1 - c0) * n);
+        let mut c = c0;
+        while c < c1 {
+            let b = c / self.block_cols;
+            let bs = b * self.block_cols;
+            let be = (bs + self.block_cols).min(self.p);
+            self.ensure_block(b, bs, be)?;
+            if let Some((_, block)) = &self.cache {
+                let hi = be.min(c1);
+                out.extend_from_slice(&block[(c - bs) * n..(hi - bs) * n]);
+                c = hi;
+            }
+        }
+        #[cfg(feature = "paranoid")]
+        if c1 > c0 {
+            // Cross-check one sampled column of the served panel
+            // against the manifest norm, bitwise: a wrong norm would
+            // silently unsound every keep-mask built from it.
+            let j = c0 + self.spot % (c1 - c0);
+            self.spot = self.spot.wrapping_add(1);
+            let col = &out[(j - c0) * n..(j - c0 + 1) * n];
+            crate::invariants::assert_source_norm_identical(
+                self.col_norms[j],
+                blas::nrm2(col),
+                j,
+            );
+        }
+        Ok(out)
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.bytes_read
+    }
+
+    fn source_name(&self) -> &'static str {
+        "hxd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hxd-unit-{}-{tag}.hxd", std::process::id()))
+    }
+
+    fn sample(n: usize, p: usize) -> DenseMatrix {
+        let data = SyntheticSpec::new(n, p, p.min(3)).seed(9).generate();
+        match data.design {
+            crate::data::DesignMatrix::Dense(m) => m,
+            crate::data::DesignMatrix::Sparse(_) => unreachable!("dense by default"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_with_streamed_writes() {
+        let (n, p) = (5, 9);
+        let m = sample(n, p);
+        let y: Vec<f64> = (0..n).map(|i| i as f64 - 2.5).collect();
+        let path = tmp("roundtrip");
+        let mut w = HxdWriter::create(&path, n, p, 4, Loss::Logistic).expect("create");
+        // Uneven write granularity: 2 columns, then the remaining 7 —
+        // block boundaries (4 cols) must not care.
+        w.write_cols(&m.data()[..2 * n]).expect("first panel");
+        w.write_cols(&m.data()[2 * n..]).expect("second panel");
+        let summary = w.finish(Some(&y)).expect("finish");
+        assert_eq!((summary.n, summary.p, summary.blocks), (n, p, 3));
+        assert_eq!(
+            summary.bytes,
+            std::fs::metadata(&path).expect("metadata").len()
+        );
+
+        let mut src = HxdSource::open(&path).expect("open");
+        assert_eq!((src.n(), src.p()), (n, p));
+        assert_eq!(src.loss(), Loss::Logistic);
+        assert_eq!(src.response().expect("response"), &y[..]);
+        let full = src.read_cols(0, p).expect("full read");
+        assert_eq!(full, m.data());
+        // Straddle a block boundary and reread a cached block.
+        let mid = src.read_cols(3, 6).expect("straddle");
+        assert_eq!(mid, &m.data()[3 * n..6 * n]);
+        for j in 0..p {
+            let direct = blas::nrm2(m.col(j));
+            assert_eq!(src.col_norms()[j].to_bits(), direct.to_bits());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn block_cache_serves_repeat_reads_without_io() {
+        let (n, p) = (4, 6);
+        let path = tmp("cache");
+        pack_dense(&path, &sample(n, p), 8, Loss::Gaussian, None).expect("pack");
+        let mut src = HxdSource::open(&path).expect("open");
+        let first = src.read_cols(1, 3).expect("read");
+        let after_first = src.bytes_read();
+        let second = src.read_cols(1, 3).expect("cached read");
+        assert_eq!(first, second);
+        assert_eq!(src.bytes_read(), after_first, "cache hit must not reread the file");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_rejects_foreign_and_damaged_headers() {
+        let (n, p) = (3, 5);
+        let path = tmp("headers");
+        pack_dense(&path, &sample(n, p), 2, Loss::Gaussian, None).expect("pack");
+        let good = std::fs::read(&path).expect("read back");
+
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        std::fs::write(&path, &bad).expect("write");
+        let err = HxdSource::open(&path).expect_err("bad magic");
+        assert!(err.to_string().contains("bad magic"), "got: {err}");
+
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &bad).expect("write");
+        let err = HxdSource::open(&path).expect_err("bad version");
+        assert!(err.to_string().contains("unsupported .hxd version 99"), "got: {err}");
+
+        let mut bad = good.clone();
+        bad[12] ^= 0xff;
+        std::fs::write(&path, &bad).expect("write");
+        let err = HxdSource::open(&path).expect_err("bad sentinel");
+        assert!(err.to_string().contains("endianness sentinel"), "got: {err}");
+
+        let mut bad = good.clone();
+        bad[40] |= 0b1000;
+        std::fs::write(&path, &bad).expect("write");
+        let err = HxdSource::open(&path).expect_err("unknown flag");
+        assert!(err.to_string().contains("unknown flag bits"), "got: {err}");
+
+        std::fs::write(&path, &good[..good.len() - 9]).expect("truncate");
+        let err = HxdSource::open(&path).expect_err("truncated");
+        assert!(err.to_string().contains("truncated or oversized"), "got: {err}");
+
+        std::fs::write(&path, &good[..20]).expect("sub-header truncate");
+        let err = HxdSource::open(&path).expect_err("shorter than header");
+        assert!(err.to_string().contains("smaller than the 48-byte header"), "got: {err}");
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_rejects_overflowing_shapes() {
+        // A hand-built header whose n×p does not fit in u64.
+        let path = tmp("overflow");
+        let mut header = vec![0u8; HEADER_LEN];
+        header[..8].copy_from_slice(&HXD_MAGIC);
+        header[8..12].copy_from_slice(&HXD_VERSION.to_le_bytes());
+        header[12..16].copy_from_slice(&ENDIAN_SENTINEL.to_le_bytes());
+        header[16..24].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+        header[24..32].copy_from_slice(&3u64.to_le_bytes());
+        header[32..40].copy_from_slice(&64u64.to_le_bytes());
+        std::fs::write(&path, &header).expect("write");
+        let err = HxdSource::open(&path).expect_err("overflow");
+        assert!(err.to_string().contains("overflows the 64-bit file layout"), "got: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupted_block_fails_on_read_not_open() {
+        let (n, p) = (4, 10);
+        let path = tmp("corrupt-block");
+        pack_dense(&path, &sample(n, p), 3, Loss::Gaussian, None).expect("pack");
+        let mut bytes = std::fs::read(&path).expect("read back");
+        // Flip one byte inside block 2 (columns 6..9).
+        let victim = HEADER_LEN + 6 * n * 8 + 5;
+        bytes[victim] ^= 0x01;
+        std::fs::write(&path, &bytes).expect("write");
+        let mut src = HxdSource::open(&path).expect("manifest still intact");
+        assert_eq!(src.read_cols(0, 3).expect("block 0 clean").len(), 3 * n);
+        let err = src.read_cols(6, 8).expect_err("block 2 corrupt");
+        let msg = err.to_string();
+        assert!(msg.contains("checksum mismatch in block 2"), "got: {msg}");
+        assert!(msg.contains("corrupt"), "got: {msg}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupted_manifest_fails_at_open() {
+        let (n, p) = (3, 4);
+        let path = tmp("corrupt-manifest");
+        pack_dense(&path, &sample(n, p), 2, Loss::Gaussian, None).expect("pack");
+        let mut bytes = std::fs::read(&path).expect("read back");
+        // Flip a norm byte (inside the manifest, after the block sums).
+        let norms_off = HEADER_LEN + n * p * 8 + 2 * 8;
+        bytes[norms_off] ^= 0x10;
+        std::fs::write(&path, &bytes).expect("write");
+        let err = HxdSource::open(&path).expect_err("manifest corrupt");
+        assert!(err.to_string().contains("manifest checksum mismatch"), "got: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn writer_misuse_is_rejected() {
+        let path = tmp("misuse");
+        let err = HxdWriter::create(&path, 3, 4, 0, Loss::Gaussian).expect_err("zero block");
+        assert!(err.to_string().contains("at least 1 column"), "got: {err}");
+        let err = HxdWriter::create(&path, 0, 4, 2, Loss::Gaussian).expect_err("empty");
+        assert!(err.to_string().contains("empty design"), "got: {err}");
+
+        let m = sample(3, 4);
+        let mut w = HxdWriter::create(&path, 3, 4, 2, Loss::Gaussian).expect("create");
+        let err = w.write_cols(&m.data()[..4]).expect_err("ragged panel");
+        assert!(err.to_string().contains("whole number"), "got: {err}");
+        w.write_cols(&m.data()[..2 * 3]).expect("two columns");
+        let err = w.finish(None).expect_err("early finish");
+        assert!(err.to_string().contains("packed only 2 of 4"), "got: {err}");
+
+        let mut w = HxdWriter::create(&path, 3, 4, 2, Loss::Gaussian).expect("recreate");
+        w.write_cols(m.data()).expect("all columns");
+        let err = w.write_cols(&m.data()[..3]).expect_err("past p");
+        assert!(err.to_string().contains("exceed p = 4"), "got: {err}");
+
+        let mut w = HxdWriter::create(&path, 3, 4, 2, Loss::Gaussian).expect("recreate");
+        w.write_cols(m.data()).expect("all columns");
+        let err = w.finish(Some(&[1.0, 2.0])).expect_err("short response");
+        assert!(err.to_string().contains("expected n = 3"), "got: {err}");
+
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,207 @@
+//! Out-of-core design storage.
+//!
+//! The screening regimes this crate targets are exactly the ones where
+//! the n×p design stops fitting in RAM, so registration must be able
+//! to stream column panels from disk instead of slicing a resident
+//! copy. This module provides that seam:
+//!
+//! * [`ColumnSource`] — the staging contract: contiguous column-range
+//!   reads producing column-major `Vec<f64>` panels, plus precomputed
+//!   per-column norms so [`crate::runtime::RegisteredDesign`] never
+//!   needs a resident pass over the data.
+//! * [`ResidentSource`] — wraps an in-memory column-major buffer; the
+//!   classic `register_design(&[f64])` path routes through it.
+//! * [`HxdSource`] / [`HxdWriter`] / [`pack_dense`] — the on-disk
+//!   `.hxd` columnar format (see [`hxd`] for the byte layout): packed
+//!   little-endian f64 column blocks, per-block FNV-1a checksums
+//!   verified on every read, and a trailing manifest carrying the
+//!   column norms.
+//! * [`read_csv`] — CSV ingestion for `hx pack`.
+//!
+//! The sharded upload pipeline (`runtime/shard.rs`) pulls its panels
+//! through this trait, so shard k+1 is staged from the source while
+//! shard k uploads — with an on-disk source the peak transient
+//! footprint drops from ~2× the design to the engines' own shards
+//! plus two in-flight panels. The same seam is where a future PJRT
+//! multi-device fan-out will load from.
+//!
+//! Everything here is f64-exact (enforced by the xtask linter's no-f32
+//! rule) and clock-free (the kernel clock ban covers `storage/`):
+//! timing of reads belongs to the pipeline that calls us.
+
+#![forbid(unsafe_code)]
+
+mod csv;
+mod hxd;
+
+pub use csv::read_csv;
+pub use hxd::{pack_dense, HxdSource, HxdWriter, PackSummary, DEFAULT_BLOCK_COLS, HXD_VERSION};
+
+use crate::error::Result;
+use crate::linalg::blas;
+
+/// A provider of contiguous column panels for design registration.
+///
+/// Implementations promise that `read_cols(c0, c1)` returns the exact
+/// bits of columns `c0..c1` in column-major order (`(c1-c0)·n` values)
+/// and that [`ColumnSource::col_norms`] equals `blas::nrm2` of each
+/// column bitwise — the sharded reduction layer rebuilds keep-masks
+/// from these norms, so an approximate norm would silently unsound the
+/// screen.
+pub trait ColumnSource: Send {
+    /// Number of rows (observations).
+    fn n(&self) -> usize;
+
+    /// Number of columns (features).
+    fn p(&self) -> usize;
+
+    /// Per-column ℓ2 norms, bitwise equal to `blas::nrm2` on the
+    /// column data this source serves.
+    fn col_norms(&self) -> &[f64];
+
+    /// Read columns `c0..c1` as one contiguous column-major panel.
+    /// `c0 == c1` yields an empty panel (degenerate shards are legal).
+    fn read_cols(&mut self, c0: usize, c1: usize) -> Result<Vec<f64>>;
+
+    /// Cumulative bytes pulled from the underlying storage so far
+    /// (file reads or resident copies). The upload pipeline reports
+    /// deltas of this through `UploadStats::bytes_read`.
+    fn bytes_read(&self) -> u64;
+
+    /// Short identifier for diagnostics: `"resident"`, `"hxd"`.
+    fn source_name(&self) -> &'static str;
+}
+
+/// Column range sanity shared by every source.
+fn check_range(c0: usize, c1: usize, p: usize) -> Result<()> {
+    if c0 > c1 || c1 > p {
+        return Err(crate::err!("column range {c0}..{c1} out of bounds for p = {p}"));
+    }
+    Ok(())
+}
+
+/// 64-bit FNV-1a over a byte slice (the `.hxd` checksum; zero-dep).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_update(0xcbf2_9ce4_8422_2325, bytes)
+}
+
+/// Streaming FNV-1a step: fold `bytes` into running hash `h`.
+pub(crate) fn fnv1a64_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A [`ColumnSource`] over an in-memory column-major buffer.
+///
+/// This is the resident end of the seam: `register_design(&[f64])`
+/// wraps its input in one of these, so the pipeline has a single
+/// staging code path whether the design lives in RAM or on disk.
+pub struct ResidentSource {
+    n: usize,
+    p: usize,
+    data: Vec<f64>,
+    col_norms: Vec<f64>,
+    bytes_read: u64,
+}
+
+impl ResidentSource {
+    /// Take ownership of a column-major buffer of `n`×`p` values.
+    pub fn new(data: Vec<f64>, n: usize, p: usize) -> Result<Self> {
+        let expect = n
+            .checked_mul(p)
+            .ok_or_else(|| crate::err!("design shape {n}x{p} overflows usize"))?;
+        if data.len() != expect {
+            return Err(crate::err!(
+                "design buffer has {} entries, expected {n}x{p} = {expect}",
+                data.len()
+            ));
+        }
+        let col_norms = (0..p).map(|j| blas::nrm2(&data[j * n..(j + 1) * n])).collect();
+        Ok(Self { n, p, data, col_norms, bytes_read: 0 })
+    }
+
+    /// Copy a borrowed column-major slice (the `register_design` path).
+    pub fn copy_of(col_major: &[f64], n: usize, p: usize) -> Result<Self> {
+        Self::new(col_major.to_vec(), n, p)
+    }
+}
+
+impl ColumnSource for ResidentSource {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn col_norms(&self) -> &[f64] {
+        &self.col_norms
+    }
+
+    fn read_cols(&mut self, c0: usize, c1: usize) -> Result<Vec<f64>> {
+        check_range(c0, c1, self.p)?;
+        let panel = self.data[c0 * self.n..c1 * self.n].to_vec();
+        self.bytes_read += 8 * panel.len() as u64;
+        Ok(panel)
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.bytes_read
+    }
+
+    fn source_name(&self) -> &'static str {
+        "resident"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        // Streaming in two chunks equals one pass.
+        let whole = fnv1a64(b"hessian");
+        let split = fnv1a64_update(fnv1a64(b"hess"), b"ian");
+        assert_eq!(whole, split);
+    }
+
+    #[test]
+    fn resident_source_reads_exact_bits_and_counts_bytes() {
+        let (n, p) = (3, 4);
+        let data: Vec<f64> = (0..n * p).map(|i| i as f64 * 0.5 - 1.0).collect();
+        let mut src = ResidentSource::copy_of(&data, n, p).expect("valid shape");
+        assert_eq!(src.n(), n);
+        assert_eq!(src.p(), p);
+        assert_eq!(src.source_name(), "resident");
+        let panel = src.read_cols(1, 3).expect("in range");
+        assert_eq!(panel, &data[n..3 * n]);
+        assert_eq!(src.bytes_read(), (2 * n * 8) as u64);
+        // Empty range is legal (degenerate shards).
+        assert!(src.read_cols(2, 2).expect("empty ok").is_empty());
+        // Norms match a direct nrm2 bitwise.
+        for j in 0..p {
+            let direct = blas::nrm2(&data[j * n..(j + 1) * n]);
+            assert_eq!(src.col_norms()[j].to_bits(), direct.to_bits());
+        }
+    }
+
+    #[test]
+    fn resident_source_rejects_bad_shapes_and_ranges() {
+        let err = ResidentSource::new(vec![0.0; 5], 2, 3).expect_err("5 != 6");
+        assert!(err.to_string().contains("expected 2x3"), "got: {err}");
+        let mut src = ResidentSource::new(vec![0.0; 6], 2, 3).expect("valid");
+        let err = src.read_cols(2, 4).expect_err("past p");
+        assert!(err.to_string().contains("out of bounds"), "got: {err}");
+        let err = src.read_cols(2, 1).expect_err("inverted");
+        assert!(err.to_string().contains("out of bounds"), "got: {err}");
+    }
+}

@@ -1,0 +1,17 @@
+//! Shared helpers for the integration suites.
+//!
+//! `HX_TEST_SHAPE=small` shrinks every suite's problem shapes so slow
+//! interpreters (miri, the sanitizer jobs) can run the same tests
+//! end-to-end in reasonable time; the defaults stay the CI-native
+//! shapes. Each call site picks its own shrunk preset so raggedness
+//! properties (p not divisible by the shard counts under test) are
+//! preserved at both sizes.
+
+/// Pick `(n, p)` by the `HX_TEST_SHAPE` env knob: `small` selects the
+/// shrunk preset, anything else (including unset) the default.
+pub fn test_shape(default: (usize, usize), small: (usize, usize)) -> (usize, usize) {
+    match std::env::var("HX_TEST_SHAPE") {
+        Ok(v) if v.trim().eq_ignore_ascii_case("small") => small,
+        _ => default,
+    }
+}

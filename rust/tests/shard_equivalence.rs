@@ -11,9 +11,13 @@
 //!
 //! The CI matrix drives the same tests across configurations via env
 //! knobs: `HX_TEST_THREADS` (threads per shard / reference engine
-//! threads, default 1) and `HX_TEST_SHARDS` (an extra shard count to
-//! include, on top of the always-tested {1, 2, 4}).
+//! threads, default 1), `HX_TEST_SHARDS` (an extra shard count to
+//! include, on top of the always-tested {1, 2, 4}), and
+//! `HX_TEST_SHAPE=small` (shrunk shapes for miri/sanitizer runs).
 
+mod common;
+
+use common::test_shape;
 use hessian_screening::data::{DesignMatrix, SyntheticSpec};
 use hessian_screening::loss::Loss;
 use hessian_screening::path::{PathFitter, PathSettings};
@@ -50,8 +54,9 @@ fn shard_counts() -> Vec<usize> {
 
 #[test]
 fn sharded_correlation_bit_identical_ragged() {
-    // p = 1003 is not divisible by 2 or 4: the final shard is ragged.
-    let (n, p) = (60, 1_003);
+    // p is not divisible by 2 or 4 at either size: the final shard is
+    // ragged.
+    let (n, p) = test_shape((60, 1_003), (16, 103));
     let data = SyntheticSpec::new(n, p, 8).rho(0.3).seed(41).generate();
     let dense = dense_of(&data);
     let reference = RuntimeEngine::native_threaded(test_threads());
@@ -75,7 +80,7 @@ fn sharded_correlation_bit_identical_ragged() {
 
 #[test]
 fn sharded_kkt_sweeps_bit_identical_gaussian_and_logistic() {
-    let (n, p) = (50, 407); // ragged for 2 and 4 shards
+    let (n, p) = test_shape((50, 407), (14, 53)); // ragged for 2 and 4 shards
     for loss in [Loss::Gaussian, Loss::Logistic] {
         let data = SyntheticSpec::new(n, p, 6)
             .rho(0.25)
@@ -166,7 +171,7 @@ fn sharded_gram_block_bit_identical_ragged_rows() {
 /// unsharded serial fits for k ∈ {1, 2, 4}, Gaussian and logistic.
 #[test]
 fn sharded_path_fits_bit_identical_to_unsharded() {
-    let (n, p) = (100, 902); // ragged for 4 shards
+    let (n, p) = test_shape((100, 902), (24, 61)); // ragged for 4 shards
     for loss in [Loss::Gaussian, Loss::Logistic] {
         let data = SyntheticSpec::new(n, p, 8)
             .rho(0.35)
@@ -206,19 +211,36 @@ fn sharded_path_fits_bit_identical_to_unsharded() {
 
 #[test]
 fn upload_pipeline_is_observable() {
-    let (n, p) = (40, 256);
+    let (n, p) = test_shape((40, 256), (12, 64));
+    let shards = 4usize;
     let data = SyntheticSpec::new(n, p, 5).seed(59).generate();
     let dense = dense_of(&data);
     // Unsharded engines report no upload pipeline.
     assert!(RuntimeEngine::native().upload_stats().is_none());
-    let engine = RuntimeEngine::native_sharded(4, 1);
+    let engine = RuntimeEngine::native_sharded(shards, 1);
     let reg = engine.register_design(dense.data(), n, p).unwrap();
     // A sweep blocks on every shard, so afterwards the pipeline has
     // fully drained and the counters must balance.
     let _ = engine.correlation(&reg, &data.response).unwrap().unwrap();
     let u = engine.upload_stats().expect("sharded engines expose stats");
-    assert_eq!(u.staged, 4);
-    assert_eq!(u.uploaded, 4);
-    assert!(u.overlapped <= 3, "only the pipelined shards can overlap");
+    assert_eq!(u.staged, shards);
+    assert_eq!(u.uploaded, shards);
+    assert!(u.overlapped <= shards - 1, "only the pipelined shards can overlap");
     assert!(u.stage_seconds >= 0.0 && u.upload_seconds >= 0.0 && u.stall_seconds >= 0.0);
+    // Out-of-core instrumentation: staging read every design byte
+    // exactly once, the drained pipeline holds nothing in flight, and
+    // at no instant were more than two shard panels resident.
+    assert_eq!(u.bytes_read, (8 * n * p) as u64, "one pass over the design");
+    assert!(u.read_seconds >= 0.0 && u.read_seconds <= u.stage_seconds + 1e-9);
+    assert_eq!(u.inflight_bytes, 0, "drained pipeline still holds staged bytes");
+    let chunk = (p + shards - 1) / shards;
+    assert_eq!(u.max_panel_bytes, (8 * n * chunk) as u64, "panel = one shard");
+    assert!(u.max_panel_bytes < (8 * n * p) as u64, "never a full n×p panel");
+    assert!(
+        u.peak_inflight_bytes >= u.max_panel_bytes
+            && u.peak_inflight_bytes <= 2 * u.max_panel_bytes,
+        "peak in-flight {} outside [1, 2] panels of {}",
+        u.peak_inflight_bytes,
+        u.max_panel_bytes
+    );
 }

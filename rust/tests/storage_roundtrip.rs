@@ -1,0 +1,228 @@
+//! Integration: the out-of-core `.hxd` path — pack → stream → fit —
+//! is bit-identical to the resident path, stays inside the two-panel
+//! memory bound, and fails loudly (never hangs, never panics) on
+//! corrupt or truncated files.
+//!
+//! `HX_TEST_SHAPE=small` shrinks the shapes for miri/sanitizer runs;
+//! both presets keep p ragged for the shard counts under test and keep
+//! p not a multiple of the block widths, so the packed layout always
+//! exercises a ragged tail block.
+
+mod common;
+
+use std::path::PathBuf;
+
+use common::test_shape;
+use hessian_screening::data::{DesignMatrix, SyntheticSpec};
+use hessian_screening::linalg::{blas, DenseMatrix};
+use hessian_screening::loss::Loss;
+use hessian_screening::path::{PathFitter, PathSettings};
+use hessian_screening::runtime::{EngineSweep, RuntimeEngine, ShardedDesignView};
+use hessian_screening::screening::ScreeningKind;
+use hessian_screening::storage::{pack_dense, ColumnSource, HxdSource, DEFAULT_BLOCK_COLS};
+
+fn dense_of(data: &hessian_screening::data::Dataset) -> &DenseMatrix {
+    match &data.design {
+        DesignMatrix::Dense(m) => m,
+        _ => unreachable!("test data is dense"),
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hxd-it-{}-{tag}.hxd", std::process::id()))
+}
+
+/// Property-style roundtrip: for ragged p and odd block widths, every
+/// column read back from disk is bit-identical to the packed design,
+/// and the manifest norms are bit-identical to a blas recompute.
+#[test]
+fn pack_then_read_is_bitwise_across_block_widths() {
+    let (n, p) = test_shape((40, 157), (12, 37));
+    let data = SyntheticSpec::new(n, p, p.min(6)).rho(0.3).seed(61).generate();
+    let dense = dense_of(&data);
+    for bc in [1usize, 3, DEFAULT_BLOCK_COLS, p, p + 5] {
+        let path = tmp(&format!("rt-{bc}"));
+        let summary = pack_dense(&path, dense, bc, Loss::Gaussian, None).expect("pack");
+        assert_eq!((summary.n, summary.p), (n, p));
+        let mut src = HxdSource::open(&path).expect("open");
+        assert_eq!((src.n(), src.p()), (n, p));
+        assert!(src.response().is_none());
+        // Read in deliberately odd ranges that straddle block edges.
+        let mut c0 = 0usize;
+        let widths = [1usize, bc.max(2) - 1, bc, bc + 2, 7];
+        let mut w = 0usize;
+        while c0 < p {
+            let c1 = (c0 + widths[w % widths.len()]).min(p);
+            let panel = src.read_cols(c0, c1).expect("read");
+            for (k, j) in (c0..c1).enumerate() {
+                let got = &panel[k * n..(k + 1) * n];
+                let want = dense.col(j);
+                assert!(
+                    got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "bc={bc}: column {j} changed bits through the file"
+                );
+            }
+            c0 = c1;
+            w += 1;
+        }
+        for (j, &norm) in src.col_norms().iter().enumerate() {
+            assert_eq!(
+                norm.to_bits(),
+                blas::nrm2(dense.col(j)).to_bits(),
+                "bc={bc}: manifest norm {j}"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// THE acceptance bar for this subsystem: `hx fit --design file.hxd`
+/// semantics (stream from disk through the sharded pipeline, fit over
+/// the host-side view) produce bit-identical paths to the resident
+/// fit of the same data — coefficients, λ grids, deviance ratios,
+/// active-set sizes, and per-step screening counts — across
+/// shards ∈ {1, 4} × threads ∈ {1, 4}, Gaussian and logistic.
+#[test]
+fn hxd_fit_is_bit_identical_to_resident_fit() {
+    for loss in [Loss::Gaussian, Loss::Logistic] {
+        let (n, p) = test_shape((60, 402), (16, 46));
+        let data = SyntheticSpec::new(n, p, 6)
+            .rho(0.3)
+            .loss(loss)
+            .seed(71)
+            .generate();
+        let dense = dense_of(&data);
+        let path = tmp(&format!("fit-{loss:?}"));
+        // A block width that divides neither p nor the shard chunks.
+        pack_dense(&path, dense, 19, loss, Some(&data.response)).expect("pack");
+        let mut settings = PathSettings::default();
+        settings.path_length = 25;
+        let fitter = PathFitter::new(loss, ScreeningKind::Hessian).with_settings(settings);
+        for shards in [1usize, 4] {
+            for threads in [1usize, 4] {
+                let tag = format!("{loss:?} shards={shards} threads={threads}");
+                // Resident reference fit.
+                let engine_a = RuntimeEngine::native_sharded(shards, threads);
+                let sweep_a = EngineSweep::new(&engine_a, dense, loss).unwrap().unwrap();
+                let a = fitter.fit_with_engine(&data.design, &data.response, Some(&sweep_a));
+                // Streamed fit: design and response both from the file.
+                let mut src = HxdSource::open(&path).expect("open");
+                assert_eq!(src.loss(), loss, "{tag}: loss tag survives the file");
+                let y = src.take_response().expect("packed response");
+                assert_eq!(y, data.response, "{tag}: response survives the file");
+                let engine_b = RuntimeEngine::native_sharded(shards, threads);
+                let sweep_b = EngineSweep::from_source(&engine_b, Box::new(src), loss)
+                    .unwrap()
+                    .unwrap();
+                let view = ShardedDesignView::new(&sweep_b.design).expect("host view");
+                let b = fitter.fit_with_engine(&view, &y, Some(&sweep_b));
+                assert_eq!(a.lambdas, b.lambdas, "{tag}: λ grid");
+                assert_eq!(a.betas, b.betas, "{tag}: coefficients");
+                assert_eq!(a.dev_ratios, b.dev_ratios, "{tag}: deviance ratios");
+                assert_eq!(a.converged, b.converged, "{tag}: convergence");
+                assert_eq!(a.steps.len(), b.steps.len(), "{tag}: step count");
+                for (sa, sb) in a.steps.iter().zip(&b.steps) {
+                    assert_eq!(sa.active, sb.active, "{tag}: active-set size");
+                    assert_eq!(sa.screened, sb.screened, "{tag}: screened count");
+                    assert_eq!(sa.passes, sb.passes, "{tag}: CD passes");
+                }
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// The memory bound the subsystem exists for: streaming registration
+/// reads each design byte once and never holds more than two shard
+/// panels (and in particular never a full n×p buffer).
+#[test]
+fn streamed_registration_stays_within_two_panels() {
+    let (n, p) = test_shape((50, 322), (14, 46));
+    let data = SyntheticSpec::new(n, p, 5).seed(83).generate();
+    let dense = dense_of(&data);
+    let path = tmp("mem");
+    pack_dense(&path, dense, 11, Loss::Gaussian, None).expect("pack");
+    for shards in [2usize, 5] {
+        let src = HxdSource::open(&path).expect("open");
+        let engine = RuntimeEngine::native_sharded(shards, 1);
+        let reg = engine.register_source(Box::new(src)).expect("register");
+        let _ = engine.correlation(&reg, &data.response).unwrap().unwrap();
+        let u = engine.upload_stats().expect("stats");
+        let chunk = (p + shards - 1) / shards;
+        assert_eq!(u.staged, shards);
+        assert_eq!(u.uploaded, shards);
+        assert_eq!(u.bytes_read, (8 * n * p) as u64, "{shards} shards: one pass");
+        assert_eq!(u.inflight_bytes, 0, "{shards} shards: drained");
+        assert_eq!(u.max_panel_bytes, (8 * n * chunk) as u64);
+        assert!(
+            u.max_panel_bytes < (8 * n * p) as u64,
+            "{shards} shards: a full-design panel was staged"
+        );
+        assert!(
+            u.peak_inflight_bytes <= 2 * u.max_panel_bytes,
+            "{shards} shards: peak {} exceeds two panels of {}",
+            u.peak_inflight_bytes,
+            u.max_panel_bytes
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+fn flip_byte(path: &PathBuf, offset: usize) {
+    let mut bytes = std::fs::read(path).expect("read file");
+    bytes[offset] ^= 0xff;
+    std::fs::write(path, bytes).expect("write file");
+}
+
+/// Corruption in a block that only a *later* shard touches must fail
+/// the fit with a descriptive error from the stager thread — not a
+/// panic, not a hang — while a corrupted first shard fails
+/// registration itself, and truncation fails at open.
+#[test]
+fn corrupt_or_truncated_files_fail_loudly_on_every_surface() {
+    let (n, p) = test_shape((30, 97), (10, 29));
+    let data = SyntheticSpec::new(n, p, 4).seed(89).generate();
+    let dense = dense_of(&data);
+    let path = tmp("corrupt");
+    pack_dense(&path, dense, 5, Loss::Gaussian, Some(&data.response)).expect("pack");
+
+    // Flip a data byte in the very last column: with 4 shards only the
+    // final shard's staging read (in the stager thread) sees it.
+    flip_byte(&path, 48 + (p - 1) * n * 8 + 3);
+    let mut src = HxdSource::open(&path).expect("open still succeeds: manifest is intact");
+    let y = src.take_response().expect("response");
+    let engine = RuntimeEngine::native_sharded(4, 1);
+    let reg = engine
+        .register_source(Box::new(src))
+        .expect("shard 0 is clean, registration returns");
+    let err = match engine.correlation(&reg, &y) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("correlation over a corrupt shard must fail"),
+    };
+    assert!(
+        err.contains("checksum mismatch") && err.contains("corrupt"),
+        "undiagnostic error: {err}"
+    );
+
+    // Same corruption in column 0: the synchronous first-shard read
+    // surfaces the error from register_source itself.
+    pack_dense(&path, dense, 5, Loss::Gaussian, None).expect("repack");
+    flip_byte(&path, 48 + 2);
+    let src = HxdSource::open(&path).expect("open");
+    let err = match engine.register_source(Box::new(src)) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("registering a corrupt first shard must fail"),
+    };
+    assert!(err.contains("checksum mismatch"), "undiagnostic error: {err}");
+
+    // Truncation is caught at open, before any column is trusted.
+    pack_dense(&path, dense, 5, Loss::Gaussian, None).expect("repack");
+    let bytes = std::fs::read(&path).expect("read");
+    std::fs::write(&path, &bytes[..bytes.len() - 8]).expect("truncate");
+    let err = match HxdSource::open(&path) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("opening a truncated file must fail"),
+    };
+    assert!(err.contains("truncated"), "undiagnostic error: {err}");
+    let _ = std::fs::remove_file(&path);
+}

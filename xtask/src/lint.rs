@@ -7,10 +7,11 @@
 //!
 //! * `safety-comment` — every `unsafe` token carries a `// SAFETY:`
 //!   comment on the same line or within the three lines above it.
-//! * `no-f32` — no `f32` token in `hessian/`, `screening/`, `solver/`
-//!   or `runtime/shard.rs`: the screening math and the Gram/Hessian
-//!   panels are f64-exact by contract (`Backend::is_exact`), and a
-//!   stray cast would corrupt the path silently.
+//! * `no-f32` — no `f32` token in `hessian/`, `screening/`, `solver/`,
+//!   `runtime/shard.rs` or `storage/`: the screening math, the
+//!   Gram/Hessian panels, and the on-disk `.hxd` column bytes are
+//!   f64-exact by contract (`Backend::is_exact`; pack→read is
+//!   bitwise), and a stray cast would corrupt the path silently.
 //! * `no-unwrap` — no `.unwrap()` in library code outside tests and
 //!   `cli.rs`/`main.rs`, unless the line (or the line above) carries
 //!   an `// INVARIANT:` justification (the lock-poison policy).
@@ -18,8 +19,9 @@
 //!   `runtime/shard.rs` and `coordinator/`: everything else uses
 //!   scoped threads so no worker can outlive its data.
 //! * `no-kernel-clock` — no `Instant::now()` in the per-column kernel
-//!   files (`linalg/`, `runtime/native.rs`): timing belongs in the
-//!   drivers, never in inner loops.
+//!   files (`linalg/`, `runtime/native.rs`) or the `storage/` read
+//!   path: timing belongs in the drivers (the shard pipeline times its
+//!   own staging reads), never in inner loops or I/O decode loops.
 //!
 //! Each rule has its own allowlist file under `xtask/lint/allow/`
 //! (entries are `<path>` or `<path>:<line>` relative to `rust/src`;
@@ -33,12 +35,19 @@ use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 /// Directories (trailing `/`) or exact files where `f32` is forbidden.
-const F32_FORBIDDEN: &[&str] = &["hessian/", "screening/", "solver/", "runtime/shard.rs"];
+const F32_FORBIDDEN: &[&str] = &[
+    "hessian/",
+    "screening/",
+    "solver/",
+    "runtime/shard.rs",
+    "storage/",
+];
 /// The only homes of raw `std::thread::spawn` (the upload pipeline and
 /// the experiment pool); everything else must use `thread::scope`.
 const SPAWN_ALLOWED: &[&str] = &["runtime/shard.rs", "coordinator/"];
-/// Per-column kernel files: no wall-clock reads in inner loops.
-const KERNEL_FILES: &[&str] = &["linalg/", "runtime/native.rs"];
+/// Per-column kernel files and the storage read path: no wall-clock
+/// reads in inner loops (the shard pipeline times staging externally).
+const KERNEL_FILES: &[&str] = &["linalg/", "runtime/native.rs", "storage/"];
 /// Binary/CLI surfaces where `.unwrap()` on user input is acceptable.
 const UNWRAP_EXEMPT: &[&str] = &["cli.rs", "main.rs"];
 
@@ -588,6 +597,9 @@ mod tests {
         assert_eq!(rules_of(&check_one("hessian/mod.rs", bad)), vec!["no-f32"]);
         assert_eq!(rules_of(&check_one("screening/mod.rs", bad)), vec!["no-f32"]);
         assert_eq!(rules_of(&check_one("runtime/shard.rs", bad)), vec!["no-f32"]);
+        // .hxd bytes are f64-exact: a cast anywhere in storage/ would
+        // silently break the pack→read bitwise contract.
+        assert_eq!(rules_of(&check_one("storage/hxd.rs", bad)), vec!["no-f32"]);
         // pjrt may buffer-convert; the rule does not apply there.
         assert!(check_one("runtime/pjrt.rs", bad).is_empty());
         // prose about f32 in a comment is not a token.
@@ -632,6 +644,10 @@ mod tests {
         );
         assert_eq!(
             rules_of(&check_one("runtime/native.rs", bad)),
+            vec!["no-kernel-clock"]
+        );
+        assert_eq!(
+            rules_of(&check_one("storage/hxd.rs", bad)),
             vec!["no-kernel-clock"]
         );
         // Drivers may time freely.
