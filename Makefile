@@ -11,6 +11,8 @@
 #   make bench-compile   compile benches without running them
 #   make bench-ci        quick sweep bench -> $(BENCH_JSON) (guarded:
 #                        a failed bench publishes no JSON)
+#   make bench-baseline  regenerate $(BENCH_BASELINE) from a real bench
+#                        run (refuses on a dirty bench build / tree)
 #   make perf-gate       diff $(BENCH_JSON) against $(BENCH_BASELINE)
 #   make check-features  cargo check the feature powerset (pjrt,
 #                        paranoid, none)
@@ -39,8 +41,8 @@ NIGHTLY ?= nightly
 TSAN_TARGET ?= x86_64-unknown-linux-gnu
 
 .PHONY: all build test test-rust artifacts bench bench-compile bench-ci \
-        perf-gate check-features check-oac lint test-paranoid miri tsan \
-        ci fmt clippy clean
+        bench-baseline perf-gate check-features check-oac lint \
+        test-paranoid miri tsan ci fmt clippy clean
 
 all: build
 
@@ -79,10 +81,31 @@ bench-ci:
 	         rm -f $(BENCH_JSON).tmp; exit 1; }
 	mv $(BENCH_JSON).tmp $(BENCH_JSON)
 
+# Regenerate the committed baseline from a real bench run on this
+# machine. Guard rails: refuses when the bench sources are dirty in
+# git (a baseline must be attributable to a commit), and goes through
+# a temp file so a failed bench never clobbers the old baseline.
+# Follow-up: eyeball the diff, then commit $(BENCH_BASELINE).
+bench-baseline:
+	@if ! git diff --quiet HEAD -- benches rust Cargo.toml Cargo.lock \
+	    2>/dev/null; then \
+	    echo "bench-baseline: bench sources are dirty in git; commit or" \
+	         "stash first so the baseline is attributable" >&2; \
+	    exit 1; \
+	fi
+	rm -f $(BENCH_BASELINE).tmp
+	$(CARGO) bench --bench micro_kernels -- $(BENCH_FLAGS) \
+	    --json $(BENCH_BASELINE).tmp \
+	    || { echo "bench failed; $(BENCH_BASELINE) untouched" >&2; \
+	         rm -f $(BENCH_BASELINE).tmp; exit 1; }
+	mv $(BENCH_BASELINE).tmp $(BENCH_BASELINE)
+	@echo "wrote $(BENCH_BASELINE); review the diff and commit it"
+
 # Perf-trajectory gate: compare the fresh bench record against the
 # committed baseline (warn > 1.25x, fail > 1.5x). Refresh ritual:
-# download a trusted CI run's BENCH_sweeps artifact and commit it as
-# $(BENCH_BASELINE) — see README "Perf trajectory".
+# `make bench-baseline` on a quiet machine (or download a trusted CI
+# run's BENCH_sweeps artifact), then commit $(BENCH_BASELINE) — see
+# README "Perf trajectory".
 perf-gate:
 	$(PYTHON) python/ci/bench_compare.py $(BENCH_JSON) $(BENCH_BASELINE)
 
@@ -104,7 +127,7 @@ check-oac: build
 	./target/release/hx pack --out "$$tmp/design.hxd" \
 	    --n 120 --p 601 --s 8 --seed 7 --block-cols 37 && \
 	./target/release/hx fit --design "$$tmp/design.hxd" \
-	    --shards 3 --threads 2 --path-length 20 && \
+	    --shards 3 --threads 2 --path-length 20 --profile && \
 	truncate -s -8 "$$tmp/design.hxd" && \
 	if ./target/release/hx fit --design "$$tmp/design.hxd" --shards 2 \
 	    >/dev/null 2>&1; then \
@@ -170,5 +193,5 @@ ci: fmt clippy lint build test-rust bench-compile check-features check-oac
 clean:
 	$(CARGO) clean
 	rm -rf $(ARTIFACTS_DIR) results
-	rm -f $(BENCH_JSON) $(BENCH_JSON).tmp
+	rm -f $(BENCH_JSON) $(BENCH_JSON).tmp $(BENCH_BASELINE).tmp
 	find python -name __pycache__ -type d -exec rm -rf {} +

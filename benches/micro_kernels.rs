@@ -153,11 +153,65 @@ fn main() {
         std::hint::black_box(&resid);
     });
 
+    let mut records: Vec<Record> = Vec::new();
+
+    // ------------- blocked-kernel suite (JSON-recorded) -------------
+    // Register-blocked panel dot vs. the scalar per-column loop over
+    // the same columns. The accumulation order is identical by
+    // construction (asserted below, bitwise), so the delta is pure
+    // memory traffic: one pass over the streamed vector per
+    // PANEL_BLOCK columns instead of one per column.
+    let kb = 256.min(p);
+    let panel = &dense.data()[..kb * n];
+    let mut out_block = vec![0.0; kb];
+    let s = bench(
+        &format!("blas::dot_panel ({kb} cols, B={})", blas::PANEL_BLOCK),
+        reps,
+        || {
+            blas::dot_panel(panel, n, std::hint::black_box(&v), &mut out_block);
+            std::hint::black_box(&out_block);
+        },
+    );
+    records.push(Record {
+        name: "dot_panel",
+        n,
+        p: kb,
+        backend: "native",
+        threads: 1,
+        shards: 1,
+        batch: blas::PANEL_BLOCK,
+        design: "resident",
+        wall_seconds: s.mean,
+        ci_half: s.ci_half,
+    });
+    let mut out_scalar = vec![0.0; kb];
+    let s = bench(&format!("scalar dot loop ({kb} cols)"), reps, || {
+        for (j, o) in out_scalar.iter_mut().enumerate() {
+            *o = blas::dot(&panel[j * n..(j + 1) * n], std::hint::black_box(&v));
+        }
+        std::hint::black_box(&out_scalar);
+    });
+    records.push(Record {
+        name: "dot_cols_scalar",
+        n,
+        p: kb,
+        backend: "native",
+        threads: 1,
+        shards: 1,
+        batch: 1,
+        design: "resident",
+        wall_seconds: s.mean,
+        ci_half: s.ci_half,
+    });
+    assert_eq!(
+        out_block, out_scalar,
+        "blocked panel dot must be bitwise-identical to the scalar loop"
+    );
+
     // ---------------- sweep suite (JSON-recorded) ----------------
     // The threaded engine at 1 thread is the sequential baseline; the
     // per-column kernels are identical, so any delta is pure
     // parallelism, not numerics.
-    let mut records: Vec<Record> = Vec::new();
     let eta = vec![0.0; n];
     let lookahead = 4usize;
     let mut thread_counts = vec![1usize];

@@ -17,9 +17,10 @@ a coverage change, not a regression.
 
 The gate is advisory in CI (the perf job is continue-on-error): it
 puts the verdict in the log and the trajectory in the artifact without
-blocking merges on noisy runners. Baseline refresh ritual: download a
-trusted CI run's BENCH_sweeps artifact and commit it as
-BENCH_baseline.json (see README "Perf trajectory").
+blocking merges on noisy runners. Baseline refresh ritual: `make
+bench-baseline` on a quiet machine (refuses on dirty bench sources),
+or download a trusted CI run's BENCH_sweeps-t* artifact, then commit
+it as BENCH_baseline.json (see README "Perf trajectory").
 
 Exit codes: 0 ok/warn-only, 1 fail-level regression, 2 usage/IO error.
 

@@ -17,14 +17,31 @@ use crate::runtime::RuntimeEngine;
 
 /// Materialize `cols` of the design as a row-major (|cols|, n) panel
 /// (each row one dense column of X) — the layout
-/// [`crate::runtime::Backend::gram_block`] consumes.
-fn gather_columns<D: Design + ?Sized>(design: &D, cols: &[usize]) -> Vec<f64> {
+/// [`crate::runtime::Backend::gram_block`] consumes. Writes into a
+/// caller-owned buffer so the tracker's panel scratch is reused across
+/// Algorithm-1 steps instead of reallocated.
+fn gather_columns_into<D: Design + ?Sized>(design: &D, cols: &[usize], out: &mut Vec<f64>) {
     let n = design.nrows();
-    let mut out = vec![0.0; cols.len() * n];
+    out.clear();
+    out.resize(cols.len() * n, 0.0);
     for (i, &j) in cols.iter().enumerate() {
         design.col_axpy(j, 1.0, &mut out[i * n..(i + 1) * n]);
     }
-    out
+}
+
+/// Reusable gather + panel-output buffers for the Algorithm-1 Gram
+/// panels (the §3.3.1 hot spot). Grown to the largest panel seen so
+/// far, then reused for the rest of the path.
+#[derive(Clone, Debug, Default)]
+struct PanelScratch {
+    /// Gathered entering-column panel X_Dᵀ (row-major d×n).
+    xa: Vec<f64>,
+    /// Gathered persisting-column panel X_Eᵀ (row-major e×n).
+    xb: Vec<f64>,
+    /// gram_block output for the d×d (or k×k) panel.
+    out_a: Vec<f64>,
+    /// gram_block output for the e×d panel.
+    out_b: Vec<f64>,
 }
 
 /// Tracks H and H⁻¹ for the current active set, in a fixed column order
@@ -45,6 +62,11 @@ pub struct HessianTracker<'e> {
     /// calls instead of per-entry `gram_weighted` loops. Falls back to
     /// the scalar loops whenever the backend has no panel kernel.
     engine: Option<&'e RuntimeEngine>,
+    /// Reused gather/panel buffers (see [`PanelScratch`]).
+    scratch: PanelScratch,
+    /// Wall-clock seconds spent forming H (panels + sweep algebra)
+    /// since the last [`Self::take_panel_seconds`] call.
+    panel_seconds: f64,
     /// Count of sweep updates / rebuilds, for the experiment breakdowns.
     pub n_sweep_updates: usize,
     pub n_rebuilds: usize,
@@ -61,10 +83,20 @@ impl<'e> HessianTracker<'e> {
             q: DenseMatrix::zeros(0, 0),
             alpha,
             engine: None,
+            scratch: PanelScratch::default(),
+            panel_seconds: 0.0,
             n_sweep_updates: 0,
             n_rebuilds: 0,
             n_engine_panels: 0,
         }
+    }
+
+    /// Drain the Hessian-maintenance timer: seconds spent inside
+    /// [`Self::rebuild`]/[`Self::update`] since the previous call.
+    /// The path driver reads this once per step to fill the profile's
+    /// `t_panel` column.
+    pub fn take_panel_seconds(&mut self) -> f64 {
+        std::mem::replace(&mut self.panel_seconds, 0.0)
     }
 
     /// Route Gram-panel formation through a compute backend.
@@ -73,22 +105,34 @@ impl<'e> HessianTracker<'e> {
         self
     }
 
-    /// Symmetric blocked panel X_Aᵀ D(w) X_A through the engine, or
-    /// `None` when no engine/kernel is available (callers keep their
-    /// scalar loop). Gathers the columns once.
+    /// Symmetric blocked panel X_Aᵀ D(w) X_A through the engine into
+    /// `self.scratch.out_a`; returns `false` when no engine/kernel is
+    /// available (callers keep their scalar loop). Gathers the columns
+    /// once into the reused `scratch.xa` buffer.
     fn engine_sym_panel<D: Design + ?Sized>(
-        &self,
+        &mut self,
         design: &D,
         cols: &[usize],
         w: Option<&[f64]>,
-    ) -> Option<Vec<f64>> {
-        let engine = self.engine?;
+    ) -> bool {
+        let engine = match self.engine {
+            Some(e) => e,
+            None => return false,
+        };
         let k = cols.len();
-        let xa_t = gather_columns(design, cols);
-        engine
-            .gram_block(&xa_t, w, &xa_t, k, k, design.nrows())
-            .ok()
-            .flatten()
+        gather_columns_into(design, cols, &mut self.scratch.xa);
+        matches!(
+            engine.gram_block_into(
+                &self.scratch.xa,
+                w,
+                &self.scratch.xa,
+                k,
+                k,
+                design.nrows(),
+                &mut self.scratch.out_a,
+            ),
+            Ok(true)
+        )
     }
 
     pub fn active(&self) -> &[usize] {
@@ -109,10 +153,18 @@ impl<'e> HessianTracker<'e> {
 
     /// v = Q·s for a vector ordered like `active`.
     pub fn q_times(&self, s: &[f64]) -> Vec<f64> {
-        assert_eq!(s.len(), self.dim());
-        let mut out = vec![0.0; self.dim()];
-        self.q.gemv(s, &mut out);
+        let mut out = Vec::new();
+        self.q_times_into(s, &mut out);
         out
+    }
+
+    /// [`Self::q_times`] into a caller-owned buffer (reused per step by
+    /// the path driver's workspace).
+    pub fn q_times_into(&self, s: &[f64], out: &mut Vec<f64>) {
+        assert_eq!(s.len(), self.dim());
+        out.clear();
+        out.resize(self.dim(), 0.0);
+        self.q.gemv(s, out);
     }
 
     /// Rebuild H and Q from scratch for `new_active` (weights `w`,
@@ -124,47 +176,42 @@ impl<'e> HessianTracker<'e> {
         new_active: &[usize],
         w: Option<&[f64]>,
     ) {
+        let t0 = std::time::Instant::now();
         let k = new_active.len();
         let mut h = DenseMatrix::zeros(k, k);
         // Blocked panel through the engine when available (one
         // gram_block call instead of k(k+1)/2 scalar gram_weighted
         // calls); per-entry values are identical, so the scalar loop
         // below stays the reference fallback.
-        let panel = if k > 0 {
-            self.engine_sym_panel(design, new_active, w)
-        } else {
-            None
-        };
-        if panel.is_some() {
+        let use_panel = k > 0 && self.engine_sym_panel(design, new_active, w);
+        if use_panel {
             self.n_engine_panels += 1;
-        }
-        match panel {
-            Some(panel) => {
-                // Mirror the lower triangle: dot_w(x, y, w) and
-                // dot_w(y, x, w) can differ in the last bit (float
-                // multiplication is not associative), and H must stay
-                // exactly symmetric — matching the scalar loop below.
-                for a in 0..k {
-                    for b in 0..=a {
-                        let v = panel[a * k + b];
-                        *h.at_mut(a, b) = v;
-                        *h.at_mut(b, a) = v;
-                    }
+            // Mirror the lower triangle: dot_w(x, y, w) and
+            // dot_w(y, x, w) can differ in the last bit (float
+            // multiplication is not associative), and H must stay
+            // exactly symmetric — matching the scalar loop below.
+            let panel = &self.scratch.out_a;
+            for a in 0..k {
+                for b in 0..=a {
+                    let v = panel[a * k + b];
+                    *h.at_mut(a, b) = v;
+                    *h.at_mut(b, a) = v;
                 }
             }
-            None => {
-                for a in 0..k {
-                    for b in 0..=a {
-                        let v = design.gram_weighted(new_active[a], new_active[b], w);
-                        *h.at_mut(a, b) = v;
-                        *h.at_mut(b, a) = v;
-                    }
+        } else {
+            for a in 0..k {
+                for b in 0..=a {
+                    let v = design.gram_weighted(new_active[a], new_active[b], w);
+                    *h.at_mut(a, b) = v;
+                    *h.at_mut(b, a) = v;
                 }
             }
         }
-        self.active = new_active.to_vec();
+        self.active.clear();
+        self.active.extend_from_slice(new_active);
         self.install(h);
         self.n_rebuilds += 1;
+        self.panel_seconds += t0.elapsed().as_secs_f64();
         #[cfg(feature = "paranoid")]
         crate::invariants::assert_gram_symmetric(&self.h, "HessianTracker::rebuild");
     }
@@ -181,6 +228,7 @@ impl<'e> HessianTracker<'e> {
         new_active: &[usize],
         w: Option<&[f64]>,
     ) {
+        let t0 = std::time::Instant::now();
         let new_set: std::collections::HashSet<usize> = new_active.iter().copied().collect();
         // Positions (in the current ordering) that stay / leave.
         let keep_pos: Vec<usize> = (0..self.active.len())
@@ -243,7 +291,7 @@ impl<'e> HessianTracker<'e> {
                     invert_spd_preconditioned(&h_ee, self.alpha)
                 }
             };
-            self.active = keep_pos.iter().map(|&k| self.active[k]).collect();
+            self.active.retain(|j| new_set.contains(j));
             self.h = h_ee;
             self.q = q_new;
         }
@@ -265,44 +313,67 @@ impl<'e> HessianTracker<'e> {
             let mut g_ed = DenseMatrix::zeros(e, d);
             let mut g_dd = DenseMatrix::zeros(d, d);
             let n = design.nrows();
-            // Each column set is gathered exactly once; the counter is
-            // bumped only when both panels are actually consumed.
-            let panels = self.engine.and_then(|engine| {
-                let xd_t = gather_columns(design, &entering);
-                let dd = engine.gram_block(&xd_t, w, &xd_t, d, d, n).ok().flatten()?;
-                let xe_t = gather_columns(design, &self.active);
-                let ed = engine.gram_block(&xe_t, w, &xd_t, e, d, n).ok().flatten()?;
-                Some((dd, ed))
-            });
-            if panels.is_some() {
-                self.n_engine_panels += 2;
-            }
-            match panels {
-                Some((dd, ed)) => {
-                    // Both panels row-major: dd is (d, d), ed is (e, d).
-                    // G_DD is mirrored from one triangle for exact
-                    // symmetry (see the rebuild comment).
-                    for b in 0..d {
-                        for a in 0..e {
-                            *g_ed.at_mut(a, b) = ed[a * d + b];
-                        }
-                        for a in 0..=b {
-                            let v = dd[a * d + b];
-                            *g_dd.at_mut(a, b) = v;
-                            *g_dd.at_mut(b, a) = v;
-                        }
+            // Each column set is gathered exactly once into the reused
+            // scratch buffers; the counter is bumped only when both
+            // panels are actually consumed.
+            let panels_ok = match self.engine {
+                Some(engine) => {
+                    gather_columns_into(design, &entering, &mut self.scratch.xa);
+                    matches!(
+                        engine.gram_block_into(
+                            &self.scratch.xa,
+                            w,
+                            &self.scratch.xa,
+                            d,
+                            d,
+                            n,
+                            &mut self.scratch.out_a,
+                        ),
+                        Ok(true)
+                    ) && {
+                        gather_columns_into(design, &self.active, &mut self.scratch.xb);
+                        matches!(
+                            engine.gram_block_into(
+                                &self.scratch.xb,
+                                w,
+                                &self.scratch.xa,
+                                e,
+                                d,
+                                n,
+                                &mut self.scratch.out_b,
+                            ),
+                            Ok(true)
+                        )
                     }
                 }
-                None => {
-                    for (b, &jd) in entering.iter().enumerate() {
-                        for (a, &je) in self.active.iter().enumerate() {
-                            *g_ed.at_mut(a, b) = design.gram_weighted(je, jd, w);
-                        }
-                        for (a, &ja) in entering.iter().enumerate().take(b + 1) {
-                            let v = design.gram_weighted(ja, jd, w);
-                            *g_dd.at_mut(a, b) = v;
-                            *g_dd.at_mut(b, a) = v;
-                        }
+                None => false,
+            };
+            if panels_ok {
+                self.n_engine_panels += 2;
+                // Both panels row-major: out_a is (d, d), out_b is
+                // (e, d). G_DD is mirrored from one triangle for exact
+                // symmetry (see the rebuild comment).
+                let dd = &self.scratch.out_a;
+                let ed = &self.scratch.out_b;
+                for b in 0..d {
+                    for a in 0..e {
+                        *g_ed.at_mut(a, b) = ed[a * d + b];
+                    }
+                    for a in 0..=b {
+                        let v = dd[a * d + b];
+                        *g_dd.at_mut(a, b) = v;
+                        *g_dd.at_mut(b, a) = v;
+                    }
+                }
+            } else {
+                for (b, &jd) in entering.iter().enumerate() {
+                    for (a, &je) in self.active.iter().enumerate() {
+                        *g_ed.at_mut(a, b) = design.gram_weighted(je, jd, w);
+                    }
+                    for (a, &ja) in entering.iter().enumerate().take(b + 1) {
+                        let v = design.gram_weighted(ja, jd, w);
+                        *g_dd.at_mut(a, b) = v;
+                        *g_dd.at_mut(b, a) = v;
                     }
                 }
             }
@@ -357,6 +428,7 @@ impl<'e> HessianTracker<'e> {
             self.q = q_new;
         }
         self.n_sweep_updates += 1;
+        self.panel_seconds += t0.elapsed().as_secs_f64();
         #[cfg(feature = "paranoid")]
         crate::invariants::assert_gram_symmetric(&self.h, "HessianTracker::update");
     }

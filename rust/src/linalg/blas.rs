@@ -2,10 +2,29 @@
 //!
 //! These are the innermost loops of the whole system: the correlation
 //! sweep (Xᵀr) and coordinate-descent updates spend essentially all of
-//! their time in `dot` and `axpy`. They are written with 4-way manual
+//! their time in `dot` and `axpy`. They are written with manual
 //! unrolling and independent accumulators so LLVM auto-vectorizes them
 //! to AVX on this target; we verified the vectorization in the perf pass
 //! (see EXPERIMENTS.md §Perf).
+//!
+//! ## Accumulation-order contract
+//!
+//! Every dot-product kernel in this file produces a **fixed,
+//! block-size- and thread-count-independent accumulation order**: the
+//! scalar [`dot`] defines the reference sequence (8 independent
+//! accumulators over chunks of 8 via `f64::mul_add`, the fixed
+//! reduction tree `((a0+a1)+(a2+a3))+((a4+a5)+(a6+a7))`, then a
+//! sequential tail), and the register-blocked variants ([`dot_block`],
+//! [`dot_panel`], and the weighted twins) replay *exactly that
+//! per-column sequence*, merely interleaved across B columns so the
+//! shared vector is streamed from memory once per block instead of
+//! once per column. Interleaving never mixes values between columns,
+//! so blocked output is bitwise identical to the scalar reference at
+//! every block width — which is what keeps the repo-wide `==`
+//! guarantees (threaded-vs-serial, sharded-vs-unsharded,
+//! hxd-vs-resident) intact no matter how the drivers tile the columns.
+//! `f64::mul_add` is correctly rounded on every target (hardware FMA
+//! or libm fallback), so the contract is also platform-deterministic.
 
 /// xᵀy with 8 independent accumulators.
 ///
@@ -14,6 +33,11 @@
 /// correlation sweep than the earlier 4-accumulator form (interleaved
 /// best-of-15 A/B); a 16-lane variant measured < 5% further and was
 /// rejected per the one-change protocol.
+///
+/// This is the reference accumulation order for the blocked kernels
+/// below — see the module docs. Changing the chunking, the reduction
+/// tree, or the `mul_add` here is a **breaking change** to every
+/// bitwise-equivalence guarantee in the repo.
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
@@ -27,15 +51,99 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
             // and y.len() == x.len() (debug_assert above; all callers pass
             // equal-length slices).
             unsafe {
-                *a += x.get_unchecked(b + k) * y.get_unchecked(b + k);
+                *a = x.get_unchecked(b + k).mul_add(*y.get_unchecked(b + k), *a);
             }
         }
     }
     let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
     for i in chunks * 8..n {
-        s += x[i] * y[i];
+        s = x[i].mul_add(y[i], s);
     }
     s
+}
+
+/// Register-blocked multi-column dot: `B` dots `colsᵀy` computed in one
+/// pass over `y`.
+///
+/// The shared vector `y` is streamed from memory **once** for the whole
+/// block (its 8-element chunk stays register-resident across the B
+/// columns) instead of once per column — on the memory-bound
+/// correlation sweep that is the entire win. Each column `j` owns its
+/// private 8-lane accumulator bank, updated in *exactly* the order
+/// [`dot`] would use, so `dot_block([c], y)[0] == dot(c, y)` bitwise
+/// for every column and every `B` (see the module accumulation-order
+/// contract; enforced by the equivalence tests below and in
+/// `runtime/native.rs`).
+#[inline]
+pub fn dot_block<const B: usize>(cols: [&[f64]; B], y: &[f64]) -> [f64; B] {
+    let n = y.len();
+    for c in &cols {
+        debug_assert_eq!(c.len(), n);
+    }
+    let chunks = n / 8;
+    let mut acc = [[0.0f64; 8]; B];
+    for i in 0..chunks {
+        let b = i * 8;
+        let yc = &y[b..b + 8];
+        for (aj, col) in acc.iter_mut().zip(cols.iter()) {
+            let xc = &col[b..b + 8];
+            for k in 0..8 {
+                aj[k] = xc[k].mul_add(yc[k], aj[k]);
+            }
+        }
+    }
+    let mut out = [0.0f64; B];
+    for (j, (o, a)) in out.iter_mut().zip(acc.iter()).enumerate() {
+        let mut s = ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]));
+        for i in chunks * 8..n {
+            s = cols[j][i].mul_add(y[i], s);
+        }
+        *o = s;
+    }
+    out
+}
+
+/// Blocking width of the panel drivers below. 4 column accumulator
+/// banks (32 f64 lanes) plus the streamed chunk fit the 16 AVX
+/// registers without spilling; 8 measured no further win.
+pub const PANEL_BLOCK: usize = 4;
+
+/// Multi-column dot over a contiguous column-major panel: writes
+/// `out[j] = dot(panel[j·n .. (j+1)·n], y)` for every column of the
+/// panel, streaming `y` once per [`PANEL_BLOCK`]-wide block and
+/// falling back to the scalar [`dot`] for the ragged tail columns.
+/// Bitwise identical to the per-column scalar loop at every panel
+/// width (the accumulation-order contract).
+#[inline]
+pub fn dot_panel(panel: &[f64], n: usize, y: &[f64], out: &mut [f64]) {
+    if n == 0 {
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        return;
+    }
+    let cols = panel.len() / n;
+    debug_assert_eq!(panel.len(), cols * n);
+    debug_assert_eq!(out.len(), cols);
+    debug_assert_eq!(y.len(), n);
+    let mut j = 0;
+    while j + PANEL_BLOCK <= cols {
+        let r = dot_block::<PANEL_BLOCK>(
+            [
+                &panel[j * n..(j + 1) * n],
+                &panel[(j + 1) * n..(j + 2) * n],
+                &panel[(j + 2) * n..(j + 3) * n],
+                &panel[(j + 3) * n..(j + 4) * n],
+            ],
+            y,
+        );
+        out[j..j + PANEL_BLOCK].copy_from_slice(&r);
+        j += PANEL_BLOCK;
+    }
+    while j < cols {
+        out[j] = dot(&panel[j * n..(j + 1) * n], y);
+        j += 1;
+    }
 }
 
 /// y ← y + alpha·x.
@@ -84,6 +192,10 @@ pub fn dot2(x: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
 }
 
 /// Weighted dot Σ wᵢ xᵢ yᵢ.
+///
+/// Reference accumulation order for [`dot_w_block`]/[`dot_w_panel`]:
+/// one sequential accumulator, `(wᵢ·xᵢ)` rounded once then folded in
+/// via `mul_add` — the blocked twins must replay exactly this.
 #[inline]
 pub fn dot_w(x: &[f64], y: &[f64], w: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
@@ -93,10 +205,73 @@ pub fn dot_w(x: &[f64], y: &[f64], w: &[f64]) -> f64 {
         // SAFETY: i < x.len(), and y.len() == w.len() == x.len()
         // (debug_asserts above).
         unsafe {
-            s += w.get_unchecked(i) * x.get_unchecked(i) * y.get_unchecked(i);
+            s = (w.get_unchecked(i) * x.get_unchecked(i)).mul_add(*y.get_unchecked(i), s);
         }
     }
     s
+}
+
+/// Register-blocked weighted multi-column dot: `B` weighted dots
+/// `dot_w(x, col_j, w)` in one pass over `x` and `w`.
+///
+/// The streamed vector `x` sits in [`dot_w`]'s **first** slot on
+/// purpose: the Gram panel rows compute `dot_w(x_row, col, w)`, and the
+/// `wᵢ·xᵢ` product must round once *before* meeting the column (it is
+/// not commutative with `wᵢ·colᵢ` at the bit level). Per-column
+/// accumulation is exactly [`dot_w`]'s one sequential accumulator, so
+/// the result is bitwise identical to the scalar reference at every
+/// `B`.
+#[inline]
+pub fn dot_w_block<const B: usize>(x: &[f64], cols: [&[f64]; B], w: &[f64]) -> [f64; B] {
+    let n = x.len();
+    debug_assert_eq!(w.len(), n);
+    for c in &cols {
+        debug_assert_eq!(c.len(), n);
+    }
+    let mut s = [0.0f64; B];
+    for i in 0..n {
+        let z = w[i] * x[i];
+        for (sj, col) in s.iter_mut().zip(cols.iter()) {
+            *sj = z.mul_add(col[i], *sj);
+        }
+    }
+    s
+}
+
+/// Weighted twin of [`dot_panel`]: `out[j] = dot_w(x, col_j, w)` over a
+/// contiguous column-major panel, streaming `x`/`w` once per
+/// [`PANEL_BLOCK`]-wide block. Bitwise identical to the per-column
+/// scalar loop (argument orientation: see [`dot_w_block`]).
+#[inline]
+pub fn dot_w_panel(panel: &[f64], n: usize, x: &[f64], w: &[f64], out: &mut [f64]) {
+    if n == 0 {
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        return;
+    }
+    let cols = panel.len() / n;
+    debug_assert_eq!(panel.len(), cols * n);
+    debug_assert_eq!(out.len(), cols);
+    let mut j = 0;
+    while j + PANEL_BLOCK <= cols {
+        let r = dot_w_block::<PANEL_BLOCK>(
+            x,
+            [
+                &panel[j * n..(j + 1) * n],
+                &panel[(j + 1) * n..(j + 2) * n],
+                &panel[(j + 2) * n..(j + 3) * n],
+                &panel[(j + 3) * n..(j + 4) * n],
+            ],
+            w,
+        );
+        out[j..j + PANEL_BLOCK].copy_from_slice(&r);
+        j += PANEL_BLOCK;
+    }
+    while j < cols {
+        out[j] = dot_w(x, &panel[j * n..(j + 1) * n], w);
+        j += 1;
+    }
 }
 
 /// ‖x‖₂².
@@ -226,6 +401,108 @@ mod tests {
         assert_eq!(soft_threshold(0.5, 1.0), 0.0);
         assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
         assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+
+    /// B columns of length n with irrational-ish entries so no product
+    /// is exactly representable — any accumulation-order drift between
+    /// the scalar and blocked kernels shows up as a bit flip.
+    fn cols_of(b: usize, n: usize) -> Vec<Vec<f64>> {
+        (0..b)
+            .map(|j| {
+                (0..n)
+                    .map(|i| ((i * 7 + j * 13) as f64 * 0.2913).sin() * 1.7)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dot_block_bit_identical_to_scalar_all_widths() {
+        // Ragged lengths around the 8-chunk boundary; every block
+        // width the drivers could ever tile with.
+        for n in [0, 1, 5, 7, 8, 9, 16, 23, 64, 101] {
+            let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.173).cos()).collect();
+            let cols = cols_of(8, n);
+            macro_rules! check {
+                ($b:literal) => {{
+                    let refs: [&[f64]; $b] = std::array::from_fn(|j| cols[j].as_slice());
+                    let got = dot_block::<$b>(refs, &y);
+                    for j in 0..$b {
+                        let want = dot(&cols[j], &y);
+                        assert_eq!(
+                            got[j].to_bits(),
+                            want.to_bits(),
+                            "B={} j={j} n={n}",
+                            $b
+                        );
+                    }
+                }};
+            }
+            check!(1);
+            check!(2);
+            check!(4);
+            check!(8);
+        }
+    }
+
+    #[test]
+    fn dot_w_block_bit_identical_to_scalar_all_widths() {
+        for n in [0, 3, 8, 17, 50] {
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.31).cos()).collect();
+            let w: Vec<f64> = (0..n).map(|i| 0.1 + (i as f64 * 0.07).sin().abs()).collect();
+            let cols = cols_of(8, n);
+            macro_rules! check {
+                ($b:literal) => {{
+                    let refs: [&[f64]; $b] = std::array::from_fn(|j| cols[j].as_slice());
+                    let got = dot_w_block::<$b>(&x, refs, &w);
+                    for j in 0..$b {
+                        let want = dot_w(&x, &cols[j], &w);
+                        assert_eq!(got[j].to_bits(), want.to_bits(), "B={} j={j} n={n}", $b);
+                    }
+                }};
+            }
+            check!(1);
+            check!(2);
+            check!(4);
+            check!(8);
+        }
+    }
+
+    #[test]
+    fn dot_panel_bit_identical_to_per_column_scalar_ragged() {
+        // Panel widths straddling the PANEL_BLOCK boundary (ragged
+        // tails of 1..B-1 columns) and ragged row counts.
+        for n in [1, 7, 9, 33] {
+            for cols in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 13] {
+                let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.41).sin()).collect();
+                let w: Vec<f64> = (0..n).map(|i| 0.2 + (i as f64 * 0.19).cos().abs()).collect();
+                let panel: Vec<f64> = (0..cols * n)
+                    .map(|i| ((i * 3) as f64 * 0.117).sin() * 2.3)
+                    .collect();
+                let mut got = vec![0.0; cols];
+                dot_panel(&panel, n, &y, &mut got);
+                for j in 0..cols {
+                    let want = dot(&panel[j * n..(j + 1) * n], &y);
+                    assert_eq!(got[j].to_bits(), want.to_bits(), "cols={cols} j={j} n={n}");
+                }
+                let mut got_w = vec![0.0; cols];
+                dot_w_panel(&panel, n, &y, &w, &mut got_w);
+                for j in 0..cols {
+                    let want = dot_w(&y, &panel[j * n..(j + 1) * n], &w);
+                    assert_eq!(got_w[j].to_bits(), want.to_bits(), "w cols={cols} j={j} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_length_panels_write_zeros() {
+        let mut out = vec![1.0; 3];
+        dot_panel(&[], 0, &[], &mut out);
+        assert_eq!(out, vec![0.0; 3]);
+        let mut out = vec![1.0; 2];
+        dot_w_panel(&[], 0, &[], &[], &mut out);
+        assert_eq!(out, vec![0.0; 2]);
     }
 
     #[test]

@@ -21,7 +21,7 @@ use hessian_screening::linalg::Design;
 use hessian_screening::loss::Loss;
 use hessian_screening::metrics::{fmt_secs, Table};
 use hessian_screening::path::{
-    fit_approximate_homotopy, HomotopySettings, PathFit, PathFitter, PathSettings,
+    fit_approximate_homotopy, HomotopySettings, PathFit, PathFitter, PathSettings, StepStats,
 };
 use hessian_screening::runtime::{EngineSweep, RuntimeEngine, ShardedDesignView};
 use hessian_screening::screening::ScreeningKind;
@@ -35,9 +35,9 @@ USAGE:
          [--loss gaussian|logistic|poisson] [--method hessian|strong|working|
           celer|blitz|gap_safe|edpp|sasvi|none] [--path-length M] [--eps E]
          [--gamma G] [--seed K] [--engine] [--threads T] [--shards K]
-         [--lookahead B]
+         [--lookahead B] [--profile]
   hx fit --design FILE.hxd [--shards K] [--threads T] [--method M]
-         [--path-length M] [--eps E] [--gamma G] [--lookahead B]
+         [--path-length M] [--eps E] [--gamma G] [--lookahead B] [--profile]
          (loss and response come from the packed file; shard panels
           stream from disk — the design is never resident in one piece)
   hx pack --out FILE.hxd [--dataset NAME | --n N --p P --s S [--rho R]
@@ -174,6 +174,45 @@ fn print_fit_report(
     );
 }
 
+/// `--profile`: per-step kernel-time breakdown in milliseconds. The
+/// sweep column is the engine-sweep share of kkt, panel the Gram-panel
+/// share of hessian, and alloc the bytes of workspace growth that step
+/// (0 in the steady state — the allocation-free-hot-path observable).
+fn print_profile(fit: &PathFit) {
+    let mut table = Table::new(&[
+        "step", "lambda", "cd.ms", "kkt.ms", "sweep.ms", "hess.ms", "panel.ms", "screen.ms",
+        "alloc.B",
+    ]);
+    for (k, s) in fit.steps.iter().enumerate() {
+        table.row(vec![
+            format!("{k}"),
+            format!("{:.4}", fit.lambdas.get(k).copied().unwrap_or(f64::NAN)),
+            format!("{:.3}", s.t_cd * 1e3),
+            format!("{:.3}", s.t_kkt * 1e3),
+            format!("{:.3}", s.t_sweep * 1e3),
+            format!("{:.3}", s.t_hessian * 1e3),
+            format!("{:.3}", s.t_panel * 1e3),
+            format!("{:.3}", s.t_screen * 1e3),
+            format!("{}", s.alloc_bytes),
+        ]);
+    }
+    println!("{}", table.render());
+    let sum = |f: fn(&StepStats) -> f64| -> f64 { fit.steps.iter().map(f).sum() };
+    let alloc: usize = fit.steps.iter().map(|s| s.alloc_bytes).sum();
+    let steady = fit.steps.iter().skip(1).filter(|s| s.alloc_bytes == 0).count();
+    println!(
+        "profile: cd={}s kkt={}s (sweep={}s) hessian={}s (panel={}s) screen={}s \
+         workspace_growth={alloc}B steady_steps={steady}/{}",
+        fmt_secs(sum(|s| s.t_cd)),
+        fmt_secs(sum(|s| s.t_kkt)),
+        fmt_secs(sum(|s| s.t_sweep)),
+        fmt_secs(sum(|s| s.t_hessian)),
+        fmt_secs(sum(|s| s.t_panel)),
+        fmt_secs(sum(|s| s.t_screen)),
+        fit.steps.len().saturating_sub(1)
+    );
+}
+
 fn cmd_fit(args: &Args) -> Result<(), String> {
     if args.get("design").is_some() {
         return cmd_fit_hxd(args);
@@ -253,6 +292,9 @@ fn cmd_fit(args: &Args) -> Result<(), String> {
     let secs = t.elapsed().as_secs_f64();
     print_upload_stats(engine.as_ref());
     print_fit_report(&data.name, data.n(), data.p(), loss, kind, &fit, secs);
+    if args.flag("profile") {
+        print_profile(&fit);
+    }
     Ok(())
 }
 
@@ -312,6 +354,9 @@ fn cmd_fit_hxd(args: &Args) -> Result<(), String> {
     let secs = t.elapsed().as_secs_f64();
     print_upload_stats(Some(&engine));
     print_fit_report(&name, n, p, loss, kind, &fit, secs);
+    if args.flag("profile") {
+        print_profile(&fit);
+    }
     Ok(())
 }
 

@@ -33,7 +33,8 @@ use crate::rng::Xoshiro256pp;
 use crate::screening::{
     edpp_keep, gap_safe_keep, hessian_screen, sasvi_keep, strong_set, ws_priority, ScreeningKind,
 };
-use crate::solver::{solve_subproblem, CdSettings, SolveState};
+use crate::runtime::SweepScratch;
+use crate::solver::{solve_subproblem_with, CdSettings, SolveState, SolverScratch};
 use std::time::Instant;
 
 /// Path-level settings (defaults = the paper's §4).
@@ -128,6 +129,18 @@ pub struct StepStats {
     pub t_kkt: f64,
     pub t_hessian: f64,
     pub t_screen: f64,
+    /// Kernel-time breakdown (the `--profile` columns). Seconds inside
+    /// backend sweep kernels — full KKT sweeps plus batched look-ahead
+    /// sweeps — a subset of `t_kkt`.
+    pub t_sweep: f64,
+    /// Seconds inside Hessian panel formation and Algorithm-1 sweep
+    /// algebra ([`HessianTracker`] rebuild/update) — a subset of
+    /// `t_hessian`.
+    pub t_panel: f64,
+    /// Bytes of fresh [`Workspace`] capacity acquired during this step.
+    /// Early steps grow the arenas; the allocation-free steady state
+    /// reports 0 here.
+    pub alloc_bytes: usize,
 }
 
 /// Result of a full path fit.
@@ -220,11 +233,59 @@ impl IndexSet {
         self.items.clear();
     }
 
-    fn assign(&mut self, items: &[usize]) {
-        self.clear();
-        for &j in items {
-            self.insert(j);
-        }
+    /// Drop every item failing the predicate, keeping insertion order
+    /// (in-place twin of filter + assign — no intermediate Vec).
+    fn retain(&mut self, mut f: impl FnMut(usize) -> bool) {
+        let member = &mut self.member;
+        self.items.retain(|&j| {
+            if f(j) {
+                true
+            } else {
+                member[j] = false;
+                false
+            }
+        });
+    }
+}
+
+/// Workspace arena for the path driver: every buffer the steady-state
+/// step loop needs, owned in one place and reused across steps (and,
+/// via [`PathFitter::fit_with_workspace`], across whole fits). Plain
+/// reusable `Vec`s — no allocator tricks — grown to the high-water mark
+/// once, then stable; [`StepStats::alloc_bytes`] tracks the growth.
+#[derive(Default)]
+pub struct Workspace {
+    /// Coordinate-descent scratch (threaded into every subproblem).
+    solver: SolverScratch,
+    /// Backend sweep scratch (`_into` KKT and look-ahead sweeps).
+    sweep: SweepScratch,
+    /// Current active set (`SolveState::active_set_into`).
+    active: Vec<usize>,
+    /// Snapshot of `w_set.member` when the step's solve loop starts.
+    w_init_member: Vec<bool>,
+    /// KKT-violating indices found by the current check.
+    violations: Vec<usize>,
+    /// Strong-set violations (checked before the full sweep, §3.3.4).
+    v_strong: Vec<usize>,
+    /// sign(β) on the tracker's active set (Hessian screening).
+    signs: Vec<f64>,
+    /// Q·signs (eq.-(7) direction), ordered like the tracker.
+    qv: Vec<f64>,
+    /// Batched look-ahead keep-masks; `la_masks[i]` covers step
+    /// `la_start + i` (recycled through the sweep scratch).
+    la_masks: Vec<Vec<bool>>,
+}
+
+impl Workspace {
+    /// Total heap capacity currently held by the arena, in bytes.
+    pub fn capacity_bytes(&self) -> usize {
+        self.solver.capacity_bytes()
+            + self.sweep.capacity_bytes()
+            + 8 * (self.active.capacity() + self.violations.capacity() + self.v_strong.capacity())
+            + 8 * (self.signs.capacity() + self.qv.capacity())
+            + self.w_init_member.capacity()
+            + self.la_masks.capacity() * std::mem::size_of::<Vec<bool>>()
+            + self.la_masks.iter().map(|m| m.capacity()).sum::<usize>()
     }
 }
 
@@ -254,13 +315,7 @@ fn gap_safe_shrink(
     let gap = gap.unwrap_or_else(|| loss.duality_gap(y, eta, resid, xt_inf, lambda, l1_norm));
     let radius = (2.0 * gap.max(0.0)).sqrt() / lambda;
     let before = g_set.len();
-    let kept: Vec<usize> = g_set
-        .items
-        .iter()
-        .copied()
-        .filter(|&j| c_full[j].abs() / scale >= 1.0 - col_norms[j] * radius || beta[j] != 0.0)
-        .collect();
-    g_set.assign(&kept);
+    g_set.retain(|j| c_full[j].abs() / scale >= 1.0 - col_norms[j] * radius || beta[j] != 0.0);
     before - g_set.len()
 }
 
@@ -293,6 +348,20 @@ impl PathFitter {
         design: &D,
         y: &[f64],
         engine: Option<&crate::runtime::EngineSweep>,
+    ) -> PathFit {
+        let mut ws = Workspace::default();
+        self.fit_with_workspace(design, y, engine, &mut ws)
+    }
+
+    /// [`Self::fit_with_engine`] with a caller-owned [`Workspace`]:
+    /// repeated fits (cross-validation, simulation sweeps) reuse the
+    /// grown arenas instead of re-allocating them per path.
+    pub fn fit_with_workspace<D: Design + ?Sized>(
+        &self,
+        design: &D,
+        y: &[f64],
+        engine: Option<&crate::runtime::EngineSweep>,
+        ws: &mut Workspace,
     ) -> PathFit {
         let t_total = Instant::now();
         let n = design.nrows();
@@ -401,10 +470,12 @@ impl PathFitter {
 
         // Batched look-ahead screening (Larsson 2021; see
         // `crate::screening::lookahead_keep`): keep-masks for upcoming
-        // λ steps from the last batched sweep. `la_masks[i]` covers
-        // step `la_start + i`.
-        let mut la_masks: Vec<Vec<bool>> = Vec::new();
+        // λ steps from the last batched sweep live in `ws.la_masks`;
+        // `ws.la_masks[i]` covers step `la_start + i`.
+        ws.la_masks.clear();
         let mut la_start = 0usize;
+        // Arena high-water mark for the per-step alloc-bytes profile.
+        let mut ws_cap = ws.capacity_bytes();
 
         for k in 1..lambdas.len() {
             let lp = lambdas[k - 1];
@@ -421,18 +492,16 @@ impl PathFitter {
             // ---------------- screening + warm start ----------------
             let t0 = Instant::now();
             let strong = strong_set(&c_full, lp, ln);
-            let mut strong_member = vec![false; p];
-            for &j in &strong {
-                strong_member[j] = true;
-            }
             w_set.clear();
             match self.kind {
                 ScreeningKind::Hessian => {
                     // v = Q·sign(β_A); u = (D(w)) X_A v.
-                    let tr_active = tracker.active().to_vec();
-                    let signs: Vec<f64> =
-                        tr_active.iter().map(|&j| state.beta[j].signum()).collect();
-                    let v = tracker.q_times(&signs);
+                    let tr_active = tracker.active();
+                    ws.signs.clear();
+                    ws.signs
+                        .extend(tr_active.iter().map(|&j| state.beta[j].signum()));
+                    tracker.q_times_into(&ws.signs, &mut ws.qv);
+                    let v = &ws.qv;
                     scratch_u.iter_mut().for_each(|x| *x = 0.0);
                     for (idx, &j) in tr_active.iter().enumerate() {
                         design.col_axpy(j, v[idx], &mut scratch_u);
@@ -555,7 +624,8 @@ impl PathFitter {
             }
             st.t_screen += t0.elapsed().as_secs_f64();
             st.screened = w_set.len();
-            let w_init_member = w_set.member.clone();
+            ws.w_init_member.clear();
+            ws.w_init_member.extend_from_slice(&w_set.member);
 
             // Reset the Gap-Safe candidate set (Alg. 2 line 14) — or,
             // when a look-ahead certificate covers this λ, pre-shrink
@@ -569,7 +639,7 @@ impl PathFitter {
             let la_eligible = use_gs_aug
                 && !matches!(self.kind, ScreeningKind::Celer | ScreeningKind::Blitz);
             let la_mask = if la_eligible && k >= la_start {
-                la_masks.get(k - la_start)
+                ws.la_masks.get(k - la_start)
             } else {
                 None
             };
@@ -601,7 +671,7 @@ impl PathFitter {
             let mut stalls = 0usize;
             loop {
                 let t_cd = Instant::now();
-                let res = solve_subproblem(
+                let res = solve_subproblem_with(
                     design,
                     y,
                     loss,
@@ -612,6 +682,7 @@ impl PathFitter {
                     zeta,
                     &s.cd,
                     &mut rng,
+                    &mut ws.solver,
                 );
                 st.t_cd += t_cd.elapsed().as_secs_f64();
                 st.passes += res.passes;
@@ -620,19 +691,19 @@ impl PathFitter {
                 match self.kind {
                     ScreeningKind::Hessian | ScreeningKind::Working => {
                         // §3.3.4: strong set first.
-                        let mut v_strong = Vec::new();
+                        ws.v_strong.clear();
                         for &j in &strong {
                             if !w_set.contains(j) && g_set.contains(j) {
                                 let c = design.col_dot(j, &state.resid);
                                 c_full[j] = c;
                                 if c.abs() > ln {
-                                    v_strong.push(j);
+                                    ws.v_strong.push(j);
                                 }
                             }
                         }
-                        if !v_strong.is_empty() {
-                            for j in v_strong {
-                                if !w_init_member[j] {
+                        if !ws.v_strong.is_empty() {
+                            for &j in &ws.v_strong {
+                                if !ws.w_init_member[j] {
                                     st.violations += 1;
                                 }
                                 w_set.insert(j);
@@ -641,26 +712,29 @@ impl PathFitter {
                             continue;
                         }
                         // Full (or Gap-Safe-restricted) check.
-                        let mut violations = Vec::new();
+                        ws.violations.clear();
                         let mut xt_inf = 0.0f64;
                         if !first_full_done {
+                            let t_sw = Instant::now();
                             let via_engine = engine
                                 .map(|es| {
-                                    es.full_sweep(
+                                    es.full_sweep_into(
                                         design,
                                         y,
                                         &state.eta,
                                         &state.resid,
                                         ln,
                                         &mut c_full,
+                                        &mut ws.sweep,
                                     )
                                 })
                                 .unwrap_or(false);
                             if via_engine {
+                                st.t_sweep += t_sw.elapsed().as_secs_f64();
                                 for (j, c) in c_full.iter().enumerate() {
                                     xt_inf = xt_inf.max(c.abs());
                                     if !w_set.contains(j) && c.abs() > ln {
-                                        violations.push(j);
+                                        ws.violations.push(j);
                                     }
                                 }
                             } else {
@@ -669,7 +743,7 @@ impl PathFitter {
                                     c_full[j] = c;
                                     xt_inf = xt_inf.max(c.abs());
                                     if !w_set.contains(j) && c.abs() > ln {
-                                        violations.push(j);
+                                        ws.violations.push(j);
                                     }
                                 }
                             }
@@ -681,11 +755,11 @@ impl PathFitter {
                                 c_full[j] = c;
                                 xt_inf = xt_inf.max(c.abs());
                                 if !w_set.contains(j) && c.abs() > ln {
-                                    violations.push(j);
+                                    ws.violations.push(j);
                                 }
                             }
                         }
-                        if violations.is_empty() && res.converged {
+                        if ws.violations.is_empty() && res.converged {
                             st.t_kkt += t_kkt.elapsed().as_secs_f64();
                             break;
                         }
@@ -712,7 +786,7 @@ impl PathFitter {
                                 &mut g_set,
                             );
                         }
-                        if violations.is_empty() {
+                        if ws.violations.is_empty() {
                             // KKT-clean but gap not under tol: retry CD a
                             // bounded number of times, then accept.
                             stalls += 1;
@@ -726,8 +800,8 @@ impl PathFitter {
                         } else {
                             stalls = 0;
                         }
-                        for j in violations {
-                            if !w_init_member[j] {
+                        for &j in &ws.violations {
+                            if !ws.w_init_member[j] {
                                 st.violations += 1;
                             }
                             w_set.insert(j);
@@ -738,41 +812,48 @@ impl PathFitter {
                     | ScreeningKind::Edpp
                     | ScreeningKind::Sasvi
                     | ScreeningKind::None => {
-                        let mut violations = Vec::new();
+                        ws.violations.clear();
                         let iter_all = !first_full_done;
                         let mut xt_inf = 0.0f64;
+                        let t_sw = Instant::now();
                         let via_engine = iter_all
                             && engine
                                 .map(|es| {
-                                    es.full_sweep(
+                                    es.full_sweep_into(
                                         design,
                                         y,
                                         &state.eta,
                                         &state.resid,
                                         ln,
                                         &mut c_full,
+                                        &mut ws.sweep,
                                     )
                                 })
                                 .unwrap_or(false);
                         if via_engine {
+                            st.t_sweep += t_sw.elapsed().as_secs_f64();
                             for (j, c) in c_full.iter().enumerate() {
                                 xt_inf = xt_inf.max(c.abs());
                                 if !w_set.contains(j) && c.abs() > ln {
-                                    violations.push(j);
+                                    ws.violations.push(j);
                                 }
                             }
-                        } else {
-                            let candidates: Vec<usize> = if iter_all {
-                                (0..p).collect()
-                            } else {
-                                g_set.items.clone()
-                            };
-                            for &j in &candidates {
+                        } else if iter_all {
+                            for j in 0..p {
                                 let c = design.col_dot(j, &state.resid);
                                 c_full[j] = c;
                                 xt_inf = xt_inf.max(c.abs());
                                 if !w_set.contains(j) && c.abs() > ln {
-                                    violations.push(j);
+                                    ws.violations.push(j);
+                                }
+                            }
+                        } else {
+                            for &j in &g_set.items {
+                                let c = design.col_dot(j, &state.resid);
+                                c_full[j] = c;
+                                xt_inf = xt_inf.max(c.abs());
+                                if !w_set.contains(j) && c.abs() > ln {
+                                    ws.violations.push(j);
                                 }
                             }
                         }
@@ -780,7 +861,7 @@ impl PathFitter {
                             st.full_sweeps += 1;
                             first_full_done = true;
                         }
-                        if violations.is_empty() {
+                        if ws.violations.is_empty() {
                             stalls += 1;
                             if res.converged || stalls >= 3 {
                                 if !res.converged {
@@ -813,8 +894,8 @@ impl PathFitter {
                                 &mut g_set,
                             );
                         }
-                        for j in violations {
-                            if !w_init_member[j] {
+                        for &j in &ws.violations {
+                            if !ws.w_init_member[j] {
                                 st.violations += 1;
                             }
                             w_set.insert(j);
@@ -824,30 +905,34 @@ impl PathFitter {
                         // Dynamic working-set methods: global gap check,
                         // Gap-Safe screen, prioritized re-selection.
                         let mut xt_inf = 0.0f64;
+                        let t_sw = Instant::now();
                         let via_engine = !first_full_done
                             && engine
                                 .map(|es| {
-                                    es.full_sweep(
+                                    es.full_sweep_into(
                                         design,
                                         y,
                                         &state.eta,
                                         &state.resid,
                                         ln,
                                         &mut c_full,
+                                        &mut ws.sweep,
                                     )
                                 })
                                 .unwrap_or(false);
                         if via_engine {
+                            st.t_sweep += t_sw.elapsed().as_secs_f64();
                             for c in &c_full {
                                 xt_inf = xt_inf.max(c.abs());
                             }
+                        } else if !first_full_done {
+                            for j in 0..p {
+                                let c = design.col_dot(j, &state.resid);
+                                c_full[j] = c;
+                                xt_inf = xt_inf.max(c.abs());
+                            }
                         } else {
-                            let candidates: Vec<usize> = if !first_full_done {
-                                (0..p).collect()
-                            } else {
-                                g_set.items.clone()
-                            };
-                            for &j in &candidates {
+                            for &j in &g_set.items {
                                 let c = design.col_dot(j, &state.resid);
                                 c_full[j] = c;
                                 xt_inf = xt_inf.max(c.abs());
@@ -900,7 +985,7 @@ impl PathFitter {
                             );
                         }
                         // New working set: active ∪ top-priority from G.
-                        let active_now: Vec<usize> = state.active_set();
+                        state.active_set_into(&mut ws.active);
                         let mut cand: Vec<(f64, usize)> = g_set
                             .items
                             .iter()
@@ -910,7 +995,7 @@ impl PathFitter {
                             .collect();
                         cand.sort_by(|a, b| a.0.total_cmp(&b.0));
                         w_set.clear();
-                        for j in active_now {
+                        for &j in &ws.active {
                             w_set.insert(j);
                         }
                         for (_, j) in cand
@@ -927,9 +1012,9 @@ impl PathFitter {
 
             // ---------------- bookkeeping ----------------
             st.screened_final = w_set.len();
-            let active = state.active_set();
-            st.active = active.len();
-            for &j in &active {
+            state.active_set_into(&mut ws.active);
+            st.active = ws.active.len();
+            for &j in &ws.active {
                 ever_active.insert(j);
             }
 
@@ -958,15 +1043,16 @@ impl PathFitter {
                 let t_h = Instant::now();
                 if matches!(loss, Loss::Gaussian) || !glm_full {
                     if s.hessian_sweep_updates && tracker.dim() > 0 {
-                        tracker.update(design, &active, None);
+                        tracker.update(design, &ws.active, None);
                     } else {
-                        tracker.rebuild(design, &active, None);
+                        tracker.rebuild(design, &ws.active, None);
                     }
                 } else {
                     loss.weights_into(&state.eta, &mut weights);
-                    tracker.rebuild(design, &active, Some(&weights));
+                    tracker.rebuild(design, &ws.active, Some(&weights));
                 }
                 st.t_hessian += t_h.elapsed().as_secs_f64();
+                st.t_panel += tracker.take_panel_seconds();
             }
 
             let dev = loss.deviance(y, &state.eta);
@@ -993,10 +1079,10 @@ impl PathFitter {
                 && !will_stop
             {
                 if let Some(es) = engine {
-                    if es.lookahead > 0 && k + 1 >= la_start + la_masks.len() {
+                    if es.lookahead > 0 && k + 1 >= la_start + ws.la_masks.len() {
                         let t_b = Instant::now();
                         let hi = (k + 1 + es.lookahead).min(lambdas.len());
-                        if let Some(masks) = es.look_ahead(
+                        if es.look_ahead_into(
                             design,
                             y,
                             &state.eta,
@@ -1004,22 +1090,29 @@ impl PathFitter {
                             state.l1_norm(),
                             &lambdas[k + 1..hi],
                             &mut c_full,
+                            &mut ws.la_masks,
+                            &mut ws.sweep,
                         ) {
-                            la_masks = masks;
                             la_start = k + 1;
                             st.full_sweeps += 1;
                         }
-                        st.t_kkt += t_b.elapsed().as_secs_f64();
+                        let dt = t_b.elapsed().as_secs_f64();
+                        st.t_kkt += dt;
+                        st.t_sweep += dt;
                     }
                 }
             }
 
             fit.lambdas.push(ln);
             fit.betas
-                .push(active.iter().map(|&j| (j, state.beta[j])).collect());
+                .push(ws.active.iter().map(|&j| (j, state.beta[j])).collect());
             fit.dev_ratios.push(dev_ratio);
+            let cap_now = ws.capacity_bytes();
+            st.alloc_bytes = cap_now.saturating_sub(ws_cap);
+            ws_cap = cap_now;
             fit.steps.push(st);
-            prev_active = active;
+            prev_active.clear();
+            prev_active.extend_from_slice(&ws.active);
 
             // Stopping rules (glmnet / §4).
             if dev_ratio >= s.dev_ratio_max {

@@ -76,10 +76,42 @@ pub(crate) enum DesignRepr {
 /// at `lambdas[l]` (Gap-Safe sphere test from this iterate's dual
 /// point — see [`crate::screening::lookahead_keep`]), so the path
 /// driver may skip it in that step's KKT check.
+#[derive(Default)]
 pub struct KktBatch {
     pub c: Vec<f64>,
     pub resid: Vec<f64>,
     pub keep: Vec<Vec<bool>>,
+}
+
+/// Reusable buffers for the `_into` sweep surfaces: one per fit, owned
+/// by the caller (the path driver's workspace), written fresh by every
+/// sweep. Keeping them out of [`EngineSweep`] keeps that type `&self`-
+/// shareable; keeping them out of the backends keeps backends
+/// stateless.
+#[derive(Default)]
+pub struct SweepScratch {
+    /// Backend-side correlation vector (pre-recheck).
+    pub c: Vec<f64>,
+    /// Backend-side pseudo-residual.
+    pub resid: Vec<f64>,
+    /// Batched look-ahead sweep result.
+    pub batch: KktBatch,
+}
+
+impl KktBatch {
+    /// Heap capacity held by the batch, in bytes (profile accounting).
+    pub fn capacity_bytes(&self) -> usize {
+        8 * (self.c.capacity() + self.resid.capacity())
+            + self.keep.capacity() * std::mem::size_of::<Vec<bool>>()
+            + self.keep.iter().map(|m| m.capacity()).sum::<usize>()
+    }
+}
+
+impl SweepScratch {
+    /// Heap capacity held by the scratch, in bytes (profile accounting).
+    pub fn capacity_bytes(&self) -> usize {
+        8 * (self.c.capacity() + self.resid.capacity()) + self.batch.capacity_bytes()
+    }
 }
 
 /// The operations a compute backend provides to the path driver.
@@ -143,6 +175,27 @@ pub trait Backend: Send + Sync {
     /// c = Xᵀr. `None` when the backend has no kernel for this shape.
     fn correlation(&self, design: &RegisteredDesign, r: &[f64]) -> Result<Option<Vec<f64>>>;
 
+    /// Allocation-reusing twin of [`Backend::correlation`]: writes into
+    /// a caller-owned buffer (resized as needed) and returns whether a
+    /// kernel served the request. The default routes through the
+    /// allocating method and moves the result into `c` — correct for
+    /// every backend; [`NativeBackend`] overrides it with a true
+    /// in-place kernel so the steady-state path loop allocates nothing.
+    fn correlation_into(
+        &self,
+        design: &RegisteredDesign,
+        r: &[f64],
+        c: &mut Vec<f64>,
+    ) -> Result<bool> {
+        match self.correlation(design, r)? {
+            Some(v) => {
+                *c = v;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
     /// Fused KKT sweep: returns (c, pseudo-residual) at the given
     /// linear predictor, or `None` when unavailable for this
     /// (loss, shape).
@@ -154,6 +207,29 @@ pub trait Backend: Send + Sync {
         eta: &[f64],
         lambda: f64,
     ) -> Result<Option<(Vec<f64>, Vec<f64>)>>;
+
+    /// Allocation-reusing twin of [`Backend::kkt_sweep`] — same default
+    /// shim / native-override split as [`Backend::correlation_into`].
+    #[allow(clippy::too_many_arguments)]
+    fn kkt_sweep_into(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambda: f64,
+        c: &mut Vec<f64>,
+        resid: &mut Vec<f64>,
+    ) -> Result<bool> {
+        match self.kkt_sweep(loss, design, y, eta, lambda)? {
+            Some((cv, rv)) => {
+                *c = cv;
+                *resid = rv;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
 
     /// Batched look-ahead KKT sweep (Larsson, "Look-Ahead Screening
     /// Rules for the Lasso", 2021): one correlation sweep at the
@@ -173,6 +249,29 @@ pub trait Backend: Send + Sync {
         Ok(None)
     }
 
+    /// Allocation-reusing twin of [`Backend::kkt_sweep_batch`] — same
+    /// default shim / native-override split as
+    /// [`Backend::correlation_into`].
+    #[allow(clippy::too_many_arguments)]
+    fn kkt_sweep_batch_into(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambdas: &[f64],
+        l1_norm: f64,
+        batch: &mut KktBatch,
+    ) -> Result<bool> {
+        match self.kkt_sweep_batch(loss, design, y, eta, lambdas, l1_norm)? {
+            Some(b) => {
+                *batch = b;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
     /// Weighted Gram panel X_E D(w) X_Dᵀ (row-major (e, d)), the
     /// Algorithm-1 augmentation block. `xe_t`/`xd_t` are (e, n)/(d, n)
     /// row-major f64 slices; `w = None` means unit weights.
@@ -185,6 +284,29 @@ pub trait Backend: Send + Sync {
         d: usize,
         n: usize,
     ) -> Result<Option<Vec<f64>>>;
+
+    /// Allocation-reusing twin of [`Backend::gram_block`] — same
+    /// default shim / native-override split as
+    /// [`Backend::correlation_into`].
+    #[allow(clippy::too_many_arguments)]
+    fn gram_block_into(
+        &self,
+        xe_t: &[f64],
+        w: Option<&[f64]>,
+        xd_t: &[f64],
+        e: usize,
+        d: usize,
+        n: usize,
+        out: &mut Vec<f64>,
+    ) -> Result<bool> {
+        match self.gram_block(xe_t, w, xd_t, e, d, n)? {
+            Some(v) => {
+                *out = v;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
 }
 
 /// The runtime engine: a [`Backend`] behind a stable, object-safe
@@ -317,6 +439,17 @@ impl RuntimeEngine {
         self.backend.correlation(design, r)
     }
 
+    /// Buffer-reusing correlation sweep (see
+    /// [`Backend::correlation_into`]).
+    pub fn correlation_into(
+        &self,
+        design: &RegisteredDesign,
+        r: &[f64],
+        c: &mut Vec<f64>,
+    ) -> Result<bool> {
+        self.backend.correlation_into(design, r, c)
+    }
+
     /// Fused KKT sweep; `None` when unavailable for (loss, shape).
     pub fn kkt_sweep(
         &self,
@@ -327,6 +460,22 @@ impl RuntimeEngine {
         lambda: f64,
     ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
         self.backend.kkt_sweep(loss, design, y, eta, lambda)
+    }
+
+    /// Buffer-reusing fused KKT sweep (see [`Backend::kkt_sweep_into`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn kkt_sweep_into(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambda: f64,
+        c: &mut Vec<f64>,
+        resid: &mut Vec<f64>,
+    ) -> Result<bool> {
+        self.backend
+            .kkt_sweep_into(loss, design, y, eta, lambda, c, resid)
     }
 
     /// Batched look-ahead KKT sweep; `None` when the backend has no
@@ -344,6 +493,23 @@ impl RuntimeEngine {
             .kkt_sweep_batch(loss, design, y, eta, lambdas, l1_norm)
     }
 
+    /// Buffer-reusing batched look-ahead sweep (see
+    /// [`Backend::kkt_sweep_batch_into`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn kkt_sweep_batch_into(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambdas: &[f64],
+        l1_norm: f64,
+        batch: &mut KktBatch,
+    ) -> Result<bool> {
+        self.backend
+            .kkt_sweep_batch_into(loss, design, y, eta, lambdas, l1_norm, batch)
+    }
+
     /// Weighted Gram panel (Algorithm-1 augmentation); `w = None`
     /// means unit weights.
     pub fn gram_block(
@@ -356,6 +522,21 @@ impl RuntimeEngine {
         n: usize,
     ) -> Result<Option<Vec<f64>>> {
         self.backend.gram_block(xe_t, w, xd_t, e, d, n)
+    }
+
+    /// Buffer-reusing Gram panel (see [`Backend::gram_block_into`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gram_block_into(
+        &self,
+        xe_t: &[f64],
+        w: Option<&[f64]>,
+        xd_t: &[f64],
+        e: usize,
+        d: usize,
+        n: usize,
+        out: &mut Vec<f64>,
+    ) -> Result<bool> {
+        self.backend.gram_block_into(xe_t, w, xd_t, e, d, n, out)
     }
 }
 
@@ -437,24 +618,51 @@ impl<'a> EngineSweep<'a> {
         lambda: f64,
         c: &mut [f64],
     ) -> bool {
-        match self.engine.kkt_sweep(self.loss, &self.design, y, eta, lambda) {
-            Ok(Some((c_backend, _resid_backend))) => {
-                debug_assert_eq!(c_backend.len(), c.len());
+        let mut scratch = SweepScratch::default();
+        self.full_sweep_into(native, y, eta, resid, lambda, c, &mut scratch)
+    }
+
+    /// Allocation-reusing twin of [`Self::full_sweep`]: the backend
+    /// writes into `scratch` (grown once, reused every step), so the
+    /// steady-state path loop performs no per-sweep allocation with an
+    /// in-place backend.
+    #[allow(clippy::too_many_arguments)]
+    pub fn full_sweep_into<D: Design + ?Sized>(
+        &self,
+        native: &D,
+        y: &[f64],
+        eta: &[f64],
+        resid: &[f64],
+        lambda: f64,
+        c: &mut [f64],
+        scratch: &mut SweepScratch,
+    ) -> bool {
+        match self.engine.kkt_sweep_into(
+            self.loss,
+            &self.design,
+            y,
+            eta,
+            lambda,
+            &mut scratch.c,
+            &mut scratch.resid,
+        ) {
+            Ok(true) => {
+                debug_assert_eq!(scratch.c.len(), c.len());
                 if self.engine.is_exact() {
                     // Exact f64 backend: nothing to re-verify.
-                    c.copy_from_slice(&c_backend);
+                    c.copy_from_slice(&scratch.c);
                     return true;
                 }
                 let lo = lambda * (1.0 - self.recheck_band);
                 let hi = lambda * (1.0 + self.recheck_band);
-                for (j, cv) in c_backend.into_iter().enumerate() {
+                for (j, cv) in scratch.c.iter().enumerate() {
                     let a = cv.abs();
                     c[j] = if a >= lo && a <= hi {
                         // Reduced precision can't be trusted at the
                         // threshold: recompute in f64.
                         native.col_dot(j, resid)
                     } else {
-                        cv
+                        *cv
                     };
                 }
                 true
@@ -489,20 +697,58 @@ impl<'a> EngineSweep<'a> {
         lambdas: &[f64],
         c: &mut [f64],
     ) -> Option<Vec<Vec<bool>>> {
-        if self.lookahead == 0 || lambdas.is_empty() {
-            return None;
+        let mut scratch = SweepScratch::default();
+        let mut masks = Vec::new();
+        if self.look_ahead_into(
+            native, y, eta, resid, l1_norm, lambdas, c, &mut masks, &mut scratch,
+        ) {
+            Some(masks)
+        } else {
+            None
         }
-        let batch = match self
-            .engine
-            .kkt_sweep_batch(self.loss, &self.design, y, eta, lambdas, l1_norm)
-        {
-            Ok(Some(b)) => b,
-            _ => return None,
-        };
+    }
+
+    /// Allocation-reusing twin of [`Self::look_ahead`]: the batched
+    /// sweep lands in `scratch.batch` and the per-λ keep masks are
+    /// recycled into `masks` (their capacity survives across steps).
+    /// Returns `true` when the backend produced a usable batch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn look_ahead_into<D: Design + ?Sized>(
+        &self,
+        native: &D,
+        y: &[f64],
+        eta: &[f64],
+        resid: &[f64],
+        l1_norm: f64,
+        lambdas: &[f64],
+        c: &mut [f64],
+        masks: &mut Vec<Vec<bool>>,
+        scratch: &mut SweepScratch,
+    ) -> bool {
+        if self.lookahead == 0 || lambdas.is_empty() {
+            return false;
+        }
+        match self.engine.kkt_sweep_batch_into(
+            self.loss,
+            &self.design,
+            y,
+            eta,
+            lambdas,
+            l1_norm,
+            &mut scratch.batch,
+        ) {
+            Ok(true) => {}
+            _ => return false,
+        }
+        let batch = &mut scratch.batch;
         debug_assert_eq!(batch.c.len(), c.len());
         if self.engine.is_exact() {
             c.copy_from_slice(&batch.c);
-            return Some(batch.keep);
+            // Hand the backend-built masks to the caller and keep the
+            // caller's old masks (and their capacity) as next step's
+            // batch scratch.
+            std::mem::swap(masks, &mut batch.keep);
+            return true;
         }
         let lo_l = lambdas.iter().cloned().fold(f64::INFINITY, f64::min);
         let hi_l = lambdas.iter().cloned().fold(0.0f64, f64::max);
@@ -510,30 +756,30 @@ impl<'a> EngineSweep<'a> {
             lo_l * (1.0 - self.recheck_band),
             hi_l * (1.0 + self.recheck_band),
         );
-        for (j, cv) in batch.c.into_iter().enumerate() {
+        for (j, cv) in batch.c.iter().enumerate() {
             let a = cv.abs();
             c[j] = if a >= lo && a <= hi {
                 native.col_dot(j, resid)
             } else {
-                cv
+                *cv
             };
         }
         let xt_inf = crate::linalg::blas::amax(c);
-        let keep = lambdas
-            .iter()
-            .map(|&l| {
-                let gap = self.loss.duality_gap(y, eta, resid, xt_inf, l, l1_norm);
-                crate::screening::lookahead_keep(
-                    c,
-                    &self.design.col_norms,
-                    xt_inf,
-                    gap,
-                    l,
-                    self.recheck_band,
-                )
-            })
-            .collect();
-        Some(keep)
+        masks.truncate(lambdas.len());
+        masks.resize_with(lambdas.len(), Vec::new);
+        for (keep, &l) in masks.iter_mut().zip(lambdas.iter()) {
+            let gap = self.loss.duality_gap(y, eta, resid, xt_inf, l, l1_norm);
+            crate::screening::lookahead_keep_into(
+                c,
+                &self.design.col_norms,
+                xt_inf,
+                gap,
+                l,
+                self.recheck_band,
+                keep,
+            );
+        }
+        true
     }
 }
 

@@ -5,11 +5,21 @@
 //! (`rust/tests/runtime_roundtrip.rs`).
 //!
 //! Parallelism: the sweep and panel kernels are chunked
-//! column-parallel over `std::thread::scope` (zero dependencies).
-//! Each output entry is produced by the same per-column scalar kernel
-//! regardless of thread count, so results are **bit-identical** to the
-//! serial loop — threading is a pure wall-clock knob, never a
-//! numerics knob.
+//! column-parallel over `std::thread::scope` (zero dependencies), and
+//! within each chunk the columns run through the register-blocked
+//! panel kernels (`blas::dot_panel` / `blas::dot_w_panel`), which
+//! stream the shared vector once per `blas::PANEL_BLOCK` columns.
+//! Every output entry is produced by *exactly* the scalar kernel's
+//! accumulation sequence regardless of thread count, chunk boundary,
+//! or block width (the `linalg::blas` accumulation-order contract), so
+//! results are **bit-identical** to the serial scalar loop — threading
+//! and blocking are pure wall-clock knobs, never numerics knobs.
+//!
+//! Allocation: the `_into` overrides write into caller-owned buffers,
+//! so the steady-state path loop (which calls them through
+//! [`super::RuntimeEngine`]) performs no per-sweep heap allocation
+//! once the buffers have grown to size. The allocating [`Backend`]
+//! methods are thin wrappers retained for one-shot callers and tests.
 
 #![forbid(unsafe_code)]
 
@@ -79,26 +89,25 @@ impl NativeBackend {
         }
     }
 
-    /// out[i] = f(i), contiguous chunks per thread. Bit-identical to
-    /// the serial loop at any thread count.
-    fn par_map(&self, out: &mut [f64], flops_per_item: usize, f: impl Fn(usize) -> f64 + Sync) {
-        let t = self.pool_size(out.len(), flops_per_item);
+    /// Blocked column sweep: `out[j] = dot(col_j, r)` for every column
+    /// of the col-major `data`, contiguous column chunks per thread,
+    /// each chunk running through the register-blocked
+    /// `blas::dot_panel`. Every entry equals the scalar `blas::dot`
+    /// bitwise (accumulation-order contract), so neither the chunk
+    /// boundaries nor the block width can change a single bit.
+    fn par_sweep(&self, data: &[f64], n: usize, r: &[f64], out: &mut [f64]) {
+        let t = self.pool_size(out.len(), n);
         if t <= 1 {
-            for (i, o) in out.iter_mut().enumerate() {
-                *o = f(i);
-            }
+            blas::dot_panel(data, n, r, out);
             return;
         }
         let chunk = div_ceil(out.len(), t);
         std::thread::scope(|s| {
             let mut handles = Vec::new();
             for (ci, co) in out.chunks_mut(chunk).enumerate() {
-                let f = &f;
-                handles.push(s.spawn(move || {
-                    for (i, o) in co.iter_mut().enumerate() {
-                        *o = f(ci * chunk + i);
-                    }
-                }));
+                let lo = ci * chunk;
+                let panel = &data[lo * n..(lo + co.len()) * n];
+                handles.push(s.spawn(move || blas::dot_panel(panel, n, r, co)));
             }
             for h in handles {
                 h.join().expect("sweep worker panicked");
@@ -199,6 +208,16 @@ impl Backend for NativeBackend {
     }
 
     fn correlation(&self, design: &RegisteredDesign, r: &[f64]) -> Result<Option<Vec<f64>>> {
+        let mut c = Vec::new();
+        Ok(self.correlation_into(design, r, &mut c)?.then_some(c))
+    }
+
+    fn correlation_into(
+        &self,
+        design: &RegisteredDesign,
+        r: &[f64],
+        c: &mut Vec<f64>,
+    ) -> Result<bool> {
         let data = Self::design_data(design)?;
         if r.len() != design.n {
             return Err(crate::err!(
@@ -207,11 +226,9 @@ impl Backend for NativeBackend {
                 design.n
             ));
         }
-        let mut c = vec![0.0; design.p];
-        self.par_map(&mut c, design.n, |j| {
-            blas::dot(Self::column(data, design.n, j), r)
-        });
-        Ok(Some(c))
+        c.resize(design.p, 0.0);
+        self.par_sweep(data, design.n, r, c);
+        Ok(true)
     }
 
     fn kkt_sweep(
@@ -220,21 +237,34 @@ impl Backend for NativeBackend {
         design: &RegisteredDesign,
         y: &[f64],
         eta: &[f64],
-        _lambda: f64,
+        lambda: f64,
     ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        let (mut c, mut resid) = (Vec::new(), Vec::new());
+        Ok(self
+            .kkt_sweep_into(loss, design, y, eta, lambda, &mut c, &mut resid)?
+            .then_some((c, resid)))
+    }
+
+    fn kkt_sweep_into(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        _lambda: f64,
+        c: &mut Vec<f64>,
+        resid: &mut Vec<f64>,
+    ) -> Result<bool> {
         if matches!(loss, Loss::Poisson) {
-            return Ok(None);
+            return Ok(false);
         }
         let data = Self::design_data(design)?;
         Self::check_vectors(design, y, eta)?;
-        let mut resid = vec![0.0; design.n];
-        loss.pseudo_residual_into(y, eta, &mut resid);
-        let mut c = vec![0.0; design.p];
-        let r = &resid;
-        self.par_map(&mut c, design.n, |j| {
-            blas::dot(Self::column(data, design.n, j), r)
-        });
-        Ok(Some((c, resid)))
+        resid.resize(design.n, 0.0);
+        loss.pseudo_residual_into(y, eta, resid);
+        c.resize(design.p, 0.0);
+        self.par_sweep(data, design.n, resid, c);
+        Ok(true)
     }
 
     fn kkt_sweep_batch(
@@ -246,30 +276,50 @@ impl Backend for NativeBackend {
         lambdas: &[f64],
         l1_norm: f64,
     ) -> Result<Option<KktBatch>> {
+        let mut batch = KktBatch::default();
+        Ok(self
+            .kkt_sweep_batch_into(loss, design, y, eta, lambdas, l1_norm, &mut batch)?
+            .then_some(batch))
+    }
+
+    fn kkt_sweep_batch_into(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        y: &[f64],
+        eta: &[f64],
+        lambdas: &[f64],
+        l1_norm: f64,
+        batch: &mut KktBatch,
+    ) -> Result<bool> {
         if matches!(loss, Loss::Poisson) || lambdas.is_empty() {
-            return Ok(None);
+            return Ok(false);
         }
         let data = Self::design_data(design)?;
         Self::check_vectors(design, y, eta)?;
-        let mut resid = vec![0.0; design.n];
-        loss.pseudo_residual_into(y, eta, &mut resid);
-        let mut c = vec![0.0; design.p];
-        let r = &resid;
-        self.par_map(&mut c, design.n, |j| {
-            blas::dot(Self::column(data, design.n, j), r)
-        });
+        batch.resid.resize(design.n, 0.0);
+        loss.pseudo_residual_into(y, eta, &mut batch.resid);
+        batch.c.resize(design.p, 0.0);
+        self.par_sweep(data, design.n, &batch.resid, &mut batch.c);
         // One sweep, B masks: the per-λ sphere tests reuse c (Larsson
         // 2021 — the O(pB) mask pass is marginal next to the O(np)
-        // sweep it amortizes).
-        let xt_inf = blas::amax(&c);
-        let keep = lambdas
-            .iter()
-            .map(|&l| {
-                let gap = loss.duality_gap(y, eta, &resid, xt_inf, l, l1_norm);
-                crate::screening::lookahead_keep(&c, &design.col_norms, xt_inf, gap, l, 0.0)
-            })
-            .collect();
-        Ok(Some(KktBatch { c, resid, keep }))
+        // sweep it amortizes). Mask buffers are reused across batches.
+        let xt_inf = blas::amax(&batch.c);
+        batch.keep.truncate(lambdas.len());
+        batch.keep.resize_with(lambdas.len(), Vec::new);
+        for (keep, &l) in batch.keep.iter_mut().zip(lambdas) {
+            let gap = loss.duality_gap(y, eta, &batch.resid, xt_inf, l, l1_norm);
+            crate::screening::lookahead_keep_into(
+                &batch.c,
+                &design.col_norms,
+                xt_inf,
+                gap,
+                l,
+                0.0,
+                keep,
+            );
+        }
+        Ok(true)
     }
 
     fn gram_block(
@@ -281,6 +331,22 @@ impl Backend for NativeBackend {
         d: usize,
         n: usize,
     ) -> Result<Option<Vec<f64>>> {
+        let mut out = Vec::new();
+        Ok(self
+            .gram_block_into(xe_t, w, xd_t, e, d, n, &mut out)?
+            .then_some(out))
+    }
+
+    fn gram_block_into(
+        &self,
+        xe_t: &[f64],
+        w: Option<&[f64]>,
+        xd_t: &[f64],
+        e: usize,
+        d: usize,
+        n: usize,
+        out: &mut Vec<f64>,
+    ) -> Result<bool> {
         if xe_t.len() != e * n || xd_t.len() != d * n || w.is_some_and(|w| w.len() != n) {
             return Err(crate::err!(
                 "gram_block shape mismatch: xe {}, xd {}, w {} for (e={e}, d={d}, n={n})",
@@ -289,22 +355,23 @@ impl Backend for NativeBackend {
                 w.map_or(n, <[f64]>::len)
             ));
         }
+        out.resize(e * d, 0.0);
         if e * d == 0 {
-            return Ok(Some(Vec::new()));
+            return Ok(true);
         }
         // Row-major (e, d) panel: out[a*d + b] = Σ_i xe[a,i] w[i] xd[b,i].
-        let mut out = vec![0.0; e * d];
-        self.par_map_rows(e, d, &mut out, d * n, |a, row| {
+        // Each row streams xa once against PANEL_BLOCK xd columns; the
+        // per-entry accumulation is exactly the scalar dot / dot_w
+        // (products commute bitwise, and dot_w rounds w·xa once before
+        // meeting the column — see blas::dot_w_block).
+        self.par_map_rows(e, d, out, d * n, |a, row| {
             let xa = &xe_t[a * n..(a + 1) * n];
-            for (b, o) in row.iter_mut().enumerate() {
-                let xb = &xd_t[b * n..(b + 1) * n];
-                *o = match w {
-                    None => blas::dot(xa, xb),
-                    Some(w) => blas::dot_w(xa, xb, w),
-                };
+            match w {
+                None => blas::dot_panel(xd_t, n, xa, row),
+                Some(w) => blas::dot_w_panel(xd_t, n, xa, w, row),
             }
         });
-        Ok(Some(out))
+        Ok(true)
     }
 }
 

@@ -200,12 +200,31 @@ pub fn lookahead_keep(
     lambda: f64,
     slack: f64,
 ) -> Vec<bool> {
+    let mut keep = Vec::new();
+    lookahead_keep_into(c, col_norms, xt_inf, gap, lambda, slack, &mut keep);
+    keep
+}
+
+/// Allocation-free twin of [`lookahead_keep`]: writes the mask into a
+/// caller-owned buffer (cleared first) so the steady-state path loop
+/// can reuse mask storage across look-ahead batches.
+pub fn lookahead_keep_into(
+    c: &[f64],
+    col_norms: &[f64],
+    xt_inf: f64,
+    gap: f64,
+    lambda: f64,
+    slack: f64,
+    keep: &mut Vec<bool>,
+) {
     let scale = lambda.max(xt_inf);
     let radius = (2.0 * gap.max(0.0)).sqrt() / lambda;
-    c.iter()
-        .zip(col_norms)
-        .map(|(cj, nj)| cj.abs() / scale >= 1.0 - nj * radius - slack)
-        .collect()
+    keep.clear();
+    keep.extend(
+        c.iter()
+            .zip(col_norms)
+            .map(|(cj, nj)| cj.abs() / scale >= 1.0 - nj * radius - slack),
+    );
 }
 
 /// EDPP (Enhanced Dual Polytope Projection), sequential, for the

@@ -100,17 +100,59 @@ impl SolveState {
 
     /// Support of β.
     pub fn active_set(&self) -> Vec<usize> {
-        self.beta
-            .iter()
-            .enumerate()
-            .filter(|(_, b)| **b != 0.0)
-            .map(|(j, _)| j)
-            .collect()
+        let mut out = Vec::new();
+        self.active_set_into(&mut out);
+        out
+    }
+
+    /// Support of β, written into a caller-owned buffer so the per-step
+    /// path loop reuses one allocation instead of collecting a fresh
+    /// `Vec` every step.
+    pub fn active_set_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(
+            self.beta
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| **b != 0.0)
+                .map(|(j, _)| j),
+        );
+    }
+}
+
+/// Reusable solver buffers. One instance lives in the path driver's
+/// [`Workspace`](crate::path::Workspace) and is threaded through every
+/// subproblem solve; the buffers grow to the problem size once and are
+/// then reused for the rest of the path.
+#[derive(Default)]
+pub struct SolverScratch {
+    order: Vec<usize>,
+    w: Vec<f64>,
+    d_eta: Vec<f64>,
+    weighted_resid: Vec<f64>,
+    beta0: Vec<f64>,
+    trial_eta: Vec<f64>,
+    wx: Vec<f64>,
+}
+
+impl SolverScratch {
+    /// Heap capacity held by the scratch, in bytes (profile accounting).
+    pub fn capacity_bytes(&self) -> usize {
+        8 * (self.order.capacity()
+            + self.w.capacity()
+            + self.d_eta.capacity()
+            + self.weighted_resid.capacity()
+            + self.beta0.capacity()
+            + self.trial_eta.capacity()
+            + self.wx.capacity())
     }
 }
 
 /// Solve the subproblem restricted to `working`. Returns pass count and
 /// final gap. `col_sq_norms[j]` must hold ‖xⱼ‖² for j ∈ working.
+///
+/// Allocates its own [`SolverScratch`]; the path driver calls
+/// [`solve_subproblem_with`] instead to reuse one scratch across steps.
 #[allow(clippy::too_many_arguments)]
 pub fn solve_subproblem<D: Design + ?Sized>(
     design: &D,
@@ -124,6 +166,37 @@ pub fn solve_subproblem<D: Design + ?Sized>(
     settings: &CdSettings,
     rng: &mut Xoshiro256pp,
 ) -> SubResult {
+    let mut scratch = SolverScratch::default();
+    solve_subproblem_with(
+        design,
+        y,
+        loss,
+        lambda,
+        working,
+        state,
+        col_sq_norms,
+        zeta,
+        settings,
+        rng,
+        &mut scratch,
+    )
+}
+
+/// [`solve_subproblem`] with caller-owned scratch buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_subproblem_with<D: Design + ?Sized>(
+    design: &D,
+    y: &[f64],
+    loss: Loss,
+    lambda: f64,
+    working: &[usize],
+    state: &mut SolveState,
+    col_sq_norms: &[f64],
+    zeta: f64,
+    settings: &CdSettings,
+    rng: &mut Xoshiro256pp,
+    scratch: &mut SolverScratch,
+) -> SubResult {
     match loss {
         Loss::Gaussian => solve_gaussian(
             design,
@@ -135,6 +208,7 @@ pub fn solve_subproblem<D: Design + ?Sized>(
             zeta,
             settings,
             rng,
+            scratch,
         ),
         _ => solve_glm(
             design,
@@ -146,6 +220,7 @@ pub fn solve_subproblem<D: Design + ?Sized>(
             zeta,
             settings,
             rng,
+            scratch,
         ),
     }
 }
@@ -178,11 +253,14 @@ fn solve_gaussian<D: Design + ?Sized>(
     zeta: f64,
     settings: &CdSettings,
     rng: &mut Xoshiro256pp,
+    scratch: &mut SolverScratch,
 ) -> SubResult {
     let tol = settings.eps * zeta;
     // Maintain r = y − Xβ directly.
     state.refresh(design, y, Loss::Gaussian);
-    let mut order: Vec<usize> = working.to_vec();
+    let order = &mut scratch.order;
+    order.clear();
+    order.extend_from_slice(working);
     let mut passes = 0;
 
     loop {
@@ -203,9 +281,9 @@ fn solve_gaussian<D: Design + ?Sized>(
             };
         }
         if settings.shuffle {
-            rng.shuffle(&mut order);
+            rng.shuffle(order);
         }
-        for &j in &order {
+        for &j in order.iter() {
             let vj = col_sq_norms[j];
             if vj <= 0.0 {
                 continue;
@@ -234,15 +312,29 @@ fn solve_glm<D: Design + ?Sized>(
     zeta: f64,
     settings: &CdSettings,
     rng: &mut Xoshiro256pp,
+    scratch: &mut SolverScratch,
 ) -> SubResult {
     let n = y.len();
     let tol = settings.eps * zeta;
     state.refresh(design, y, loss);
-    let mut order: Vec<usize> = working.to_vec();
+    let SolverScratch {
+        order,
+        w,
+        d_eta,
+        weighted_resid,
+        beta0,
+        trial_eta,
+        wx,
+    } = scratch;
+    order.clear();
+    order.extend_from_slice(working);
     let mut passes = 0;
-    let mut w = vec![0.0; n];
-    let mut d_eta = vec![0.0; n];
-    let mut weighted_resid = vec![0.0; n];
+    w.clear();
+    w.resize(n, 0.0);
+    d_eta.clear();
+    d_eta.resize(n, 0.0);
+    weighted_resid.clear();
+    weighted_resid.resize(n, 0.0);
 
     loop {
         let gap = working_gap(design, y, loss, lambda, working, state);
@@ -256,46 +348,44 @@ fn solve_glm<D: Design + ?Sized>(
 
         // Build the local quadratic model at the current β (paper
         // §3.3.3): weights w = f″(η), gradient via the pseudo-residual.
-        loss.weights_into(&state.eta, &mut w);
+        loss.weights_into(&state.eta, w);
         // Guard against vanishing curvature far in the tails.
         for wi in w.iter_mut() {
             *wi = wi.max(1e-10);
         }
         d_eta.iter_mut().for_each(|v| *v = 0.0);
-        let beta0: Vec<f64> = order.iter().map(|&j| state.beta[j]).collect();
+        beta0.clear();
+        beta0.extend(order.iter().map(|&j| state.beta[j]));
 
         // Inner CD epochs on the quadratic model.
         for _ in 0..settings.inner_epochs.max(1) {
             if settings.shuffle {
-                rng.shuffle(&mut order);
+                rng.shuffle(order);
             }
             // weighted_resid = w ⊙ d_eta, updated incrementally below.
             for i in 0..n {
                 weighted_resid[i] = w[i] * d_eta[i];
             }
-            for &j in &order {
+            for &j in order.iter() {
                 // h_j = xⱼᵀ D(w) xⱼ ; recomputed per epoch because w is
                 // fixed within the quadratic model.
-                let hj = design_weighted_sq_norm(design, j, &w);
+                let hj = design_weighted_sq_norm(design, j, w);
                 if hj <= 0.0 {
                     continue;
                 }
                 let bj = state.beta[j];
                 // smooth grad of model: −xⱼᵀresid + xⱼᵀ(w ⊙ d_eta)
-                let g = -design.col_dot(j, &state.resid) + design.col_dot(j, &weighted_resid);
+                let g = -design.col_dot(j, &state.resid) + design.col_dot(j, weighted_resid);
                 let u = hj * bj - g;
                 let new = soft_threshold(u, lambda) / (hj + settings.phi);
                 if new != bj {
                     let delta = new - bj;
                     // d_eta += delta * x_j ; weighted_resid += delta * w ⊙ x_j
-                    design.col_axpy(j, delta, &mut d_eta);
+                    design.col_axpy(j, delta, d_eta);
                     state.beta[j] = new;
-                    // Recompute the weighted residual contribution lazily:
-                    // cheaper to axpy on weighted_resid with the weighted
-                    // column; we approximate by scaling after the fact.
                     // Correctness requires weighted_resid == w ⊙ d_eta, so
-                    // update it exactly:
-                    design_col_axpy_weighted(design, j, delta, &w, &mut weighted_resid);
+                    // update it exactly through the reusable `wx` buffer.
+                    design_col_axpy_weighted(design, j, delta, w, weighted_resid, wx);
                 }
             }
             passes += 1;
@@ -305,9 +395,10 @@ fn solve_glm<D: Design + ?Sized>(
         // β updates). Line search on the true objective (Blitz).
         let mut alpha = 1.0;
         if settings.line_search {
-            let p0 = loss.value(y, &state.eta) + lambda * state.l1_norm_with(&order, &beta0);
+            let p0 = loss.value(y, &state.eta) + lambda * state.l1_norm_with(order, beta0);
             let l1_new = state.l1_norm();
-            let mut trial_eta = vec![0.0; n];
+            trial_eta.clear();
+            trial_eta.resize(n, 0.0);
             let mut accepted = false;
             for _ in 0..24 {
                 for i in 0..n {
@@ -316,8 +407,8 @@ fn solve_glm<D: Design + ?Sized>(
                 // ℓ₁ norm along the segment interpolates ≤ linearly:
                 // ‖β0 + α(β−β0)‖₁ ≤ (1−α)‖β0‖₁ + α‖β‖₁; using the convex
                 // bound keeps the test conservative.
-                let l1_alpha = (1.0 - alpha) * state.l1_norm_with(&order, &beta0) + alpha * l1_new;
-                let p_trial = loss.value(y, &trial_eta) + lambda * l1_alpha;
+                let l1_alpha = (1.0 - alpha) * state.l1_norm_with(order, beta0) + alpha * l1_new;
+                let p_trial = loss.value(y, trial_eta) + lambda * l1_alpha;
                 if p_trial <= p0 + 1e-12 * p0.abs().max(1.0) {
                     accepted = true;
                     break;
@@ -330,13 +421,13 @@ fn solve_glm<D: Design + ?Sized>(
         }
 
         if alpha == 1.0 {
-            blas::axpy(1.0, &d_eta, &mut state.eta);
+            blas::axpy(1.0, d_eta, &mut state.eta);
         } else {
             // Scale β back toward β0 and rebuild η consistently.
             for (k, &j) in order.iter().enumerate() {
                 state.beta[j] = beta0[k] + alpha * (state.beta[j] - beta0[k]);
             }
-            blas::axpy(alpha, &d_eta, &mut state.eta);
+            blas::axpy(alpha, d_eta, &mut state.eta);
             if alpha == 0.0 {
                 // Stalled: bail out with the current gap.
                 loss.pseudo_residual_into(y, &state.eta, &mut state.resid);
@@ -368,9 +459,10 @@ fn design_weighted_sq_norm<D: Design + ?Sized>(design: &D, j: usize, w: &[f64]) 
     design.gram_weighted(j, j, Some(w))
 }
 
-/// v ← v + alpha · (w ⊙ xⱼ). Implemented via a temporary-free pass using
-/// the design's column access; for dense designs this costs one extra
-/// O(n) loop, which the prox-Newton structure amortizes.
+/// v ← v + alpha · (w ⊙ xⱼ). Expressing w ⊙ xⱼ generically requires a
+/// materialized column: axpy into a zeroed caller-owned buffer, then
+/// fold through the weights. The buffer lives in [`SolverScratch`], so
+/// the steady-state solve performs no allocation here.
 #[inline]
 fn design_col_axpy_weighted<D: Design + ?Sized>(
     design: &D,
@@ -378,30 +470,19 @@ fn design_col_axpy_weighted<D: Design + ?Sized>(
     alpha: f64,
     w: &[f64],
     v: &mut [f64],
+    buf: &mut Vec<f64>,
 ) {
-    // Express w ⊙ xⱼ via two axpys is impossible generically; instead use
-    // col_dot-style traversal: reuse col_axpy on a scratch? Simplest
-    // correct approach: axpy into a zero scratch then fold. To avoid the
-    // allocation we exploit that col_axpy visits only the column's
-    // non-zeros: run it on `v` with a callback-free trick — materialize
-    // through a thread-local scratch.
-    thread_local! {
-        static SCRATCH: std::cell::RefCell<Vec<f64>> = const { std::cell::RefCell::new(Vec::new()) };
+    if buf.len() < v.len() {
+        buf.resize(v.len(), 0.0);
     }
-    SCRATCH.with(|s| {
-        let mut s = s.borrow_mut();
-        if s.len() < v.len() {
-            s.resize(v.len(), 0.0);
-        }
-        let scratch = &mut s[..v.len()];
-        scratch.iter_mut().for_each(|x| *x = 0.0);
-        design.col_axpy(j, alpha, scratch);
-        for i in 0..v.len() {
-            // scratch is sparse for CSC columns, but we cannot see the
-            // pattern here; the dense pass is the price of genericity.
-            v[i] += w[i] * scratch[i];
-        }
-    });
+    let scratch = &mut buf[..v.len()];
+    scratch.iter_mut().for_each(|x| *x = 0.0);
+    design.col_axpy(j, alpha, scratch);
+    for i in 0..v.len() {
+        // scratch is sparse for CSC columns, but we cannot see the
+        // pattern here; the dense pass is the price of genericity.
+        v[i] += w[i] * scratch[i];
+    }
 }
 
 #[cfg(test)]

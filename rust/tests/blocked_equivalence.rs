@@ -1,0 +1,179 @@
+//! Integration: the register-blocked panel kernels are bit-identical
+//! to their scalar references — across block widths, ragged column
+//! counts, and thread counts.
+//!
+//! The accumulation-order contract (linalg/blas.rs): a blocked kernel
+//! replays the scalar kernel's exact mul_add sequence per column, so
+//! neither the block width nor a thread-chunk boundary may change a
+//! single bit. Everything here asserts `==` on f64 outputs, never
+//! tolerance — the same bar the shard-equivalence suite holds, and
+//! the reason `--threads`/`--shards` stay pure wall-clock knobs.
+//! `make test-paranoid` runs this suite with the runtime invariant
+//! layer compiled in.
+
+mod common;
+
+use common::test_shape;
+use hessian_screening::data::{DesignMatrix, SyntheticSpec};
+use hessian_screening::linalg::blas;
+use hessian_screening::loss::Loss;
+use hessian_screening::path::PathFitter;
+use hessian_screening::rng::Xoshiro256pp;
+use hessian_screening::runtime::RuntimeEngine;
+use hessian_screening::screening::ScreeningKind;
+
+/// Thread counts every test sweeps: serial, and past the native
+/// backend's chunking so panel boundaries land mid-block.
+const THREADS: [usize; 2] = [1, 4];
+
+fn gaussian(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut v = vec![0.0; n];
+    rng.fill_gaussian(&mut v);
+    v
+}
+
+fn dense_of(data: &hessian_screening::data::Dataset) -> &hessian_screening::linalg::DenseMatrix {
+    match &data.design {
+        DesignMatrix::Dense(m) => m,
+        _ => unreachable!("test data is dense"),
+    }
+}
+
+#[test]
+fn dot_block_matches_scalar_at_widths_1_2_4_8() {
+    // Vector lengths straddling the 8-lane chunking: remainder tails
+    // of every size, plus the empty product.
+    for n in [0usize, 1, 7, 8, 9, 16, 63, 64, 65, 200] {
+        let y = gaussian(n, 11);
+        let cols: Vec<Vec<f64>> = (0..8).map(|j| gaussian(n, 100 + j as u64)).collect();
+        let want: Vec<f64> = cols.iter().map(|c| blas::dot(c, &y)).collect();
+        let c = |j: usize| cols[j].as_slice();
+        assert_eq!(blas::dot_block::<1>([c(0)], &y), [want[0]], "B=1 n={n}");
+        assert_eq!(
+            blas::dot_block::<2>([c(0), c(1)], &y),
+            [want[0], want[1]],
+            "B=2 n={n}"
+        );
+        assert_eq!(
+            blas::dot_block::<4>([c(0), c(1), c(2), c(3)], &y),
+            [want[0], want[1], want[2], want[3]],
+            "B=4 n={n}"
+        );
+        assert_eq!(
+            blas::dot_block::<8>([c(0), c(1), c(2), c(3), c(4), c(5), c(6), c(7)], &y)
+                .as_slice(),
+            want.as_slice(),
+            "B=8 n={n}"
+        );
+    }
+}
+
+#[test]
+fn panels_match_scalar_loops_at_ragged_column_counts() {
+    // Column counts ragged against PANEL_BLOCK = 4: full blocks, a
+    // lone tail, and everything between.
+    let n = 33;
+    let x = gaussian(n, 3);
+    let w: Vec<f64> = gaussian(n, 4).iter().map(|v| v.abs() + 0.1).collect();
+    for cols in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 13] {
+        let panel: Vec<f64> = (0..cols)
+            .flat_map(|j| gaussian(n, 40 + j as u64))
+            .collect();
+        let mut got = vec![f64::NAN; cols];
+        blas::dot_panel(&panel, n, &x, &mut got);
+        let want: Vec<f64> = (0..cols)
+            .map(|j| blas::dot(&panel[j * n..(j + 1) * n], &x))
+            .collect();
+        assert_eq!(got, want, "dot_panel cols={cols}");
+
+        let mut got_w = vec![f64::NAN; cols];
+        blas::dot_w_panel(&panel, n, &x, &w, &mut got_w);
+        // dot_w streams `x` in its first slot: w·x rounds once before
+        // meeting the column (the non-commutative direction).
+        let want_w: Vec<f64> = (0..cols)
+            .map(|j| blas::dot_w(&x, &panel[j * n..(j + 1) * n], &w))
+            .collect();
+        assert_eq!(got_w, want_w, "dot_w_panel cols={cols}");
+    }
+}
+
+#[test]
+fn threaded_correlation_sweep_matches_scalar_columns() {
+    // p ragged against both PANEL_BLOCK and the 4-way thread chunking,
+    // so chunk boundaries fall inside blocks.
+    let (n, p) = test_shape((57, 1_001), (13, 101));
+    let data = SyntheticSpec::new(n, p, 8).rho(0.3).seed(71).generate();
+    let dense = dense_of(&data);
+    let r = gaussian(n, 5);
+    let want: Vec<f64> = (0..p).map(|j| blas::dot(dense.col(j), &r)).collect();
+    for threads in THREADS {
+        let engine = RuntimeEngine::native_threaded(threads);
+        let reg = engine.register_design(dense.data(), n, p).unwrap();
+        let got = engine.correlation(&reg, &r).unwrap().expect("native kernel");
+        assert_eq!(got, want, "threads={threads}: blocked sweep vs scalar dots");
+    }
+}
+
+#[test]
+fn threaded_gram_block_matches_scalar_weighted_dots() {
+    // e = 7 rows over up to 4 workers: ragged row split; d = 5 is
+    // ragged against PANEL_BLOCK.
+    let (e, d, n) = (7usize, 5usize, 41usize);
+    let xe_t: Vec<f64> = (0..e).flat_map(|a| gaussian(n, 200 + a as u64)).collect();
+    let xd_t: Vec<f64> = (0..d).flat_map(|b| gaussian(n, 300 + b as u64)).collect();
+    let w: Vec<f64> = (0..n).map(|i| 0.2 + 0.1 * ((i % 4) as f64)).collect();
+    for threads in THREADS {
+        let engine = RuntimeEngine::native_threaded(threads);
+        let got_w = engine
+            .gram_block(&xe_t, Some(&w), &xd_t, e, d, n)
+            .unwrap()
+            .expect("native kernel");
+        let got_u = engine
+            .gram_block(&xe_t, None, &xd_t, e, d, n)
+            .unwrap()
+            .expect("native kernel");
+        for a in 0..e {
+            let xa = &xe_t[a * n..(a + 1) * n];
+            for b in 0..d {
+                let xb = &xd_t[b * n..(b + 1) * n];
+                assert_eq!(
+                    got_w[a * d + b],
+                    blas::dot_w(xa, xb, &w),
+                    "threads={threads} weighted ({a},{b})"
+                );
+                assert_eq!(
+                    got_u[a * d + b],
+                    blas::dot(xb, xa),
+                    "threads={threads} unweighted ({a},{b})"
+                );
+            }
+        }
+    }
+}
+
+/// The workspace arena's observable: after the warm-up steps the path
+/// loop reuses its buffers, so later steps report zero workspace
+/// growth, and the per-step kernel-time subsets stay consistent.
+#[test]
+fn path_workspace_reaches_allocation_free_steady_state() {
+    let (n, p) = test_shape((60, 400), (16, 61));
+    let data = SyntheticSpec::new(n, p, 6).rho(0.3).seed(91).generate();
+    let fitter = PathFitter::new(Loss::Gaussian, ScreeningKind::Hessian);
+    let fit = fitter.fit(&data.design, &data.response);
+    assert!(fit.steps.len() > 5, "path long enough to settle");
+    let growth: Vec<usize> = fit.steps.iter().map(|s| s.alloc_bytes).collect();
+    // The arena grows while the active set grows, then stops. Exact
+    // settle time depends on the screening trajectory, so the bar is
+    // the property itself: allocation-free steps exist in the tail.
+    assert!(
+        growth.iter().skip(growth.len() / 2).any(|&b| b == 0),
+        "no allocation-free steps in the second half of the path: {growth:?}"
+    );
+    for (k, s) in fit.steps.iter().enumerate() {
+        // t_sweep/t_panel are nested timer reads inside the t_kkt /
+        // t_hessian regions, so subsets hold up to clock granularity.
+        assert!(s.t_sweep <= s.t_kkt + 1e-9, "step {k}: t_sweep > t_kkt");
+        assert!(s.t_panel <= s.t_hessian + 1e-9, "step {k}: t_panel > t_hessian");
+    }
+}

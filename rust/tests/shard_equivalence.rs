@@ -21,7 +21,7 @@ use common::test_shape;
 use hessian_screening::data::{DesignMatrix, SyntheticSpec};
 use hessian_screening::loss::Loss;
 use hessian_screening::path::{PathFitter, PathSettings};
-use hessian_screening::runtime::{EngineSweep, RuntimeEngine};
+use hessian_screening::runtime::{EngineSweep, KktBatch, RuntimeEngine};
 use hessian_screening::screening::ScreeningKind;
 
 fn dense_of(data: &hessian_screening::data::Dataset) -> &hessian_screening::linalg::DenseMatrix {
@@ -206,6 +206,78 @@ fn sharded_path_fits_bit_identical_to_unsharded() {
                 "{loss:?}: unsharded engine must record shards = 1"
             );
         }
+    }
+}
+
+/// The allocation-reusing `_into` twins must return bit-identical
+/// buffers to the allocating entry points — through the native
+/// backend's true in-place kernels AND the sharded backend's default
+/// shims — with caller buffers deliberately dirty and wrong-sized, and
+/// reused across calls (the workspace-arena steady state).
+#[test]
+fn into_twins_bit_identical_native_and_sharded() {
+    let (n, p) = test_shape((48, 311), (14, 53)); // ragged for 3 shards
+    let loss = Loss::Logistic;
+    let data = SyntheticSpec::new(n, p, 6)
+        .rho(0.3)
+        .loss(loss)
+        .seed(61)
+        .generate();
+    let dense = dense_of(&data);
+    let eta = vec![0.05; n];
+    let lambdas = [0.8, 0.55, 0.3];
+    let engines = [
+        RuntimeEngine::native_threaded(test_threads()),
+        RuntimeEngine::native_sharded(3, test_threads()),
+    ];
+    for engine in &engines {
+        let name = engine.backend_name();
+        let reg = engine.register_design(dense.data(), n, p).unwrap();
+
+        let want_c = engine
+            .correlation(&reg, &data.response)
+            .unwrap()
+            .expect("kernel");
+        let mut c = vec![f64::NAN; 7]; // dirty + wrong-sized on purpose
+        assert!(engine.correlation_into(&reg, &data.response, &mut c).unwrap());
+        assert_eq!(c, want_c, "{name}: correlation_into");
+
+        let (want_kc, want_kr) = engine
+            .kkt_sweep(loss, &reg, &data.response, &eta, 0.5)
+            .unwrap()
+            .expect("kernel");
+        let mut resid = vec![f64::NAN; 3];
+        assert!(engine
+            .kkt_sweep_into(loss, &reg, &data.response, &eta, 0.5, &mut c, &mut resid)
+            .unwrap());
+        assert_eq!(c, want_kc, "{name}: kkt_sweep_into c");
+        assert_eq!(resid, want_kr, "{name}: kkt_sweep_into resid");
+
+        let want_b = engine
+            .kkt_sweep_batch(loss, &reg, &data.response, &eta, &lambdas, 1.2)
+            .unwrap()
+            .expect("kernel");
+        let mut batch = KktBatch::default();
+        for round in 0..2 {
+            // Round 2 reuses the filled buffers — the steady state.
+            assert!(engine
+                .kkt_sweep_batch_into(loss, &reg, &data.response, &eta, &lambdas, 1.2, &mut batch)
+                .unwrap());
+            assert_eq!(batch.c, want_b.c, "{name} round {round}: batch c");
+            assert_eq!(batch.resid, want_b.resid, "{name} round {round}: batch resid");
+            assert_eq!(batch.keep, want_b.keep, "{name} round {round}: keep-masks");
+        }
+
+        let (e, d) = (3usize, 2usize);
+        let xe_t = &dense.data()[..e * n];
+        let xd_t = &dense.data()[e * n..(e + d) * n];
+        let want_g = engine
+            .gram_block(xe_t, None, xd_t, e, d, n)
+            .unwrap()
+            .expect("kernel");
+        let mut out = vec![f64::NAN; 1];
+        assert!(engine.gram_block_into(xe_t, None, xd_t, e, d, n, &mut out).unwrap());
+        assert_eq!(out, want_g, "{name}: gram_block_into");
     }
 }
 

@@ -23,6 +23,17 @@
 //!   path: timing belongs in the drivers (the shard pipeline times its
 //!   own staging reads), never in inner loops or I/O decode loops.
 //!
+//! One rule is *advisory* — reported as a warning, never failing the
+//! run:
+//!
+//! * `no-hot-alloc` — no `Vec::new()` / `vec![…]` / `.to_vec()` inside
+//!   a `for`/`while`/`loop` body of the hot-path kernel files
+//!   (`linalg/blas.rs`, `runtime/native.rs`): the hot path is
+//!   allocation-free by design (workspace arenas + `_into` kernels),
+//!   and an allocation sneaking back into an inner loop is the way
+//!   that property rots. Advisory because loop-region detection is
+//!   lexical, not a parse.
+//!
 //! Each rule has its own allowlist file under `xtask/lint/allow/`
 //! (entries are `<path>` or `<path>:<line>` relative to `rust/src`;
 //! `#` starts a comment). Unused entries are reported as warnings so
@@ -50,6 +61,9 @@ const SPAWN_ALLOWED: &[&str] = &["runtime/shard.rs", "coordinator/"];
 const KERNEL_FILES: &[&str] = &["linalg/", "runtime/native.rs", "storage/"];
 /// Binary/CLI surfaces where `.unwrap()` on user input is acceptable.
 const UNWRAP_EXEMPT: &[&str] = &["cli.rs", "main.rs"];
+/// Hot-path kernel files that must stay allocation-free inside loops
+/// (the workspace-arena contract).
+const HOT_ALLOC_FILES: &[&str] = &["linalg/blas.rs", "runtime/native.rs"];
 
 /// How far above an `unsafe` token a `// SAFETY:` comment may sit.
 const SAFETY_LOOKBACK: usize = 3;
@@ -61,6 +75,10 @@ pub const RULE_IDS: &[&str] = &[
     "no-raw-spawn",
     "no-kernel-clock",
 ];
+
+/// Warn-only rules: reported, allowlisted, but never part of the exit
+/// status.
+pub const ADVISORY_RULE_IDS: &[&str] = &["no-hot-alloc"];
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Violation {
@@ -233,6 +251,70 @@ fn test_regions(masked_lines: &[String]) -> Vec<bool> {
     in_test
 }
 
+/// Does this masked line open a `for`/`while`/`loop` body? `for` is
+/// only a loop when it is neither an `impl … for …` header nor an
+/// HRTB `for<'a>` binder.
+fn is_loop_header(ml: &str) -> bool {
+    if has_word(ml, "while") || has_word(ml, "loop") {
+        return true;
+    }
+    if has_word(ml, "impl") {
+        return false;
+    }
+    let bytes = ml.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = ml[start..].find("for") {
+        let p = start + pos;
+        let before_ok = p == 0 || !is_ident_char(bytes[p - 1]);
+        let after = p + 3;
+        let after_ok = after >= bytes.len() || !is_ident_char(bytes[after]);
+        let not_hrtb = after >= bytes.len() || bytes[after] != b'<';
+        if before_ok && after_ok && not_hrtb {
+            return true;
+        }
+        start = p + 1;
+    }
+    false
+}
+
+/// Mark every line inside a loop body (header line included): from
+/// each loop header through the end of its brace-balanced block,
+/// computed on the masked text. Every header is scanned
+/// independently, so nested loops are covered by their outermost
+/// region.
+fn loop_regions(masked_lines: &[String]) -> Vec<bool> {
+    let mut in_loop = vec![false; masked_lines.len()];
+    for i in 0..masked_lines.len() {
+        if !is_loop_header(&masked_lines[i]) {
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut started = false;
+        let mut j = i;
+        while j < masked_lines.len() {
+            for ch in masked_lines[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if started && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        let end = j.min(masked_lines.len().saturating_sub(1));
+        for flag in in_loop.iter_mut().take(end + 1).skip(i) {
+            *flag = true;
+        }
+    }
+    in_loop
+}
+
 fn is_ident_char(c: u8) -> bool {
     c == b'_' || c.is_ascii_alphanumeric()
 }
@@ -352,6 +434,29 @@ fn rule_kernel_clock(f: &FileView, out: &mut Vec<Violation>) {
     }
 }
 
+/// Advisory: the hot-path kernels are allocation-free inside loops by
+/// design — allocations are hoisted into workspace arenas or taken as
+/// `_into` out-params. Lexical loop detection, hence warn-only.
+fn rule_hot_alloc(f: &FileView, out: &mut Vec<Violation>) {
+    if !path_matches(&f.rel, HOT_ALLOC_FILES) {
+        return;
+    }
+    let in_loop = loop_regions(&f.masked_lines);
+    for (idx, ml) in f.masked_lines.iter().enumerate() {
+        if f.in_test[idx] || !in_loop[idx] {
+            continue;
+        }
+        if ml.contains("Vec::new()") || ml.contains("vec!") || ml.contains(".to_vec()") {
+            out.push(f.violation(
+                "no-hot-alloc",
+                idx,
+                "heap allocation inside a kernel inner loop — hoist into a workspace \
+                 buffer (SweepScratch/SolverScratch/Workspace) or take an `_into` out-param",
+            ));
+        }
+    }
+}
+
 /// Run every rule over `(relative_path, contents)` pairs. Pure — this
 /// is the seam the unit tests drive with fixture snippets.
 fn check_files(files: &[(String, String)]) -> Vec<Violation> {
@@ -363,6 +468,7 @@ fn check_files(files: &[(String, String)]) -> Vec<Violation> {
         rule_unwrap(&f, &mut out);
         rule_spawn(&f, &mut out);
         rule_kernel_clock(&f, &mut out);
+        rule_hot_alloc(&f, &mut out);
     }
     out
 }
@@ -495,13 +601,14 @@ pub fn run(args: &[String]) -> ExitCode {
     let violations = check_files(&files);
 
     let mut allow: Vec<(&str, Allowlist)> = Vec::new();
-    for rule in RULE_IDS {
+    for rule in RULE_IDS.iter().chain(ADVISORY_RULE_IDS) {
         let path = allow_dir.join(allow_file_name(rule));
         let text = std::fs::read_to_string(&path).unwrap_or_default();
         allow.push((rule, Allowlist::parse(&text)));
     }
 
     let mut reported = 0usize;
+    let mut advisories = 0usize;
     for v in &violations {
         let permitted = allow
             .iter_mut()
@@ -510,8 +617,14 @@ pub fn run(args: &[String]) -> ExitCode {
         if permitted {
             continue;
         }
-        println!("error[{}] rust/src/{}:{}: {}", v.rule, v.path, v.line, v.msg);
-        reported += 1;
+        if ADVISORY_RULE_IDS.contains(&v.rule) {
+            // Advisory: visible, allowlistable, never the exit status.
+            println!("warning[{}] rust/src/{}:{}: {}", v.rule, v.path, v.line, v.msg);
+            advisories += 1;
+        } else {
+            println!("error[{}] rust/src/{}:{}: {}", v.rule, v.path, v.line, v.msg);
+            reported += 1;
+        }
     }
     for (rule, list) in &allow {
         for entry in list.unused() {
@@ -519,10 +632,12 @@ pub fn run(args: &[String]) -> ExitCode {
         }
     }
     println!(
-        "lint: {} files scanned, {} rules, {} violation(s)",
+        "lint: {} files scanned, {} rules ({} advisory), {} violation(s), {} advisory warning(s)",
         files.len(),
-        RULE_IDS.len(),
-        reported
+        RULE_IDS.len() + ADVISORY_RULE_IDS.len(),
+        ADVISORY_RULE_IDS.len(),
+        reported,
+        advisories
     );
     if reported > 0 {
         ExitCode::FAILURE
@@ -656,6 +771,38 @@ mod tests {
     }
 
     #[test]
+    fn hot_alloc_rule_flags_loop_allocations_in_kernel_files() {
+        let bad = "pub fn f(n: usize) {\n    for j in 0..n {\n        let tmp = vec![0.0; j];\n        std::hint::black_box(&tmp);\n    }\n}\n";
+        assert_eq!(rules_of(&check_one("linalg/blas.rs", bad)), vec!["no-hot-alloc"]);
+        assert_eq!(
+            rules_of(&check_one("runtime/native.rs", bad)),
+            vec!["no-hot-alloc"]
+        );
+        assert_eq!(check_one("linalg/blas.rs", bad)[0].line, 3);
+        // Drivers may allocate freely — the rule is kernel-file scoped.
+        assert!(check_one("path/mod.rs", bad).is_empty());
+
+        let while_clone = "pub fn f(x: &[f64]) {\n    let mut i = 0;\n    while i < x.len() {\n        let _c = x.to_vec();\n        i += 1;\n    }\n}\n";
+        assert_eq!(
+            rules_of(&check_one("runtime/native.rs", while_clone)),
+            vec!["no-hot-alloc"]
+        );
+    }
+
+    #[test]
+    fn hot_alloc_rule_ignores_hoisted_impl_headers_and_tests() {
+        // Allocation *before* the loop is the workspace pattern.
+        let hoisted = "pub fn f(n: usize) {\n    let mut tmp = Vec::new();\n    for j in 0..n {\n        tmp.push(j);\n    }\n}\n";
+        assert!(check_one("linalg/blas.rs", hoisted).is_empty());
+        // `impl Trait for Type` is not a loop header.
+        let imp = "pub struct S;\nimpl Clone for S {\n    fn clone(&self) -> S {\n        let _v: Vec<f64> = Vec::new();\n        S\n    }\n}\n";
+        assert!(check_one("runtime/native.rs", imp).is_empty());
+        // Test code is exempt, like every other rule.
+        let in_test = "pub fn f() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        for _ in 0..3 {\n            let _v = vec![1];\n        }\n    }\n}\n";
+        assert!(check_one("linalg/blas.rs", in_test).is_empty());
+    }
+
+    #[test]
     fn allowlist_permits_by_file_and_by_line_and_tracks_usage() {
         let v = Violation {
             rule: "no-unwrap",
@@ -689,6 +836,12 @@ mod tests {
         let allow_dir = root.join("xtask").join("lint").join("allow");
         let mut remaining = Vec::new();
         for v in &violations {
+            // Advisory rules warn without failing the run; holding the
+            // real tree to them here would silently promote them to
+            // blocking.
+            if ADVISORY_RULE_IDS.contains(&v.rule) {
+                continue;
+            }
             let text =
                 std::fs::read_to_string(allow_dir.join(allow_file_name(v.rule))).unwrap_or_default();
             if !Allowlist::parse(&text).permits(v) {
