@@ -18,6 +18,8 @@
 #                        paranoid, none)
 #   make check-oac       out-of-core acceptance: hx pack -> hx fit
 #                        --design end-to-end, truncated file must fail
+#   make check-cv        CV acceptance: the cv_equivalence suite plus
+#                        hx cv --profile smoke runs (resident + .hxd)
 #   make lint            the xtask invariant linter (blocking in CI)
 #   make test-paranoid   crate tests with runtime invariant checks
 #   make miri            miri over the concurrency subset (nightly)
@@ -41,7 +43,7 @@ NIGHTLY ?= nightly
 TSAN_TARGET ?= x86_64-unknown-linux-gnu
 
 .PHONY: all build test test-rust artifacts bench bench-compile bench-ci \
-        bench-baseline perf-gate check-features check-oac lint \
+        bench-baseline perf-gate check-features check-oac check-cv lint \
         test-paranoid miri tsan ci fmt clippy clean
 
 all: build
@@ -137,6 +139,24 @@ check-oac: build
 	    echo "check-oac: truncated file rejected as expected"; \
 	fi
 
+# Cross-validation acceptance, in two layers. First the equivalence
+# suite (CV curves bit-identical across fold-worker counts, fold views
+# vs. materialized subsets, engine-routed vs. host-path, .hxd vs.
+# resident), then end-to-end smoke through the real binary: a resident
+# `hx cv --profile` with an explicit thread split, and an out-of-core
+# one over a packed .hxd with a ragged shard count. Blocking in CI
+# (job `cv`).
+check-cv: build
+	$(CARGO) test -q --test cv_equivalence
+	tmp=$$(mktemp -d) && trap 'rm -rf "$$tmp"' EXIT; \
+	./target/release/hx cv --n 120 --p 300 --s 5 --folds 4 \
+	    --path-length 15 --threads 2 --engine-threads 1 \
+	    --folds-seed 7 --profile && \
+	./target/release/hx pack --out "$$tmp/cv.hxd" \
+	    --n 120 --p 301 --s 5 --seed 7 --block-cols 37 && \
+	./target/release/hx cv --design "$$tmp/cv.hxd" --folds 4 --shards 3 \
+	    --path-length 15 --threads 2 --profile
+
 # Project-invariant linter (xtask/src/lint.rs): SAFETY comments on
 # every unsafe block, no f32 in the f64-exact modules, no naked
 # unwraps in library code, no raw thread::spawn outside the pipeline
@@ -188,7 +208,7 @@ clippy:
 
 # Mirror .github/workflows/ci.yml locally (same targets CI calls; the
 # advisory miri/tsan jobs are opt-in because they need a nightly).
-ci: fmt clippy lint build test-rust bench-compile check-features check-oac
+ci: fmt clippy lint build test-rust bench-compile check-features check-oac check-cv
 
 clean:
 	$(CARGO) clean

@@ -19,13 +19,15 @@
 //!                      BENCH_sweeps.json at the repo root)
 
 use hessian_screening::cli::Args;
+use hessian_screening::cv::{cross_validate_with_engine, CvSettings};
 use hessian_screening::data::{DesignMatrix, SyntheticSpec};
 use hessian_screening::hessian::HessianTracker;
 use hessian_screening::linalg::{blas, Design};
 use hessian_screening::loss::Loss;
 use hessian_screening::metrics::Summary;
 use hessian_screening::rng::Xoshiro256pp;
-use hessian_screening::runtime::RuntimeEngine;
+use hessian_screening::runtime::{EngineSweep, RuntimeEngine};
+use hessian_screening::screening::ScreeningKind;
 use std::time::Instant;
 
 fn bench<F: FnMut()>(name: &str, reps: usize, mut f: F) -> Summary {
@@ -438,6 +440,53 @@ fn main() {
             );
         }
         let _ = std::fs::remove_file(&path);
+    }
+
+    // ---------------- cv suite (JSON-recorded) ----------------
+    // Engine-routed 5-fold CV over zero-copy fold views — the paper's
+    // §1 motivating workload end-to-end: one design registration,
+    // row-masked fold sweeps, warm per-worker path workspaces. Uses a
+    // dedicated smaller shape (CV fits 5 full paths per rep).
+    {
+        let (cn, cp) = (n.min(200), p.min(500));
+        let cdata = SyntheticSpec::new(cn, cp, 5).rho(0.2).snr(4.0).seed(5).generate();
+        let cdense = match &cdata.design {
+            DesignMatrix::Dense(m) => m.clone(),
+            _ => unreachable!(),
+        };
+        let cv_engine = RuntimeEngine::native_threaded(1);
+        let sweep = EngineSweep::new(&cv_engine, &cdense, Loss::Gaussian)
+            .unwrap()
+            .expect("native backend always binds dense designs");
+        let mut cs = CvSettings::default();
+        cs.n_folds = 5;
+        cs.path.path_length = 20;
+        cs.threads = 2;
+        cs.engine_threads = 1;
+        println!("\ncv suite (n={cn}, p={cp}, 5 folds, 2 fold workers x 1 engine thread)");
+        let s = bench("cv 5-fold engine-routed (fold views)", reps.min(10), || {
+            let cv = cross_validate_with_engine(
+                &cdata.design,
+                &cdata.response,
+                Loss::Gaussian,
+                ScreeningKind::Hessian,
+                &cs,
+                Some(&sweep),
+            );
+            std::hint::black_box(cv.idx_min);
+        });
+        records.push(Record {
+            name: "cv_fold_path",
+            n: cn,
+            p: cp,
+            backend: "native",
+            threads: 2,
+            shards: 1,
+            batch: 5,
+            design: "resident",
+            wall_seconds: s.mean,
+            ci_half: s.ci_half,
+        });
     }
 
     // Artifact backend (pjrt feature + `make artifacts`): add a record

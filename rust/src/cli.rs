@@ -127,6 +127,23 @@ mod tests {
     }
 
     #[test]
+    fn cv_flag_surface_parses() {
+        // The `hx cv` option surface (main.rs cmd_cv / cmd_cv_hxd);
+        // `make check-cv` smokes the same vector through the binary.
+        let a = parse(
+            "cv --n 120 --p 300 --folds 4 --threads 8 --engine-threads 2 \
+             --folds-seed 7 --shards 3 --profile",
+        );
+        assert_eq!(a.pos(0), Some("cv"));
+        assert_eq!(a.get_usize("folds").unwrap(), Some(4));
+        assert_eq!(a.get_usize("threads").unwrap(), Some(8));
+        assert_eq!(a.get_usize("engine-threads").unwrap(), Some(2));
+        assert_eq!(a.get_usize("folds-seed").unwrap(), Some(7));
+        assert_eq!(a.get_usize("shards").unwrap(), Some(3));
+        assert!(a.flag("profile"));
+    }
+
+    #[test]
     fn list_option() {
         let a = parse("--methods hessian,working,celer,");
         assert_eq!(

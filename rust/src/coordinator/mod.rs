@@ -45,34 +45,64 @@ impl Coordinator {
         R: Send,
         F: Fn(usize, &J) -> R + Sync,
     {
+        self.run_with(jobs, || (), |_, i, j| f(i, j))
+    }
+
+    /// Run `f` over `jobs` with one reusable per-worker state, built by
+    /// `init` once per worker thread and threaded mutably through every
+    /// job that worker claims. Results come back in job order.
+    ///
+    /// This is the cross-validation fold-loop surface: each fold worker
+    /// gets one `path::Workspace` so consecutive fold fits on the same
+    /// worker reuse the grown solver/sweep arenas instead of
+    /// re-allocating them per fit. Per-worker state never moves between
+    /// threads after `init`, so `S` only needs `Send` (for the scoped
+    /// spawn), not `Sync`.
+    pub fn run_with<J, R, S, I, F>(&self, jobs: Vec<J>, init: I, f: F) -> Vec<R>
+    where
+        J: Send + Sync,
+        R: Send,
+        S: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize, &J) -> R + Sync,
+    {
         let njobs = jobs.len();
         if njobs == 0 {
             return Vec::new();
         }
         let threads = self.threads.min(njobs);
         if threads == 1 {
-            return jobs.iter().enumerate().map(|(i, j)| f(i, j)).collect();
+            let mut state = init();
+            return jobs
+                .iter()
+                .enumerate()
+                .map(|(i, j)| f(&mut state, i, j))
+                .collect();
         }
         let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<R>>> = (0..njobs).map(|_| Mutex::new(None)).collect();
         let jobs_ref = &jobs;
         let f_ref = &f;
+        let init_ref = &init;
         let slots_ref = &slots;
         let next_ref = &next;
         std::thread::scope(|scope| {
             let mut handles = Vec::new();
             for _ in 0..threads {
-                handles.push(scope.spawn(move || loop {
-                    let i = next_ref.fetch_add(1, Ordering::Relaxed);
-                    if i >= njobs {
-                        break;
+                handles.push(scope.spawn(move || {
+                    let mut state = init_ref();
+                    loop {
+                        let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                        if i >= njobs {
+                            break;
+                        }
+                        let r = f_ref(&mut state, i, &jobs_ref[i]);
+                        // Poison-proof: each slot is written by exactly one
+                        // worker (the claimant of i) and `f` runs outside the
+                        // lock, so a poisoned slot can only mean a worker
+                        // panicked — which the join below re-throws anyway.
+                        *slots_ref[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
                     }
-                    let r = f_ref(i, &jobs_ref[i]);
-                    // Poison-proof: each slot is written by exactly one
-                    // worker (the claimant of i) and `f` runs outside the
-                    // lock, so a poisoned slot can only mean a worker
-                    // panicked — which the join below re-throws anyway.
-                    *slots_ref[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
                 }));
             }
             for h in handles {
@@ -169,5 +199,42 @@ mod tests {
     #[test]
     fn auto_has_at_least_one_thread() {
         assert!(Coordinator::auto().threads >= 1);
+    }
+
+    #[test]
+    fn run_with_reuses_state_per_worker_serially() {
+        // Serial path: one state instance sees every job in order.
+        let c = Coordinator::new(1);
+        let out = c.run_with(
+            (0..5).collect::<Vec<usize>>(),
+            Vec::<usize>::new,
+            |seen, _, &j| {
+                seen.push(j);
+                seen.len()
+            },
+        );
+        // Each job observed the accumulated state of its predecessors.
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn run_with_builds_one_state_per_worker() {
+        let c = Coordinator::new(3);
+        let inits = AtomicUsize::new(0);
+        let out = c.run_with(
+            (0..64).collect::<Vec<usize>>(),
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0usize
+            },
+            |count, _, &j| {
+                *count += 1;
+                j * 2
+            },
+        );
+        assert_eq!(out, (0..64).map(|j| j * 2).collect::<Vec<_>>());
+        // One init per worker thread, never one per job.
+        let n = inits.load(Ordering::Relaxed);
+        assert!((1..=3).contains(&n), "expected <= 3 inits, got {n}");
     }
 }

@@ -1,0 +1,265 @@
+//! Zero-copy row-masked design views for cross-validation folds.
+//!
+//! A k-fold CV fit needs k row-subset designs. Materializing them (the
+//! old `subset_rows` path) costs k× the design memory and breaks for
+//! out-of-core sources, where no resident matrix exists to copy from.
+//! [`FoldView`] instead adapts any [`Design`] to a row subset: each
+//! column access gathers the kept rows into a compact per-view scratch
+//! buffer (via `col_axpy` onto zeros, so the gather is exact for dense
+//! and sparse bases alike) and then runs the ordinary [`blas`] kernels
+//! over that compact buffer.
+//!
+//! Bitwise contract: for a dense base, the compact buffer is byte-equal
+//! to the corresponding column of a materialized row subset, and every
+//! reduction below goes through the same `blas` kernels a materialized
+//! design would use — so fold fits through a `FoldView` are bitwise
+//! identical to fits on `subset_rows` output (the equivalence suite
+//! pins this). The same holds for the engine's masked sweep kernel,
+//! which gathers identically before reducing with `blas::dot_panel`.
+//!
+//! Scratch lives behind a `Mutex` only because `Design: Sync` demands a
+//! Sync implementor; in practice each fold worker owns its view, so the
+//! lock is uncontended and costs a couple of atomic ops per column
+//! gather — noise next to the O(n) gather itself.
+
+use crate::linalg::{blas, Design};
+use std::sync::Mutex;
+
+/// A row-masked view over a base design. Implements [`Design`] with
+/// `nrows() == rows.len()`; all column reductions see only the kept
+/// rows, in their original relative order.
+pub struct FoldView<'a, D: Design + ?Sized> {
+    base: &'a D,
+    rows: Vec<usize>,
+    scratch: Mutex<FoldScratch>,
+}
+
+/// Reusable gather buffers: one full-length column and two compact
+/// columns (two so `gram`/`gram_weighted` can hold both operands under
+/// a single lock).
+#[derive(Default)]
+struct FoldScratch {
+    full: Vec<f64>,
+    a: Vec<f64>,
+    b: Vec<f64>,
+}
+
+impl<'a, D: Design + ?Sized> FoldView<'a, D> {
+    /// View of the rows where `keep[i]` is true (a CV training fold).
+    pub fn new(base: &'a D, keep: &[bool]) -> Self {
+        assert_eq!(
+            keep.len(),
+            base.nrows(),
+            "keep mask length must match the base design's row count"
+        );
+        let rows = keep
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &k)| k.then_some(i))
+            .collect();
+        Self::from_rows(base, rows)
+    }
+
+    /// View of an explicit row-index list (e.g. a holdout set). Indices
+    /// must be in-bounds; order is preserved as given.
+    pub fn from_rows(base: &'a D, rows: Vec<usize>) -> Self {
+        let n = base.nrows();
+        assert!(
+            rows.iter().all(|&i| i < n),
+            "fold row index out of bounds for base design"
+        );
+        Self {
+            base,
+            rows,
+            scratch: Mutex::new(FoldScratch::default()),
+        }
+    }
+
+    /// The global (base-design) indices of this view's rows.
+    pub fn rows(&self) -> &[usize] {
+        &self.rows
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, FoldScratch> {
+        // Poison-proof: the scratch holds no invariants across calls
+        // (every gather fully overwrites it), so a panic mid-gather on
+        // another thread leaves nothing to protect.
+        self.scratch.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Gather column `j` of `base` restricted to `rows` into `out`.
+/// The full-length staging buffer is zeroed and filled via `col_axpy`
+/// with α = 1 (0 + 1·x = x exactly), so the gathered values are the
+/// stored column entries bit-for-bit, for dense and sparse bases alike.
+fn gather<D: Design + ?Sized>(
+    base: &D,
+    rows: &[usize],
+    j: usize,
+    full: &mut Vec<f64>,
+    out: &mut Vec<f64>,
+) {
+    full.clear();
+    full.resize(base.nrows(), 0.0);
+    base.col_axpy(j, 1.0, full);
+    out.clear();
+    out.extend(rows.iter().map(|&i| full[i]));
+}
+
+impl<D: Design + ?Sized> Design for FoldView<'_, D> {
+    fn nrows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn ncols(&self) -> usize {
+        self.base.ncols()
+    }
+
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        let mut s = self.lock();
+        let FoldScratch { full, a, .. } = &mut *s;
+        gather(self.base, &self.rows, j, full, a);
+        blas::dot(a, v)
+    }
+
+    fn col_axpy(&self, j: usize, alpha: f64, v: &mut [f64]) {
+        if alpha == 0.0 {
+            return;
+        }
+        let mut s = self.lock();
+        let FoldScratch { full, a, .. } = &mut *s;
+        gather(self.base, &self.rows, j, full, a);
+        blas::axpy(alpha, a, v);
+    }
+
+    fn col_sq_norm(&self, j: usize) -> f64 {
+        let mut s = self.lock();
+        let FoldScratch { full, a, .. } = &mut *s;
+        gather(self.base, &self.rows, j, full, a);
+        blas::sq_norm(a)
+    }
+
+    fn gram(&self, i: usize, j: usize) -> f64 {
+        let mut s = self.lock();
+        let FoldScratch { full, a, b } = &mut *s;
+        gather(self.base, &self.rows, i, full, a);
+        gather(self.base, &self.rows, j, full, b);
+        blas::dot(a, b)
+    }
+
+    fn gram_weighted(&self, i: usize, j: usize, w: Option<&[f64]>) -> f64 {
+        let mut s = self.lock();
+        let FoldScratch { full, a, b } = &mut *s;
+        gather(self.base, &self.rows, i, full, a);
+        gather(self.base, &self.rows, j, full, b);
+        match w {
+            None => blas::dot(a, b),
+            Some(w) => blas::dot_w(a, b, w),
+        }
+    }
+
+    fn density(&self) -> f64 {
+        self.base.density()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DesignMatrix, SyntheticSpec};
+    use crate::linalg::DenseMatrix;
+
+    fn dense_fixture(n: usize, p: usize, seed: u64) -> DenseMatrix {
+        let data = SyntheticSpec::new(n, p, 3).rho(0.2).seed(seed).generate();
+        match data.design {
+            DesignMatrix::Dense(m) => m,
+            _ => unreachable!("SyntheticSpec defaults to dense"),
+        }
+    }
+
+    /// Materialize the kept rows of a dense matrix (local oracle).
+    fn dense_subset(m: &DenseMatrix, rows: &[usize]) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(rows.len(), m.ncols());
+        for j in 0..m.ncols() {
+            let col = m.col(j);
+            let ocol = out.col_mut(j);
+            for (r, &i) in rows.iter().enumerate() {
+                ocol[r] = col[i];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_materialized_subset_bitwise() {
+        let m = dense_fixture(23, 7, 11);
+        let keep: Vec<bool> = (0..23).map(|i| i % 4 != 1).collect();
+        let view = FoldView::new(&m, &keep);
+        let sub = dense_subset(&m, view.rows());
+        assert_eq!(view.nrows(), sub.nrows());
+        assert_eq!(view.ncols(), 7);
+        let v: Vec<f64> = (0..view.nrows()).map(|i| (i as f64).sin()).collect();
+        let w: Vec<f64> = (0..view.nrows()).map(|i| 0.5 + (i % 3) as f64).collect();
+        for j in 0..7 {
+            // Bitwise: both sides run the same blas kernel over the
+            // same compact column bytes.
+            assert_eq!(view.col_dot(j, &v).to_bits(), sub.col_dot(j, &v).to_bits());
+            assert_eq!(
+                view.col_sq_norm(j).to_bits(),
+                sub.col_sq_norm(j).to_bits()
+            );
+            let mut acc_v = v.clone();
+            let mut acc_s = v.clone();
+            view.col_axpy(j, 0.25, &mut acc_v);
+            sub.col_axpy(j, 0.25, &mut acc_s);
+            for (a, b) in acc_v.iter().zip(&acc_s) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for i in 0..7 {
+                assert_eq!(view.gram(i, j).to_bits(), sub.gram(i, j).to_bits());
+                assert_eq!(
+                    view.gram_weighted(i, j, Some(&w)).to_bits(),
+                    sub.gram_weighted(i, j, Some(&w)).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn from_rows_preserves_given_order() {
+        let m = dense_fixture(10, 3, 2);
+        let view = FoldView::from_rows(&m, vec![7, 2, 4]);
+        assert_eq!(view.nrows(), 3);
+        let col0 = m.col(0);
+        let mut eta = vec![0.0; 3];
+        view.col_axpy(0, 1.0, &mut eta);
+        assert_eq!(eta, vec![col0[7], col0[2], col0[4]]);
+    }
+
+    #[test]
+    fn sparse_base_gathers_exact_values() {
+        let data = SyntheticSpec::new(18, 5, 2).density(0.4).seed(9).generate();
+        let (sparse, dense) = match &data.design {
+            DesignMatrix::Sparse(m) => (data.design.clone(), DesignMatrix::Dense(m.to_dense())),
+            _ => unreachable!(),
+        };
+        let keep: Vec<bool> = (0..18).map(|i| i % 3 != 0).collect();
+        let vs = FoldView::new(&sparse, &keep);
+        let vd = FoldView::new(&dense, &keep);
+        // The gathered compact columns are identical bytes (axpy onto
+        // zeros is exact either way), so all view kernels agree bitwise
+        // even though the *bases* reduce in different orders.
+        let v: Vec<f64> = (0..vs.nrows()).map(|i| i as f64 - 3.0).collect();
+        for j in 0..5 {
+            assert_eq!(vs.col_dot(j, &v).to_bits(), vd.col_dot(j, &v).to_bits());
+            assert_eq!(vs.col_sq_norm(j).to_bits(), vd.col_sq_norm(j).to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn rejects_out_of_bounds_rows() {
+        let m = dense_fixture(6, 2, 1);
+        let _ = FoldView::from_rows(&m, vec![0, 6]);
+    }
+}

@@ -1,4 +1,4 @@
-//! K-fold cross-validation for λ selection.
+//! K-fold cross-validation for λ selection — an engine workload.
 //!
 //! The paper's opening motivation (§1): "the optimal λ is typically
 //! unknown and must be estimated through model tuning, such as
@@ -8,26 +8,63 @@
 //! module is that workload: k folds, each fitting a full path on a
 //! *shared* λ grid (computed from the full data, glmnet-style), scored
 //! on the held-out fold, aggregated into a CV curve with the usual
-//! minimum-CV and one-standard-error selections. Folds run in parallel
-//! on the [`crate::coordinator::Coordinator`].
+//! minimum-CV and one-standard-error selections.
+//!
+//! Execution model (the fast path, [`cross_validate_with_engine`]):
+//!
+//! * **Zero-copy folds.** Each training fold is a [`FoldView`] — a
+//!   row-masked adapter over the *one* full design, so a 10-fold CV
+//!   holds one design in memory, not eleven. The same view works over
+//!   resident matrices and over [`crate::runtime::ShardedDesignView`]s
+//!   backed by out-of-core `.hxd` sources (the design registers once;
+//!   folds never re-register).
+//! * **Engine-routed sweeps.** With an [`EngineSweep`] binding, each
+//!   fold clones it via [`EngineSweep::fold`] (an `Arc` share of the
+//!   registered design) and the path driver's full KKT sweeps run
+//!   through the backend's row-masked kernel on the engine's threads.
+//! * **Warm fold paths.** Folds dispatch on the
+//!   [`crate::coordinator::Coordinator`]; each fold worker owns one
+//!   reusable [`Workspace`] (via `Coordinator::run_with`), so
+//!   consecutive folds on a worker reuse the grown solver/sweep arenas.
+//!   The oversubscription policy `cv_threads × engine_threads ≤ T` is
+//!   [`thread_plan`]'s contract.
+//!
+//! Determinism contract: the CV curve, selections, and full-refit
+//! coefficients are bit-identical across `threads ∈ {1, 4}`,
+//! engine-routed vs. host-path folds, fold views vs. materialized
+//! subsets, and `.hxd`-sourced vs. resident designs
+//! (`rust/tests/cv_equivalence.rs`). To keep the engine path inside
+//! the contract, fold bindings and the full refit disable look-ahead
+//! batching — its Gap-Safe masks change screened sets and hence
+//! coordinate-descent visit order (see [`EngineSweep::fold`]).
 
 use crate::coordinator::Coordinator;
 use crate::data::DesignMatrix;
 use crate::linalg::{CscMatrix, DenseMatrix, Design};
 use crate::loss::Loss;
 use crate::metrics::Summary;
-use crate::path::{lambda_grid, PathFitter, PathSettings};
+use crate::path::{lambda_grid, PathFit, PathFitter, PathSettings, Workspace};
 use crate::rng::Xoshiro256pp;
+use crate::runtime::EngineSweep;
 use crate::screening::ScreeningKind;
+use std::time::Instant;
+
+mod fold;
+pub use fold::FoldView;
 
 /// Cross-validation configuration.
 #[derive(Clone, Debug)]
 pub struct CvSettings {
     pub n_folds: usize,
+    /// Fold-assignment shuffle seed (`hx cv --folds-seed`).
     pub seed: u64,
     pub path: PathSettings,
-    /// Parallelize across folds.
+    /// Fold-level workers (the coordinator's thread count).
     pub threads: usize,
+    /// Engine threads per fold worker; 0 derives the budget split via
+    /// [`thread_plan`] (callers building their own engine pass the
+    /// resolved value through so `CvStats` reports it).
+    pub engine_threads: usize,
 }
 
 impl Default for CvSettings {
@@ -37,7 +74,72 @@ impl Default for CvSettings {
             seed: 0,
             path: PathSettings::default(),
             threads: Coordinator::auto().threads,
+            engine_threads: 1,
         }
+    }
+}
+
+/// Split a total thread budget between fold workers and per-fold
+/// engine threads: the oversubscription policy is
+/// `cv_threads × engine_threads ≤ total`. Fold workers are capped by
+/// the fold count (idle workers are pure overhead) and leftover budget
+/// goes to the engines; an explicit `engine_threads` request (> 0) is
+/// clamped so the product still respects the budget.
+pub fn thread_plan(total: usize, n_folds: usize, engine_threads: usize) -> (usize, usize) {
+    let total = total.max(1);
+    let cv = total.min(n_folds.max(1));
+    let cap = (total / cv).max(1);
+    let eng = if engine_threads == 0 {
+        cap
+    } else {
+        engine_threads.min(cap)
+    };
+    (cv, eng)
+}
+
+/// Per-fold observability record, summed from the fold fit's
+/// [`crate::path::StepStats`] plus the fold's own wall clock.
+#[derive(Clone, Debug, Default)]
+pub struct FoldStats {
+    pub fold: usize,
+    /// Fold wall time: fit + holdout scoring.
+    pub wall_seconds: f64,
+    pub t_cd: f64,
+    pub t_kkt: f64,
+    pub t_sweep: f64,
+    pub t_hessian: f64,
+    pub t_screen: f64,
+    /// Workspace arena growth over the fold's path (0 in steady state
+    /// once a worker's arenas have grown — the warm-fold signal).
+    pub alloc_bytes: usize,
+    pub mean_screened: f64,
+    pub steps: usize,
+    pub passes: usize,
+    pub full_sweeps: usize,
+}
+
+/// Observability for one CV run: per-fold records plus the thread /
+/// routing configuration that produced them. Printed by
+/// `hx cv --profile` and emitted in the bench JSON.
+#[derive(Clone, Debug, Default)]
+pub struct CvStats {
+    pub folds: Vec<FoldStats>,
+    /// Fold-level workers used.
+    pub cv_threads: usize,
+    /// Engine threads per fold worker (1 when host-path).
+    pub engine_threads: usize,
+    /// Engine shard count (1 when unsharded or host-path).
+    pub engine_shards: usize,
+    /// Whether fold sweeps were engine-routed (an [`EngineSweep`]
+    /// binding was supplied).
+    pub routed: bool,
+}
+
+impl CvStats {
+    /// Aggregate a per-fold field into a [`Summary`] (mean/sd/CI over
+    /// folds).
+    pub fn summarize(&self, f: impl Fn(&FoldStats) -> f64) -> Summary {
+        Summary::over(&self.folds, f)
     }
 }
 
@@ -54,7 +156,9 @@ pub struct CvFit {
     /// Largest λ within one SE of the minimum (the "1-SE rule").
     pub idx_1se: usize,
     /// Final path refit on the full data.
-    pub full_fit: crate::path::PathFit,
+    pub full_fit: PathFit,
+    /// Per-fold profile of the run.
+    pub stats: CvStats,
 }
 
 impl CvFit {
@@ -66,10 +170,16 @@ impl CvFit {
         self.lambdas[self.idx_1se]
     }
 
-    /// Coefficients at the CV-selected λ (sparse pairs).
+    /// Coefficients at the CV-selected λ (sparse pairs). Falls back to
+    /// the last fitted step when the refit's path ended early, and to
+    /// the empty (null-model) vector when it has no steps at all.
     pub fn selected_coefs(&self, one_se: bool) -> &[(usize, f64)] {
         let idx = if one_se { self.idx_1se } else { self.idx_min };
-        &self.full_fit.betas[idx.min(self.full_fit.betas.len() - 1)]
+        self.full_fit
+            .betas
+            .get(idx)
+            .or_else(|| self.full_fit.betas.last())
+            .map_or(&[], |b| b.as_slice())
     }
 }
 
@@ -87,8 +197,12 @@ pub fn fold_assignments(n: usize, k: usize, seed: u64) -> Vec<usize> {
     fold
 }
 
-/// Extract the rows of a design (dense or sparse) where `keep[i]`.
-fn subset_rows(design: &DesignMatrix, keep: &[bool]) -> DesignMatrix {
+/// Materialize the rows of a design (dense or sparse) where `keep[i]`.
+///
+/// **Test oracle only.** The CV fold loop never materializes designs —
+/// it fits through [`FoldView`]s — but the equivalence suite keeps this
+/// copy path alive to prove the views bit-identical to real subsets.
+pub fn subset_rows(design: &DesignMatrix, keep: &[bool]) -> DesignMatrix {
     let n_new = keep.iter().filter(|&&k| k).count();
     let mut row_map = vec![usize::MAX; design.nrows()];
     let mut r = 0;
@@ -127,33 +241,90 @@ fn subset_rows(design: &DesignMatrix, keep: &[bool]) -> DesignMatrix {
     }
 }
 
-/// Held-out deviance of a sparse coefficient vector.
-fn holdout_deviance(
-    design: &DesignMatrix,
+/// Per-λ held-out deviances for one fold. The compact response and η
+/// buffers are hoisted out of the per-λ loop (the old implementation
+/// allocated three n-length vectors for every λ × fold), and η is
+/// accumulated over holdout rows only — O(|holdout|) per nonzero
+/// coefficient instead of O(n). The holdout gather goes through a
+/// [`FoldView`], so values are bitwise what the full-η path computed.
+fn holdout_deviances<D: Design + ?Sized>(
+    design: &D,
     y: &[f64],
     holdout: &[usize],
-    beta: &[(usize, f64)],
+    fit: &PathFit,
+    grid_len: usize,
     loss: Loss,
-) -> f64 {
-    // η for the held-out rows only.
-    let n = design.nrows();
-    let mut eta_full = vec![0.0; n];
-    for &(j, b) in beta {
-        design.col_axpy(j, b, &mut eta_full);
-    }
+) -> Vec<f64> {
+    let hold = FoldView::from_rows(design, holdout.to_vec());
     let yh: Vec<f64> = holdout.iter().map(|&i| y[i]).collect();
-    let eh: Vec<f64> = holdout.iter().map(|&i| eta_full[i]).collect();
-    loss.deviance(&yh, &eh) / holdout.len().max(1) as f64
+    let mut eta_h = vec![0.0; holdout.len()];
+    (0..grid_len)
+        .map(|k| {
+            // Fall back to the last fitted step when the fold's path
+            // ended early; an empty path means the null model.
+            let beta: &[(usize, f64)] = fit
+                .betas
+                .get(k)
+                .or_else(|| fit.betas.last())
+                .map_or(&[], |b| b.as_slice());
+            for v in eta_h.iter_mut() {
+                *v = 0.0;
+            }
+            for &(j, b) in beta {
+                hold.col_axpy(j, b, &mut eta_h);
+            }
+            loss.deviance(&yh, &eta_h) / holdout.len().max(1) as f64
+        })
+        .collect()
 }
 
-/// Run k-fold cross-validation. The λ grid is fixed from the *full*
-/// data so fold curves are comparable (glmnet's convention).
-pub fn cross_validate(
-    design: &DesignMatrix,
+fn fold_stats(fold: usize, fit: &PathFit, wall_seconds: f64) -> FoldStats {
+    let mut fs = FoldStats {
+        fold,
+        wall_seconds,
+        mean_screened: fit.mean_screened(),
+        steps: fit.steps.len(),
+        passes: fit.total_passes(),
+        ..FoldStats::default()
+    };
+    for s in &fit.steps {
+        fs.t_cd += s.t_cd;
+        fs.t_kkt += s.t_kkt;
+        fs.t_sweep += s.t_sweep;
+        fs.t_hessian += s.t_hessian;
+        fs.t_screen += s.t_screen;
+        fs.alloc_bytes += s.alloc_bytes;
+        fs.full_sweeps += s.full_sweeps;
+    }
+    fs
+}
+
+/// Run k-fold cross-validation on the host path (no engine). The λ
+/// grid is fixed from the *full* data so fold curves are comparable
+/// (glmnet's convention). Folds fit through zero-copy [`FoldView`]s.
+pub fn cross_validate<D: Design + ?Sized>(
+    design: &D,
     y: &[f64],
     loss: Loss,
     kind: ScreeningKind,
     settings: &CvSettings,
+) -> CvFit {
+    cross_validate_with_engine(design, y, loss, kind, settings, None)
+}
+
+/// Run k-fold cross-validation, optionally routing fold sweeps through
+/// an [`EngineSweep`] binding (see the module docs for the execution
+/// model and determinism contract). `engine`, when given, must be
+/// bound to the same design/loss; each fold derives a masked binding
+/// from it via [`EngineSweep::fold`] and the full refit runs through
+/// [`EngineSweep::without_lookahead`].
+pub fn cross_validate_with_engine<D: Design + ?Sized>(
+    design: &D,
+    y: &[f64],
+    loss: Loss,
+    kind: ScreeningKind,
+    settings: &CvSettings,
+    engine: Option<&EngineSweep>,
 ) -> CvFit {
     let n = design.nrows();
     let p = design.ncols();
@@ -173,12 +344,20 @@ pub fn cross_validate(
 
     let folds = fold_assignments(n, settings.n_folds, settings.seed);
     let jobs: Vec<usize> = (0..settings.n_folds).collect();
-    let coord = Coordinator::new(settings.threads);
-    let fold_devs: Vec<Vec<f64>> = coord.run(jobs, |_, &f| {
+    let cv_threads = settings.threads.max(1).min(settings.n_folds);
+    let coord = Coordinator::new(cv_threads);
+    // One reusable path workspace per fold worker: consecutive folds
+    // on a worker reuse the grown arenas (`run_with`'s per-worker
+    // state), so steady-state folds report `alloc_bytes ≈ 0`.
+    let outcomes: Vec<(Vec<f64>, FoldStats)> = coord.run_with(jobs, Workspace::default, |ws, _, &f| {
+        let t_fold = Instant::now();
         let keep: Vec<bool> = folds.iter().map(|&g| g != f).collect();
-        let train_x = subset_rows(design, &keep);
-        let train_y: Vec<f64> = (0..n).filter(|&i| keep[i]).map(|i| y[i]).collect();
+        let view = FoldView::new(design, &keep);
+        let train_y: Vec<f64> = view.rows().iter().map(|&i| y[i]).collect();
         let holdout: Vec<usize> = (0..n).filter(|&i| !keep[i]).collect();
+        // Fold binding: Arc-shared registered design, masked sweeps,
+        // look-ahead off (determinism contract).
+        let es_fold = engine.map(|es| es.fold(view.rows().to_vec()));
         let mut ps = settings.path.clone();
         ps.lambda_path = Some(lambdas.clone());
         // no early stopping inside folds: curves must align on the grid
@@ -186,26 +365,17 @@ pub fn cross_validate(
         ps.dev_change_min = 0.0;
         let fit = PathFitter::new(loss, kind)
             .with_settings(ps)
-            .fit(&train_x, &train_y);
-        (0..lambdas.len())
-            .map(|k| {
-                // Fall back to the last fitted step when the fold's path
-                // ended early; an empty path means the null model.
-                let beta: &[(usize, f64)] = fit
-                    .betas
-                    .get(k)
-                    .or_else(|| fit.betas.last())
-                    .map_or(&[], |b| b.as_slice());
-                holdout_deviance(design, y, &holdout, beta, loss)
-            })
-            .collect()
+            .fit_with_workspace(&view, &train_y, es_fold.as_ref(), ws);
+        let devs = holdout_deviances(design, y, &holdout, &fit, lambdas.len(), loss);
+        let stats = fold_stats(f, &fit, t_fold.elapsed().as_secs_f64());
+        (devs, stats)
     });
 
     let m = lambdas.len();
     let mut cv_mean = Vec::with_capacity(m);
     let mut cv_se = Vec::with_capacity(m);
     for k in 0..m {
-        let vals: Vec<f64> = fold_devs.iter().map(|f| f[k]).collect();
+        let vals: Vec<f64> = outcomes.iter().map(|(devs, _)| devs[k]).collect();
         let s = Summary::of(&vals);
         cv_mean.push(s.mean);
         cv_se.push(s.sd / (vals.len() as f64).sqrt());
@@ -215,7 +385,8 @@ pub fn cross_validate(
         .unwrap_or(0);
     // 1-SE rule: the largest λ (smallest index) whose CV mean is within
     // one SE of the minimum.
-    let threshold = cv_mean[idx_min] + cv_se[idx_min];
+    let threshold = cv_mean.get(idx_min).copied().unwrap_or(f64::NAN)
+        + cv_se.get(idx_min).copied().unwrap_or(0.0);
     let idx_1se = (0..=idx_min)
         .find(|&k| cv_mean[k] <= threshold)
         .unwrap_or(idx_min);
@@ -224,7 +395,20 @@ pub fn cross_validate(
     ps.lambda_path = Some(lambdas.clone());
     ps.dev_ratio_max = 1.0;
     ps.dev_change_min = 0.0;
-    let full_fit = PathFitter::new(loss, kind).with_settings(ps).fit(design, y);
+    // Full refit with look-ahead off so the engine-routed and host-path
+    // refits agree bitwise (same reason as the fold bindings).
+    let es_full = engine.map(|es| es.without_lookahead());
+    let full_fit = PathFitter::new(loss, kind)
+        .with_settings(ps)
+        .fit_with_engine(design, y, es_full.as_ref());
+
+    let stats = CvStats {
+        folds: outcomes.into_iter().map(|(_, fs)| fs).collect(),
+        cv_threads,
+        engine_threads: engine.map_or(1, |es| es.engine.threads()),
+        engine_shards: engine.map_or(1, |es| es.engine.shards()),
+        routed: engine.is_some(),
+    };
 
     CvFit {
         lambdas,
@@ -233,6 +417,7 @@ pub fn cross_validate(
         idx_min,
         idx_1se,
         full_fit,
+        stats,
     }
 }
 
@@ -240,6 +425,7 @@ pub fn cross_validate(
 mod tests {
     use super::*;
     use crate::data::SyntheticSpec;
+    use crate::runtime::RuntimeEngine;
 
     #[test]
     fn fold_assignments_balanced_and_deterministic() {
@@ -263,6 +449,28 @@ mod tests {
     }
 
     #[test]
+    fn thread_plan_respects_the_budget() {
+        // cv × engine ≤ total, always.
+        for total in 1..=9 {
+            for folds in 2..=12 {
+                for eng in 0..=4 {
+                    let (cv, et) = thread_plan(total, folds, eng);
+                    assert!(cv * et <= total.max(1), "({total},{folds},{eng})");
+                    assert!(cv >= 1 && et >= 1);
+                    assert!(cv <= folds);
+                }
+            }
+        }
+        // Budget split: folds first, leftover into the engines.
+        assert_eq!(thread_plan(8, 10, 0), (8, 1));
+        assert_eq!(thread_plan(8, 4, 0), (4, 2));
+        assert_eq!(thread_plan(8, 4, 8), (4, 2)); // request clamped
+        assert_eq!(thread_plan(1, 10, 0), (1, 1));
+        assert_eq!(thread_plan(6, 2, 1), (2, 1)); // explicit request kept
+        assert_eq!(thread_plan(0, 5, 0), (1, 1)); // degenerate budget
+    }
+
+    #[test]
     fn subset_rows_dense_and_sparse_agree() {
         let data = SyntheticSpec::new(20, 6, 2).density(0.4).seed(1).generate();
         let sparse = data.design.clone();
@@ -278,6 +486,32 @@ mod tests {
         for j in 0..6 {
             assert!((sd.col_dot(j, &v) - ss.col_dot(j, &v)).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn selected_coefs_empty_path_returns_empty() {
+        // Regression: an empty full-fit path used to underflow
+        // `betas.len() - 1` and panic.
+        let cv = CvFit {
+            lambdas: vec![1.0],
+            cv_mean: vec![0.5],
+            cv_se: vec![0.1],
+            idx_min: 0,
+            idx_1se: 0,
+            full_fit: PathFit {
+                lambdas: Vec::new(),
+                betas: Vec::new(),
+                dev_ratios: Vec::new(),
+                steps: Vec::new(),
+                total_time: 0.0,
+                loss: Loss::Gaussian,
+                kind: ScreeningKind::Hessian,
+                converged: true,
+            },
+            stats: CvStats::default(),
+        };
+        assert!(cv.selected_coefs(false).is_empty());
+        assert!(cv.selected_coefs(true).is_empty());
     }
 
     #[test]
@@ -309,6 +543,11 @@ mod tests {
             .filter(|&&(j, _)| truth[j] != 0.0)
             .count();
         assert!(hits >= 3, "only {hits}/4 signals recovered");
+        // Profile record: one entry per fold, host-path routing.
+        assert_eq!(cv.stats.folds.len(), 5);
+        assert!(!cv.stats.routed);
+        assert!(cv.stats.folds.iter().all(|f| f.steps > 0 && f.passes > 0));
+        assert!(cv.stats.summarize(|f| f.wall_seconds).mean > 0.0);
     }
 
     #[test]
@@ -333,5 +572,53 @@ mod tests {
         // CV curve finite and the minimum beats the null model's score.
         assert!(cv.cv_mean.iter().all(|v| v.is_finite()));
         assert!(cv.cv_mean[cv.idx_min] < cv.cv_mean[0]);
+    }
+
+    #[test]
+    fn engine_routed_cv_matches_host_path_bitwise() {
+        // The unit-scale version of the equivalence suite's contract:
+        // same data, same settings, engine-routed vs. host-path — the
+        // curve, the selections, and the refit must agree bit-for-bit.
+        let data = SyntheticSpec::new(80, 24, 3).rho(0.2).snr(4.0).seed(6).generate();
+        let dense = match &data.design {
+            DesignMatrix::Dense(m) => m.clone(),
+            _ => unreachable!(),
+        };
+        let mut settings = CvSettings::default();
+        settings.n_folds = 4;
+        settings.path.path_length = 15;
+        settings.threads = 2;
+        let host = cross_validate(
+            &data.design,
+            &data.response,
+            Loss::Gaussian,
+            ScreeningKind::Hessian,
+            &settings,
+        );
+        let engine = RuntimeEngine::native_threaded(2);
+        let sweep = EngineSweep::new(&engine, &dense, Loss::Gaussian)
+            .unwrap()
+            .expect("native always binds");
+        let routed = cross_validate_with_engine(
+            &data.design,
+            &data.response,
+            Loss::Gaussian,
+            ScreeningKind::Hessian,
+            &settings,
+            Some(&sweep),
+        );
+        assert_eq!(host.lambdas, routed.lambdas);
+        for k in 0..host.cv_mean.len() {
+            assert_eq!(
+                host.cv_mean[k].to_bits(),
+                routed.cv_mean[k].to_bits(),
+                "cv curve differs at λ index {k}"
+            );
+        }
+        assert_eq!(host.idx_min, routed.idx_min);
+        assert_eq!(host.idx_1se, routed.idx_1se);
+        assert_eq!(host.full_fit.betas, routed.full_fit.betas);
+        assert!(routed.stats.routed);
+        assert_eq!(routed.stats.engine_threads, 2);
     }
 }

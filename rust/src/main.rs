@@ -13,13 +13,13 @@
 //! Run `hx <cmd> --help` conventions: every option is `--key value`.
 
 use hessian_screening::cli::Args;
-use hessian_screening::cv::{cross_validate, CvSettings};
+use hessian_screening::cv::{cross_validate_with_engine, thread_plan, CvFit, CvSettings, CvStats};
 use hessian_screening::coordinator::Coordinator;
 use hessian_screening::data::{dataset_by_name, dataset_catalog, SyntheticSpec};
 use hessian_screening::experiments::{self, ExpConfig};
 use hessian_screening::linalg::Design;
 use hessian_screening::loss::Loss;
-use hessian_screening::metrics::{fmt_secs, Table};
+use hessian_screening::metrics::{fmt_secs, Summary, Table};
 use hessian_screening::path::{
     fit_approximate_homotopy, HomotopySettings, PathFit, PathFitter, PathSettings, StepStats,
 };
@@ -47,7 +47,13 @@ USAGE:
          [--reps R] [--full] [--out DIR] [--threads T] [--seed K]
          [--datasets a,b,c]   (tab1 only)
   hx cv  [--dataset NAME | --n N --p P --s S] [--folds K] [--method M]
-         [--loss L] [--path-length M] [--seed K]
+         [--loss L] [--path-length M] [--seed K] [--folds-seed K]
+         [--threads T] [--engine-threads E] [--shards K] [--profile]
+         (fold fits run through zero-copy row-masked views of the one
+          design; T splits as cv_workers × engine_threads ≤ T)
+  hx cv  --design FILE.hxd [--folds K] [--method M] [--path-length M]
+         [--shards K] [--threads T] [--engine-threads E] [--folds-seed K]
+         [--profile]
   hx homotopy [--n N --p P --s S] [--rho R] [--min-ratio X]
   hx runtime-check [--artifacts DIR]   (native backend when artifacts or
                                         the `pjrt` feature are absent)
@@ -446,7 +452,103 @@ fn cmd_exp(args: &Args) -> Result<(), String> {
     experiments::run_experiment(name, &cfg)
 }
 
+/// CV thread budget: `--threads T` is the *total* budget, split by
+/// [`thread_plan`] into fold workers × per-fold engine threads
+/// (`--engine-threads` pins the engine share, clamped to the budget).
+fn cv_threads_from(args: &Args, n_folds: usize) -> Result<(usize, usize), String> {
+    let total = args
+        .get_usize("threads")?
+        .unwrap_or_else(|| Coordinator::auto().threads);
+    let eng = args.get_usize("engine-threads")?.unwrap_or(0);
+    Ok(thread_plan(total, n_folds, eng))
+}
+
+/// CV curve table + selection summary, shared by the resident and
+/// out-of-core CV paths. The table samples ~20 grid rows but always
+/// includes the `<- min` and `<- 1se` marker rows (the stride used to
+/// skip them entirely on longer paths).
+fn print_cv_report(cv: &CvFit, n_folds: usize, secs: f64) {
+    let mut table = Table::new(&["lambda", "cv deviance", "se", ""]);
+    let m = cv.lambdas.len();
+    let mut rows: Vec<usize> = (0..m).step_by((m / 20).max(1)).collect();
+    for k in [cv.idx_min, cv.idx_1se] {
+        if k < m && !rows.contains(&k) {
+            rows.push(k);
+        }
+    }
+    rows.sort_unstable();
+    rows.dedup();
+    for k in rows {
+        let marker = if k == cv.idx_min {
+            "<- min"
+        } else if k == cv.idx_1se {
+            "<- 1se"
+        } else {
+            ""
+        };
+        table.row(vec![
+            format!("{:.4}", cv.lambdas[k]),
+            format!("{:.4}", cv.cv_mean[k]),
+            format!("{:.4}", cv.cv_se[k]),
+            marker.into(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "lambda_min={:.4} ({} predictors), lambda_1se={:.4} ({} predictors), {} folds in {}s",
+        cv.lambda_min(),
+        cv.selected_coefs(false).len(),
+        cv.lambda_1se(),
+        cv.selected_coefs(true).len(),
+        n_folds,
+        fmt_secs(secs)
+    );
+}
+
+/// `hx cv --profile`: per-fold wall/kernel breakdown plus the thread /
+/// routing configuration. `alloc.B` is workspace arena growth over the
+/// fold's whole path — folds after a worker's first report ≈ 0 (the
+/// warm-fold-path observable).
+fn print_cv_profile(stats: &CvStats) {
+    let mut table = Table::new(&[
+        "fold", "wall.ms", "cd.ms", "kkt.ms", "sweep.ms", "hess.ms", "screen.ms", "alloc.B",
+        "screened", "steps", "passes",
+    ]);
+    for f in &stats.folds {
+        table.row(vec![
+            format!("{}", f.fold),
+            format!("{:.3}", f.wall_seconds * 1e3),
+            format!("{:.3}", f.t_cd * 1e3),
+            format!("{:.3}", f.t_kkt * 1e3),
+            format!("{:.3}", f.t_sweep * 1e3),
+            format!("{:.3}", f.t_hessian * 1e3),
+            format!("{:.3}", f.t_screen * 1e3),
+            format!("{}", f.alloc_bytes),
+            format!("{:.1}", f.mean_screened),
+            format!("{}", f.steps),
+            format!("{}", f.passes),
+        ]);
+    }
+    println!("{}", table.render());
+    let wall = Summary::over(&stats.folds, |f| f.wall_seconds);
+    let sweeps: usize = stats.folds.iter().map(|f| f.full_sweeps).sum();
+    let alloc: usize = stats.folds.iter().map(|f| f.alloc_bytes).sum();
+    println!(
+        "cv profile: {} fold worker(s) x {} engine thread(s), {} shard(s), {}; \
+         fold wall {}s +/- {}s; {sweeps} full sweeps; workspace growth {alloc}B",
+        stats.cv_threads,
+        stats.engine_threads,
+        stats.engine_shards,
+        if stats.routed { "engine-routed" } else { "host-path" },
+        fmt_secs(wall.mean),
+        fmt_secs(wall.ci_half),
+    );
+}
+
 fn cmd_cv(args: &Args) -> Result<(), String> {
+    if args.get("design").is_some() {
+        return cmd_cv_hxd(args);
+    }
     let loss = parse_loss(args.get("loss").unwrap_or("gaussian"))?;
     let kind = ScreeningKind::parse(args.get("method").unwrap_or("hessian"))
         .ok_or("unknown --method")?;
@@ -469,41 +571,116 @@ fn cmd_cv(args: &Args) -> Result<(), String> {
         )
     };
     let loss = data.loss;
+    let n_folds = args.get_usize("folds")?.unwrap_or(10);
+    let (cv_threads, engine_threads) = cv_threads_from(args, n_folds)?;
     let settings = CvSettings {
-        n_folds: args.get_usize("folds")?.unwrap_or(10),
+        n_folds,
+        seed: args.get_usize("folds-seed")?.unwrap_or(0) as u64,
         path: path_settings_from(args)?,
-        ..Default::default()
+        threads: cv_threads,
+        engine_threads,
     };
-    let t = std::time::Instant::now();
-    let cv = cross_validate(&data.design, &data.response, loss, kind, &settings);
-    let secs = t.elapsed().as_secs_f64();
-    let mut table = Table::new(&["lambda", "cv deviance", "se", ""]);
-    let m = cv.lambdas.len();
-    for k in (0..m).step_by((m / 20).max(1)) {
-        let marker = if k == cv.idx_min {
-            "<- min"
-        } else if k == cv.idx_1se {
-            "<- 1se"
-        } else {
-            ""
-        };
-        table.row(vec![
-            format!("{:.4}", cv.lambdas[k]),
-            format!("{:.4}", cv.cv_mean[k]),
-            format!("{:.4}", cv.cv_se[k]),
-            marker.into(),
-        ]);
+    // Dense designs route fold sweeps through the native engine
+    // (sharded when asked); sparse designs fit on the host path.
+    let shards = args.get_usize("shards")?;
+    let engine = match shards {
+        Some(k) => RuntimeEngine::native_sharded(k.max(1), engine_threads),
+        None => RuntimeEngine::native_threaded(engine_threads),
+    };
+    let sweep = match &data.design {
+        hessian_screening::data::DesignMatrix::Dense(m) => {
+            EngineSweep::new(&engine, m, loss).map_err(|e| e.to_string())?
+        }
+        _ => None,
+    };
+    if let Some(es) = &sweep {
+        eprintln!(
+            "(fold sweeps via the {} backend: {} fold worker(s) x {} engine thread(s), {} shard(s))",
+            engine.backend_name(),
+            cv_threads,
+            es.engine.threads(),
+            es.engine.shards(),
+        );
     }
-    println!("{}", table.render());
-    println!(
-        "lambda_min={:.4} ({} predictors), lambda_1se={:.4} ({} predictors), {} folds in {}s",
-        cv.lambda_min(),
-        cv.selected_coefs(false).len(),
-        cv.lambda_1se(),
-        cv.selected_coefs(true).len(),
-        settings.n_folds,
-        fmt_secs(secs)
+    let t = std::time::Instant::now();
+    let cv = cross_validate_with_engine(
+        &data.design,
+        &data.response,
+        loss,
+        kind,
+        &settings,
+        sweep.as_ref(),
     );
+    let secs = t.elapsed().as_secs_f64();
+    print_cv_report(&cv, settings.n_folds, secs);
+    if args.flag("profile") {
+        print_cv_profile(&cv.stats);
+    }
+    Ok(())
+}
+
+/// `hx cv --design FILE.hxd`: cross-validate with the design streamed
+/// shard-by-shard from a packed `.hxd` file. The design registers with
+/// the engine once; every fold is a row-masked view over the same
+/// registration (no per-fold copies, no per-fold re-registration).
+fn cmd_cv_hxd(args: &Args) -> Result<(), String> {
+    let path = std::path::PathBuf::from(args.get("design").expect("routed on --design"));
+    let mut source = HxdSource::open(&path).map_err(|e| e.to_string())?;
+    let loss = source.loss();
+    let kind = ScreeningKind::parse(args.get("method").unwrap_or("hessian"))
+        .ok_or("unknown --method")?;
+    let y = source.take_response().ok_or_else(|| {
+        format!(
+            "{} was packed without a response; re-pack with one \
+             (a dataset/synthetic spec, or `--csv … --csv-response`)",
+            path.display()
+        )
+    })?;
+    let (n, p) = (source.n(), source.p());
+    let n_folds = args.get_usize("folds")?.unwrap_or(10);
+    let (cv_threads, engine_threads) = cv_threads_from(args, n_folds)?;
+    let settings = CvSettings {
+        n_folds,
+        seed: args.get_usize("folds-seed")?.unwrap_or(0) as u64,
+        path: path_settings_from(args)?,
+        threads: cv_threads,
+        engine_threads,
+    };
+    let shards = args.get_usize("shards")?.unwrap_or(1).max(1);
+    let engine = RuntimeEngine::native_sharded(shards, engine_threads);
+
+    // Decide the sweep question *before* handing the source over (the
+    // source is consumed by registration); either way the design
+    // streams through the sharded pipeline exactly once.
+    let t = std::time::Instant::now();
+    let cv = if engine.supports_sweep(loss, n, p) {
+        let sweep = EngineSweep::from_source(&engine, Box::new(source), loss)
+            .map_err(|e| e.to_string())?
+            .expect("supports_sweep checked above");
+        eprintln!(
+            "(streaming {} through the {} backend: {} fold worker(s) x {} engine thread(s), {} shard(s))",
+            path.display(),
+            engine.backend_name(),
+            cv_threads,
+            engine.threads(),
+            engine.shards(),
+        );
+        let view = ShardedDesignView::new(&sweep.design).map_err(|e| e.to_string())?;
+        cross_validate_with_engine(&view, &y, loss, kind, &settings, Some(&sweep))
+    } else {
+        let reg = engine
+            .register_source(Box::new(source))
+            .map_err(|e| e.to_string())?;
+        eprintln!("(no sweep kernel for this shape; host-path folds over the streamed design)");
+        let view = ShardedDesignView::new(&reg).map_err(|e| e.to_string())?;
+        cross_validate_with_engine(&view, &y, loss, kind, &settings, None)
+    };
+    let secs = t.elapsed().as_secs_f64();
+    print_upload_stats(Some(&engine));
+    print_cv_report(&cv, settings.n_folds, secs);
+    if args.flag("profile") {
+        print_cv_profile(&cv.stats);
+    }
     Ok(())
 }
 

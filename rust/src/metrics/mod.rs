@@ -42,6 +42,14 @@ impl Summary {
         }
     }
 
+    /// Summarize a projection of a record slice — e.g. per-fold wall
+    /// times out of CV profile records:
+    /// `Summary::over(&stats.folds, |f| f.wall_seconds)`.
+    pub fn over<T>(items: &[T], f: impl Fn(&T) -> f64) -> Summary {
+        let vals: Vec<f64> = items.iter().map(&f).collect();
+        Summary::of(&vals)
+    }
+
     pub fn lo(&self) -> f64 {
         self.mean - self.ci_half
     }
@@ -173,6 +181,18 @@ mod tests {
         assert_eq!(one.mean, 5.0);
         assert_eq!(one.sd, 0.0);
         assert_eq!(one.ci_half, 0.0);
+    }
+
+    #[test]
+    fn summary_over_projects_records() {
+        struct Rec {
+            w: f64,
+        }
+        let recs = [Rec { w: 1.0 }, Rec { w: 2.0 }, Rec { w: 3.0 }];
+        let s = Summary::over(&recs, |r| r.w);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(Summary::over::<Rec>(&[], |r| r.w).n, 0);
     }
 
     #[test]

@@ -342,7 +342,10 @@ impl PathFitter {
     /// ([`crate::runtime::Backend`] — the pure-Rust `NativeBackend`, or
     /// the AOT/PJRT engine under the `pjrt` feature) when one is
     /// provided and has a matching kernel. Falls back to the native f64
-    /// sweep per call when the backend path is unavailable.
+    /// sweep per call when the backend path is unavailable. A
+    /// row-restricted binding ([`crate::runtime::EngineSweep::fold`])
+    /// routes the sweeps through the backend's masked fold kernel —
+    /// the cross-validation fold loop passes one of those per fold.
     pub fn fit_with_engine<D: Design + ?Sized>(
         &self,
         design: &D,
@@ -354,8 +357,10 @@ impl PathFitter {
     }
 
     /// [`Self::fit_with_engine`] with a caller-owned [`Workspace`]:
-    /// repeated fits (cross-validation, simulation sweeps) reuse the
-    /// grown arenas instead of re-allocating them per path.
+    /// repeated fits reuse the grown arenas instead of re-allocating
+    /// them per path. `cross_validate` holds one workspace per fold
+    /// worker (via `Coordinator::run_with`), so folds after a worker's
+    /// first report `alloc_bytes ≈ 0` in their [`StepStats`].
     pub fn fit_with_workspace<D: Design + ?Sized>(
         &self,
         design: &D,

@@ -231,6 +231,56 @@ pub trait Backend: Send + Sync {
         }
     }
 
+    /// Row-masked fused KKT sweep — the cross-validation fold kernel.
+    /// `rows` are global row indices into the registered design (a CV
+    /// training fold); `y`/`eta` are *compact* (length `rows.len()`),
+    /// matching the fold view the path driver fits against. Returns
+    /// (c, pseudo-residual) with `c` over all p columns and the
+    /// residual compact, or `None` when the backend has no masked
+    /// kernel for this (loss, shape) — the caller then falls back to
+    /// the host-side fold-view sweep.
+    ///
+    /// Bitwise contract: implementations must gather the kept rows of
+    /// each column into a compact buffer and reduce with the same
+    /// `blas` kernels [`crate::cv::FoldView`] uses, so engine-routed
+    /// fold fits are bit-identical to host-path fold fits.
+    fn kkt_sweep_masked(
+        &self,
+        _loss: Loss,
+        _design: &RegisteredDesign,
+        _rows: &[usize],
+        _y: &[f64],
+        _eta: &[f64],
+        _lambda: f64,
+    ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        Ok(None)
+    }
+
+    /// Allocation-reusing twin of [`Backend::kkt_sweep_masked`] — same
+    /// default shim / native-override split as
+    /// [`Backend::correlation_into`].
+    #[allow(clippy::too_many_arguments)]
+    fn kkt_sweep_masked_into(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        rows: &[usize],
+        y: &[f64],
+        eta: &[f64],
+        lambda: f64,
+        c: &mut Vec<f64>,
+        resid: &mut Vec<f64>,
+    ) -> Result<bool> {
+        match self.kkt_sweep_masked(loss, design, rows, y, eta, lambda)? {
+            Some((cv, rv)) => {
+                *c = cv;
+                *resid = rv;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
     /// Batched look-ahead KKT sweep (Larsson, "Look-Ahead Screening
     /// Rules for the Lasso", 2021): one correlation sweep at the
     /// current iterate serves screening tests at several upcoming λ
@@ -478,6 +528,41 @@ impl RuntimeEngine {
             .kkt_sweep_into(loss, design, y, eta, lambda, c, resid)
     }
 
+    /// Row-masked fused KKT sweep over a fold's kept rows; `None` when
+    /// the backend has no masked kernel (see
+    /// [`Backend::kkt_sweep_masked`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn kkt_sweep_masked(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        rows: &[usize],
+        y: &[f64],
+        eta: &[f64],
+        lambda: f64,
+    ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        self.backend
+            .kkt_sweep_masked(loss, design, rows, y, eta, lambda)
+    }
+
+    /// Buffer-reusing row-masked KKT sweep (see
+    /// [`Backend::kkt_sweep_masked_into`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn kkt_sweep_masked_into(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        rows: &[usize],
+        y: &[f64],
+        eta: &[f64],
+        lambda: f64,
+        c: &mut Vec<f64>,
+        resid: &mut Vec<f64>,
+    ) -> Result<bool> {
+        self.backend
+            .kkt_sweep_masked_into(loss, design, rows, y, eta, lambda, c, resid)
+    }
+
     /// Batched look-ahead KKT sweep; `None` when the backend has no
     /// batched kernel for (loss, shape).
     pub fn kkt_sweep_batch(
@@ -542,9 +627,14 @@ impl RuntimeEngine {
 
 /// An engine bound to one registered design: what the path driver uses
 /// for its full KKT sweeps ([`crate::path::PathFitter::fit_with_engine`]).
+///
+/// The registered design sits behind an `Arc` so fold-restricted
+/// clones ([`Self::fold`]) share one upload: a 10-fold CV registers
+/// the design once and every fold sweep runs against the same device
+/// panels through the masked kernel.
 pub struct EngineSweep<'a> {
     pub engine: &'a RuntimeEngine,
-    pub design: RegisteredDesign,
+    pub design: std::sync::Arc<RegisteredDesign>,
     pub loss: Loss,
     /// Borderline band re-verified in f64 (fraction of λ). Irrelevant
     /// for exact-f64 backends, load-bearing for f32 artifact backends.
@@ -553,6 +643,11 @@ pub struct EngineSweep<'a> {
     /// checks of the next B λ steps (Larsson 2021). 0 disables
     /// batching (per-λ sequential sweeps only).
     pub lookahead: usize,
+    /// Row restriction for fold sweeps: global row indices into the
+    /// registered design, `None` = all rows. When set, full sweeps
+    /// route through [`Backend::kkt_sweep_masked_into`] and look-ahead
+    /// batching is off (see [`Self::fold`]).
+    pub rows: Option<Vec<usize>>,
 }
 
 impl<'a> EngineSweep<'a> {
@@ -570,10 +665,11 @@ impl<'a> EngineSweep<'a> {
         let reg = engine.register_design(design.data(), n, p)?;
         Ok(Some(Self {
             engine,
-            design: reg,
+            design: std::sync::Arc::new(reg),
             loss,
             recheck_band: 1e-3,
             lookahead: 4,
+            rows: None,
         }))
     }
 
@@ -592,10 +688,11 @@ impl<'a> EngineSweep<'a> {
         let reg = engine.register_source(source)?;
         Ok(Some(Self {
             engine,
-            design: reg,
+            design: std::sync::Arc::new(reg),
             loss,
             recheck_band: 1e-3,
             lookahead: 4,
+            rows: None,
         }))
     }
 
@@ -603,6 +700,38 @@ impl<'a> EngineSweep<'a> {
     pub fn with_lookahead(mut self, lookahead: usize) -> Self {
         self.lookahead = lookahead;
         self
+    }
+
+    /// Restrict this binding to a row subset (a CV training fold).
+    /// Shares the registered design (`Arc` clone — no re-upload); full
+    /// sweeps route through the backend's masked kernel over `rows`.
+    /// Look-ahead is disabled: its Gap-Safe masks alter screened sets
+    /// and hence coordinate-descent visit order, which would break the
+    /// CV determinism contract (engine-routed fold fits bit-identical
+    /// to host-path fold fits).
+    pub fn fold(&self, rows: Vec<usize>) -> EngineSweep<'a> {
+        EngineSweep {
+            engine: self.engine,
+            design: std::sync::Arc::clone(&self.design),
+            loss: self.loss,
+            recheck_band: self.recheck_band,
+            lookahead: 0,
+            rows: Some(rows),
+        }
+    }
+
+    /// A clone of this binding with look-ahead disabled. The CV full
+    /// refit uses this so the engine-routed and host-path refits see
+    /// identical screened sets (same rationale as [`Self::fold`]).
+    pub fn without_lookahead(&self) -> EngineSweep<'a> {
+        EngineSweep {
+            engine: self.engine,
+            design: std::sync::Arc::clone(&self.design),
+            loss: self.loss,
+            recheck_band: self.recheck_band,
+            lookahead: 0,
+            rows: self.rows.clone(),
+        }
     }
 
     /// Full correlation sweep through the backend, with native f64
@@ -637,15 +766,30 @@ impl<'a> EngineSweep<'a> {
         c: &mut [f64],
         scratch: &mut SweepScratch,
     ) -> bool {
-        match self.engine.kkt_sweep_into(
-            self.loss,
-            &self.design,
-            y,
-            eta,
-            lambda,
-            &mut scratch.c,
-            &mut scratch.resid,
-        ) {
+        let served = match &self.rows {
+            // Fold binding: y/eta/resid are compact (fold-length) and
+            // the backend gathers kept rows itself.
+            Some(rows) => self.engine.kkt_sweep_masked_into(
+                self.loss,
+                &self.design,
+                rows,
+                y,
+                eta,
+                lambda,
+                &mut scratch.c,
+                &mut scratch.resid,
+            ),
+            None => self.engine.kkt_sweep_into(
+                self.loss,
+                &self.design,
+                y,
+                eta,
+                lambda,
+                &mut scratch.c,
+                &mut scratch.resid,
+            ),
+        };
+        match served {
             Ok(true) => {
                 debug_assert_eq!(scratch.c.len(), c.len());
                 if self.engine.is_exact() {
@@ -725,7 +869,10 @@ impl<'a> EngineSweep<'a> {
         masks: &mut Vec<Vec<bool>>,
         scratch: &mut SweepScratch,
     ) -> bool {
-        if self.lookahead == 0 || lambdas.is_empty() {
+        // Fold bindings never batch: `fold()` zeroes `lookahead`, and
+        // the `rows` guard keeps a hand-built masked binding from
+        // reaching the unmasked batch kernel.
+        if self.lookahead == 0 || self.rows.is_some() || lambdas.is_empty() {
             return false;
         }
         match self.engine.kkt_sweep_batch_into(
@@ -837,6 +984,51 @@ mod tests {
         for j in 0..15 {
             assert!((c[j] - dense.col_dot(j, &y)).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn fold_binding_masked_sweep_matches_fold_view_bitwise() {
+        let (dense, y) = dense_problem(31, 9);
+        let e = RuntimeEngine::native_threaded(2);
+        let sweep = EngineSweep::new(&e, &dense, Loss::Gaussian)
+            .unwrap()
+            .expect("native always binds");
+        let rows: Vec<usize> = (0..31).filter(|i| i % 3 != 0).collect();
+        let fold = sweep.fold(rows.clone());
+        assert_eq!(fold.lookahead, 0, "fold bindings must not batch");
+        let view = crate::cv::FoldView::from_rows(&dense, rows.clone());
+        let yf: Vec<f64> = rows.iter().map(|&i| y[i]).collect();
+        let eta = vec![0.0; rows.len()];
+        let resid = yf.clone(); // Gaussian pseudo-residual at η = 0
+        let mut c = vec![0.0; 9];
+        assert!(fold.full_sweep(&view, &yf, &eta, &resid, 0.5, &mut c));
+        for j in 0..9 {
+            assert_eq!(
+                c[j].to_bits(),
+                view.col_dot(j, &resid).to_bits(),
+                "masked engine sweep differs from host fold view at col {j}"
+            );
+        }
+    }
+
+    #[test]
+    fn fold_binding_never_serves_look_ahead() {
+        let (dense, y) = dense_problem(20, 6);
+        let e = RuntimeEngine::native();
+        let sweep = EngineSweep::new(&e, &dense, Loss::Gaussian)
+            .unwrap()
+            .expect("native always binds");
+        let rows: Vec<usize> = (0..15).collect();
+        let mut fold = sweep.fold(rows.clone());
+        fold.lookahead = 4; // even forced back on, `rows` blocks batching
+        let view = crate::cv::FoldView::from_rows(&dense, rows.clone());
+        let yf: Vec<f64> = rows.iter().map(|&i| y[i]).collect();
+        let eta = vec![0.0; rows.len()];
+        let resid = yf.clone();
+        let mut c = vec![0.0; 6];
+        assert!(fold
+            .look_ahead(&view, &yf, &eta, &resid, 0.0, &[0.5, 0.4], &mut c)
+            .is_none());
     }
 
     #[test]

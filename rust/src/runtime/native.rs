@@ -50,9 +50,9 @@ impl Default for NativeBackend {
 }
 
 /// The op kinds the native backend serves: xt_r, the fused KKT sweep
-/// (Gaussian + logistic), the batched look-ahead sweep, and the
-/// weighted Gram panel.
-const NATIVE_OPS: usize = 4;
+/// (Gaussian + logistic), the row-masked fold sweep, the batched
+/// look-ahead sweep, and the weighted Gram panel.
+const NATIVE_OPS: usize = 5;
 
 impl NativeBackend {
     /// `threads == 0` selects the machine's available parallelism.
@@ -150,6 +150,42 @@ impl NativeBackend {
         });
     }
 
+    /// Row-masked column sweep: `out[j] = Σ_i col_j[rows[i]] · r[i]`,
+    /// the cross-validation fold kernel. Each block of `PANEL_BLOCK`
+    /// columns has its kept rows gathered into a compact per-worker
+    /// panel (allocated once per worker, reused across that worker's
+    /// column range) and reduced with `blas::dot_panel` — exactly the
+    /// accumulation sequence a materialized row-subset design would
+    /// see, so results are bitwise identical to the host-side
+    /// `cv::FoldView` kernels at any thread count.
+    fn par_masked_sweep(&self, data: &[f64], n: usize, rows: &[usize], r: &[f64], out: &mut [f64]) {
+        let m = rows.len();
+        let t = self.pool_size(out.len(), m);
+        if t <= 1 {
+            let mut panel = vec![0.0; blas::PANEL_BLOCK * m];
+            masked_sweep_chunk(data, n, 0, rows, r, out, &mut panel);
+            return;
+        }
+        let chunk = div_ceil(out.len(), t);
+        // One gather panel per worker, allocated outside the spawn loop
+        // (the no-hot-alloc policy) and outside the workers' own column
+        // loops.
+        let workers = div_ceil(out.len(), chunk);
+        let mut panels: Vec<Vec<f64>> = (0..workers)
+            .map(|_| vec![0.0; blas::PANEL_BLOCK * m])
+            .collect();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for ((ci, co), panel) in out.chunks_mut(chunk).enumerate().zip(panels.iter_mut()) {
+                let lo = ci * chunk;
+                handles.push(s.spawn(move || masked_sweep_chunk(data, n, lo, rows, r, co, panel)));
+            }
+            for h in handles {
+                h.join().expect("masked sweep worker panicked");
+            }
+        });
+    }
+
     fn check_vectors(design: &RegisteredDesign, y: &[f64], eta: &[f64]) -> Result<()> {
         if y.len() != design.n || eta.len() != design.n {
             return Err(crate::err!(
@@ -160,6 +196,37 @@ impl NativeBackend {
             ));
         }
         Ok(())
+    }
+}
+
+/// Serial masked sweep over columns `lo..lo + out.len()` of the
+/// col-major `data`: gather each `PANEL_BLOCK`-wide block of columns'
+/// kept rows into `panel` (caller-allocated, reused across blocks),
+/// then reduce against `r` with `blas::dot_panel`. The gather copies
+/// stored entries verbatim, so each output equals the scalar
+/// `blas::dot` of the compacted column bitwise.
+fn masked_sweep_chunk(
+    data: &[f64],
+    n: usize,
+    lo: usize,
+    rows: &[usize],
+    r: &[f64],
+    out: &mut [f64],
+    panel: &mut [f64],
+) {
+    let m = rows.len();
+    let mut j = 0;
+    while j < out.len() {
+        let b = blas::PANEL_BLOCK.min(out.len() - j);
+        for k in 0..b {
+            let col = &data[(lo + j + k) * n..(lo + j + k + 1) * n];
+            let dst = &mut panel[k * m..(k + 1) * m];
+            for (d, &i) in dst.iter_mut().zip(rows) {
+                *d = col[i];
+            }
+        }
+        blas::dot_panel(&panel[..b * m], m, r, &mut out[j..j + b]);
+        j += b;
     }
 }
 
@@ -264,6 +331,58 @@ impl Backend for NativeBackend {
         loss.pseudo_residual_into(y, eta, resid);
         c.resize(design.p, 0.0);
         self.par_sweep(data, design.n, resid, c);
+        Ok(true)
+    }
+
+    fn kkt_sweep_masked(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        rows: &[usize],
+        y: &[f64],
+        eta: &[f64],
+        lambda: f64,
+    ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        let (mut c, mut resid) = (Vec::new(), Vec::new());
+        Ok(self
+            .kkt_sweep_masked_into(loss, design, rows, y, eta, lambda, &mut c, &mut resid)?
+            .then_some((c, resid)))
+    }
+
+    fn kkt_sweep_masked_into(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        rows: &[usize],
+        y: &[f64],
+        eta: &[f64],
+        _lambda: f64,
+        c: &mut Vec<f64>,
+        resid: &mut Vec<f64>,
+    ) -> Result<bool> {
+        if matches!(loss, Loss::Poisson) {
+            return Ok(false);
+        }
+        let data = Self::design_data(design)?;
+        let m = rows.len();
+        if y.len() != m || eta.len() != m {
+            return Err(crate::err!(
+                "masked sweep: y/eta have lengths {}/{}, expected the fold size {}",
+                y.len(),
+                eta.len(),
+                m
+            ));
+        }
+        if let Some(&bad) = rows.iter().find(|&&i| i >= design.n) {
+            return Err(crate::err!(
+                "masked sweep: row index {bad} out of bounds for n = {}",
+                design.n
+            ));
+        }
+        resid.resize(m, 0.0);
+        loss.pseudo_residual_into(y, eta, resid);
+        c.resize(design.p, 0.0);
+        self.par_masked_sweep(data, design.n, rows, resid, c);
         Ok(true)
     }
 
@@ -480,6 +599,83 @@ mod tests {
             .kkt_sweep_batch(Loss::Gaussian, &reg, &y, &eta, &[], 0.0)
             .unwrap()
             .is_none());
+    }
+
+    #[test]
+    fn masked_sweep_matches_materialized_subset_bitwise() {
+        let (n, p) = (37, 23);
+        let mut g = Gen::new(17);
+        let m = g.gaussian_matrix(n, p);
+        let y = g.gaussian_vec(n);
+        let eta_full = g.gaussian_vec(n);
+        let rows: Vec<usize> = (0..n).filter(|i| i % 4 != 2).collect();
+        let yf: Vec<f64> = rows.iter().map(|&i| y[i]).collect();
+        let ef: Vec<f64> = rows.iter().map(|&i| eta_full[i]).collect();
+        // Materialized oracle: copy the kept rows out and run the
+        // ordinary (unmasked) sweep on the subset design.
+        let mut sub = vec![0.0; rows.len() * p];
+        for j in 0..p {
+            let col = m.col(j);
+            for (r, &i) in rows.iter().enumerate() {
+                sub[j * rows.len() + r] = col[i];
+            }
+        }
+        let b = NativeBackend::default();
+        let reg = b.register_design(m.data(), n, p).unwrap();
+        let reg_sub = b.register_design(&sub, rows.len(), p).unwrap();
+        for loss in [Loss::Gaussian, Loss::Logistic] {
+            let (cm, rm) = b
+                .kkt_sweep_masked(loss, &reg, &rows, &yf, &ef, 0.5)
+                .unwrap()
+                .expect("native masked kernel");
+            let (cs, rs) = b.kkt_sweep(loss, &reg_sub, &yf, &ef, 0.5).unwrap().unwrap();
+            assert_eq!(rm, rs, "masked residual must equal the subset residual");
+            for j in 0..p {
+                assert_eq!(
+                    cm[j].to_bits(),
+                    cs[j].to_bits(),
+                    "masked sweep differs from materialized subset at col {j} ({loss:?})"
+                );
+            }
+        }
+        // Poisson: unavailable, not an error.
+        assert!(b
+            .kkt_sweep_masked(Loss::Poisson, &reg, &rows, &yf, &ef, 0.5)
+            .unwrap()
+            .is_none());
+        // Shape and bounds violations are errors.
+        assert!(b
+            .kkt_sweep_masked(Loss::Gaussian, &reg, &rows, &y, &ef, 0.5)
+            .is_err());
+        assert!(b
+            .kkt_sweep_masked(Loss::Gaussian, &reg, &[n], &yf[..1], &ef[..1], 0.5)
+            .is_err());
+    }
+
+    #[test]
+    fn threaded_masked_sweep_is_bit_identical() {
+        // Shape large enough to clear the flop cutoff so threads
+        // actually spawn, with a ragged tail (p % PANEL_BLOCK != 0).
+        let (n, p) = (96, 8_191);
+        let mut g = Gen::new(23);
+        let m = g.gaussian_matrix(n, p);
+        let y = g.gaussian_vec(n);
+        let rows: Vec<usize> = (0..n).filter(|i| i % 3 != 1).collect();
+        let yf: Vec<f64> = rows.iter().map(|&i| y[i]).collect();
+        let ef = vec![0.0; rows.len()];
+        let serial = NativeBackend::default();
+        let par = NativeBackend::new(4);
+        let rs = serial.register_design(m.data(), n, p).unwrap();
+        let rp = par.register_design(m.data(), n, p).unwrap();
+        let (cs, _) = serial
+            .kkt_sweep_masked(Loss::Gaussian, &rs, &rows, &yf, &ef, 0.5)
+            .unwrap()
+            .unwrap();
+        let (cp, _) = par
+            .kkt_sweep_masked(Loss::Gaussian, &rp, &rows, &yf, &ef, 0.5)
+            .unwrap()
+            .unwrap();
+        assert_eq!(cs, cp, "threaded masked sweep must be bit-identical");
     }
 
     #[test]

@@ -686,6 +686,31 @@ impl Backend for ShardedBackend {
         }))
     }
 
+    fn kkt_sweep_masked(
+        &self,
+        loss: Loss,
+        design: &RegisteredDesign,
+        rows: &[usize],
+        y: &[f64],
+        eta: &[f64],
+        lambda: f64,
+    ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        // Shards split *columns*; the row mask applies uniformly to
+        // every shard panel (row indices are global in each panel), so
+        // the fold sweep fans out exactly like the unmasked one.
+        let rep = Self::repr(design)?;
+        let parts = self.shard_map(rep, |i, reg| {
+            self.engines[i].kkt_sweep_masked(loss, reg, rows, y, eta, lambda)
+        })?;
+        Ok(parts.map(|ps| {
+            // Every shard computes the same fold-length pseudo-residual
+            // from the compact y/eta; take shard 0's and concatenate
+            // the correlation slices in shard (= column) order.
+            let resid = ps[0].1.clone();
+            (ps.into_iter().flat_map(|(c, _)| c).collect(), resid)
+        }))
+    }
+
     fn kkt_sweep_batch(
         &self,
         loss: Loss,
@@ -977,6 +1002,42 @@ mod tests {
             .is_none());
         assert!(b
             .kkt_sweep_batch(Loss::Gaussian, &reg, &y, &eta, &[], 0.0)
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn sharded_masked_sweep_is_bit_identical() {
+        // The fold mask applies row-wise while shards split columns:
+        // every shard count must reproduce the unsharded masked sweep
+        // bit-for-bit (ragged p exercises uneven shard widths).
+        let (n, p) = (30, 53);
+        let (dense, y) = dense_problem(n, p, 13);
+        let rows: Vec<usize> = (0..n).filter(|i| i % 5 != 3).collect();
+        let yf: Vec<f64> = rows.iter().map(|&i| y[i]).collect();
+        let ef = vec![0.0; rows.len()];
+        let reference = NativeBackend::default();
+        let reg_ref = reference.register_design(dense.data(), n, p).unwrap();
+        for loss in [Loss::Gaussian, Loss::Logistic] {
+            let (c_ref, r_ref) = reference
+                .kkt_sweep_masked(loss, &reg_ref, &rows, &yf, &ef, 0.5)
+                .unwrap()
+                .unwrap();
+            for shards in [1, 2, 4, 7] {
+                let b = ShardedBackend::native(shards, 1);
+                let reg = b.register_design(dense.data(), n, p).unwrap();
+                let (c, r) = b
+                    .kkt_sweep_masked(loss, &reg, &rows, &yf, &ef, 0.5)
+                    .unwrap()
+                    .unwrap();
+                assert_eq!(c, c_ref, "{loss:?} {shards} shards c");
+                assert_eq!(r, r_ref, "{loss:?} {shards} shards resid");
+            }
+        }
+        let b = ShardedBackend::native(2, 1);
+        let reg = b.register_design(dense.data(), n, p).unwrap();
+        assert!(b
+            .kkt_sweep_masked(Loss::Poisson, &reg, &rows, &yf, &ef, 0.5)
             .unwrap()
             .is_none());
     }

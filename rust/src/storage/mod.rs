@@ -25,6 +25,12 @@
 //! plus two in-flight panels. The same seam is where a future PJRT
 //! multi-device fan-out will load from.
 //!
+//! Cross-validation composes with this layer for free: a
+//! [`crate::cv::FoldView`] (and the engine's row-masked fold sweeps)
+//! restricts *rows* of an already-registered design, so a k-fold CV
+//! over a `ColumnSource`-backed design streams the file exactly once —
+//! no per-fold re-registration, no per-fold design copies.
+//!
 //! Everything here is f64-exact (enforced by the xtask linter's no-f32
 //! rule) and clock-free (the kernel clock ban covers `storage/`):
 //! timing of reads belongs to the pipeline that calls us.
